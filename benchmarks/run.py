@@ -1,0 +1,225 @@
+"""Benchmark harness: one benchmark per paper claim.
+
+The paper (MCPrioQ) is evaluated on complexity/throughput, not accuracy; it
+has no numbered tables, so each benchmark validates one stated claim:
+
+  B1 update_throughput   O(1) amortised updates (§II.A) — edges/sec flat in
+                         graph size
+  B2 query_cdf           O(CDF^-1(t)) inference (§II.B) — items touched vs
+                         threshold, per Zipf exponent
+  B3 sortedness          approximate order under continuous updates (§II.2)
+  B4 decay               §II.C decay cost + eviction behaviour
+  B5 hash_vs_scan        dst hash-table vs slab scan (§II.2 "may not be that
+                         obvious")
+  B6 drafter             serving feature: n-gram drafter acceptance rate
+  B7 sharded_routing     all_to_all node-sharded scaling (8 fake devices)
+
+Prints ``name,us_per_call,derived`` CSV lines (harness contract).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mcprioq as mc
+from repro.core import speculative as spec
+from repro.data.synthetic import MarkovGraphSampler
+
+
+def _time(fn, *args, n=10, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def bench_update_throughput():
+    """B1: edges/sec for batched updates; flat across graph sizes = O(1)."""
+    batch = 1024
+    rows = []
+    for num_nodes in (256, 1024, 4096):
+        cfg = mc.MCConfig(num_rows=num_nodes, capacity=64, sort_passes=1)
+        graph = MarkovGraphSampler(num_nodes=num_nodes, out_degree=32, seed=0)
+        state = mc.init(cfg)
+        # warm the graph so updates take the fast path (paper's normal case)
+        for _ in range(4):
+            s, d = graph.sample_transitions(batch)
+            state = mc.update_batch(state, jnp.asarray(s), jnp.asarray(d),
+                                    cfg=cfg)
+        s, d = graph.sample_transitions(batch)
+        s, d = jnp.asarray(s), jnp.asarray(d)
+        us = _time(lambda: mc.update_batch(state, s, d, cfg=cfg), n=5)
+        eps = batch / (us / 1e6)
+        rows.append((num_nodes, us, eps))
+        print(f"B1_update_throughput[nodes={num_nodes}],{us:.1f},"
+              f"{eps:.0f} edges/s")
+    # O(1) check: us/edge varies < 3x across 16x graph growth
+    per_edge = [r[1] / batch for r in rows]
+    print(f"B1_o1_ratio,{max(per_edge)/min(per_edge):.2f},"
+          f"us/edge ratio across 16x graph sizes")
+
+
+def bench_query_cdf():
+    """B2: items touched (CDF^-1) and latency vs threshold and Zipf s."""
+    cfg = mc.MCConfig(num_rows=2048, capacity=64, sort_passes=2)
+    for zipf_s in (1.2, 1.5, 2.0):
+        graph = MarkovGraphSampler(num_nodes=2048, out_degree=48,
+                                   zipf_s=zipf_s, seed=1)
+        state = mc.init(cfg)
+        for _ in range(30):
+            s, d = graph.sample_transitions(2048)
+            state = mc.update_batch(state, jnp.asarray(s), jnp.asarray(d),
+                                    cfg=cfg)
+        srcs = jnp.arange(512, dtype=jnp.int32)
+        for t in (0.5, 0.9, 0.99):
+            us = _time(lambda: mc.query_threshold(
+                state, srcs, t, cfg=cfg, max_items=48), n=5)
+            _, _, n_needed = mc.query_threshold(state, srcs, t, cfg=cfg,
+                                                max_items=48)
+            mean_items = float(jnp.mean(n_needed.astype(jnp.float32)))
+            print(f"B2_query_cdf[s={zipf_s};t={t}],{us/512:.2f},"
+                  f"{mean_items:.2f} items touched (CDF^-1)")
+
+
+def bench_sortedness():
+    """B3: order quality after each update batch, by sort passes."""
+    from repro.core import slab as sl
+    for passes in (0, 1, 2, 4):
+        cfg = mc.MCConfig(num_rows=512, capacity=64, sort_passes=passes)
+        graph = MarkovGraphSampler(num_nodes=512, out_degree=48, seed=2)
+        state = mc.init(cfg)
+        fracs = []
+        for _ in range(20):
+            s, d = graph.sample_transitions(1024)
+            state = mc.update_batch(state, jnp.asarray(s), jnp.asarray(d),
+                                    cfg=cfg)
+            fracs.append(float(sl.sorted_fraction(state.slabs.cnt,
+                                                  state.slabs.order)))
+        print(f"B3_sortedness[passes={passes}],0,"
+              f"{np.mean(fracs[5:]):.4f} sorted fraction steady state")
+
+
+def bench_decay():
+    """B4: decay latency and eviction count on a loaded graph."""
+    cfg = mc.MCConfig(num_rows=4096, capacity=64, sort_passes=1)
+    graph = MarkovGraphSampler(num_nodes=4096, out_degree=32, seed=3)
+    state = mc.init(cfg)
+    for _ in range(20):
+        s, d = graph.sample_transitions(4096)
+        state = mc.update_batch(state, jnp.asarray(s), jnp.asarray(d),
+                                cfg=cfg)
+    live_before = int(jnp.sum(state.slabs.cnt > 0))
+    us = _time(lambda: mc.decay(state, cfg=cfg), n=5)
+    state2 = mc.decay(state, cfg=cfg)
+    live_after = int(jnp.sum(state2.slabs.cnt > 0))
+    print(f"B4_decay,{us:.1f},evicted {live_before - live_after} of "
+          f"{live_before} edges")
+
+
+def bench_hash_vs_scan():
+    """B5: dst lookup via per-row hash table vs C-lane slab scan."""
+    for use_hash, label in ((False, "scan"), (True, "hash")):
+        cfg = mc.MCConfig(num_rows=1024, capacity=64, sort_passes=1,
+                          use_dst_hash=use_hash)
+        graph = MarkovGraphSampler(num_nodes=1024, out_degree=48, seed=4)
+        state = mc.init(cfg)
+        for _ in range(4):
+            s, d = graph.sample_transitions(1024)
+            state = mc.update_batch(state, jnp.asarray(s), jnp.asarray(d),
+                                    cfg=cfg)
+        s, d = graph.sample_transitions(1024)
+        s, d = jnp.asarray(s), jnp.asarray(d)
+        us = _time(lambda: mc.update_batch(state, s, d, cfg=cfg), n=5)
+        print(f"B5_dst_lookup[{label}],{us:.1f},update batch 1024")
+
+
+def bench_drafter():
+    """B6: n-gram drafter acceptance on a structured stream."""
+    ncfg = spec.NGramConfig(order=2, mc=mc.MCConfig(num_rows=4096,
+                                                    capacity=32,
+                                                    sort_passes=1))
+    st = spec.init(ncfg)
+    rng = np.random.default_rng(5)
+    # 80% deterministic successor process
+    succ = rng.integers(0, 512, (512,)).astype(np.int32)
+    toks = np.empty((8, 512), np.int32)
+    toks[:, 0] = rng.integers(0, 512, 8)
+    for t in range(1, 512):
+        follow = succ[toks[:, t - 1]]
+        noise = rng.integers(0, 512, 8)
+        toks[:, t] = np.where(rng.random(8) < 0.8, follow, noise)
+    t0 = time.perf_counter()
+    st = spec.observe(st, jnp.asarray(toks), cfg=ncfg)
+    jax.block_until_ready(st.chain.slabs.cnt)
+    us = (time.perf_counter() - t0) * 1e6
+    # drafts where the chain knows the successor
+    ctx = jnp.asarray(toks[:, 100:102])
+    draft, ok = spec.draft(st, ctx, cfg=ncfg, k=1)
+    okm = np.asarray(ok)[:, 0]
+    want = succ[np.asarray(ctx)[:, -1]]
+    acc = float(np.mean((np.asarray(draft)[:, 0] == want)[okm])) if okm.any() else 0.0
+    print(f"B6_drafter,{us:.0f},top-1 draft matches true successor "
+          f"{acc:.0%} of ok-drafts")
+
+
+def bench_sharded_routing():
+    """B7: node-sharded update/query on 8 fake host devices (subprocess)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    script = textwrap.dedent("""
+        import os, time
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import mcprioq as mc, sharded as sh
+        mesh = jax.make_mesh((8,), ("shard",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        scfg = sh.ShardedConfig(base=mc.MCConfig(num_rows=2048, capacity=32,
+                                                 sort_passes=1),
+                                num_shards=8, bucket_factor=2.0)
+        state = sh.init_sharded(scfg, mesh)
+        upd = sh.make_update_fn(scfg, mesh)
+        rng = np.random.default_rng(0)
+        src = jnp.asarray(rng.integers(0, 8192, 4096).astype(np.int32))
+        dst = jnp.asarray(rng.integers(0, 512, 4096).astype(np.int32))
+        w = jnp.ones((4096,), jnp.int32)
+        state = upd(state, src, dst, w)  # compile
+        t0 = time.perf_counter()
+        for _ in range(5):
+            state = upd(state, src, dst, w)
+        jax.block_until_ready(state.slabs.cnt)
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        print(f"B7_sharded_routing,{us:.0f},4096 edges over 8 shards "
+              f"(dropped={int(jnp.sum(state.dropped_probes))})")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    print(out.stdout.strip() or f"B7_sharded_routing,FAILED,{out.stderr[-200:]}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_update_throughput()
+    bench_query_cdf()
+    bench_sortedness()
+    bench_decay()
+    bench_hash_vs_scan()
+    bench_drafter()
+    bench_sharded_routing()
+
+
+if __name__ == "__main__":
+    main()

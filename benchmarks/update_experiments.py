@@ -1,0 +1,58 @@
+"""Inject generated dry-run/roofline/compare tables into EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m benchmarks.update_experiments
+"""
+
+from __future__ import annotations
+
+import contextlib
+import io
+import os
+import re
+
+from benchmarks import roofline_table as rt
+
+MARKERS = {
+    "<!-- DRYRUN-TABLES -->": ("dryrun",),
+    "<!-- ROOFLINE-TABLE -->": ("roofline",),
+    "<!-- PERF-FINAL -->": ("compare",),
+}
+
+
+def render(kind: str) -> str:
+    single = rt.load("results/dryrun", "singlepod")
+    multi = rt.load("results/dryrun", "multipod")
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        if kind == "dryrun":
+            print("### Dry-run, single-pod (16x16 = 256 chips)\n")
+            rt.dryrun_table(single)
+            print("\n### Dry-run, multi-pod (2x16x16 = 512 chips)\n")
+            rt.dryrun_table(multi)
+        elif kind == "roofline":
+            rt.roofline_table(single)
+        elif kind == "compare":
+            opt_single = rt.load("results/dryrun_opt", "singlepod")
+            print("### Baseline vs optimized, single-pod "
+                  "(dominant roofline term per step)\n")
+            rt.compare_table(single, opt_single)
+            print("\n### Roofline, optimized configuration (single-pod)\n")
+            rt.roofline_table(opt_single)
+    return buf.getvalue()
+
+
+def main():
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    for marker, (kind,) in MARKERS.items():
+        block = (f"{marker}\n\n" + render(kind)).rstrip() + "\n"
+        # replace marker and any previously generated block up to next header
+        pat = re.escape(marker) + r"(?:.*?)(?=\n## |\Z)"
+        text = re.sub(pat, block + "\n", text, flags=re.S)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

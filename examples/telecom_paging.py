@@ -1,0 +1,64 @@
+"""Telecom paging (the paper's §I motivating system, ref [1]).
+
+A cellular network is a directed graph: base stations are nodes, user
+movement are edges.  When a user's location is unknown, the network pages a
+*set* of cells such that P(user found) >= threshold — exactly MCPrioQ's
+cumulative-probability query.  This example simulates user mobility, learns
+the transition graph online, and measures paging success vs. cells paged.
+
+    PYTHONPATH=src python examples/telecom_paging.py
+"""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import mcprioq as mc
+from repro.data.synthetic import MarkovGraphSampler
+
+
+def main():
+    n_cells = 400
+    mobility = MarkovGraphSampler(num_nodes=n_cells, out_degree=12,
+                                  zipf_s=1.6, seed=42)
+    cfg = mc.MCConfig(num_rows=512, capacity=16, sort_passes=1)
+    state = mc.init(cfg)
+
+    # --- phase 1: learn handover transitions online -----------------------
+    for _ in range(80):
+        src, dst = mobility.sample_transitions(1024)
+        state = mc.update_batch(state, jnp.asarray(src), jnp.asarray(dst),
+                                cfg=cfg)
+
+    # --- phase 2: page unknown-location users -----------------------------
+    rng = np.random.default_rng(7)
+    for threshold in (0.5, 0.8, 0.95):
+        last_cell, true_next = mobility.sample_transitions(2000)
+        dsts, probs, n_needed = mc.query_threshold(
+            state, jnp.asarray(last_cell), threshold, cfg=cfg, max_items=16)
+        dsts = np.asarray(dsts)
+        found = (dsts == true_next[:, None]).any(axis=1)
+        print(f"t={threshold:4.2f}: paged {float(np.mean(n_needed)):5.2f} "
+              f"cells on average -> user found {found.mean():6.1%} "
+              f"(target {threshold:.0%})")
+
+    # --- phase 3: topology change (new cell tower) + decay ----------------
+    # decay lets the chain forget the old neighbour distribution (§II.C)
+    state = mc.decay(state, cfg=cfg)
+    mobility2 = MarkovGraphSampler(num_nodes=n_cells, out_degree=12,
+                                   zipf_s=1.6, seed=43)  # re-planned network
+    for _ in range(80):
+        src, dst = mobility2.sample_transitions(1024)
+        state = mc.update_batch(state, jnp.asarray(src), jnp.asarray(dst),
+                                cfg=cfg)
+    last_cell, true_next = mobility2.sample_transitions(2000)
+    dsts, _, n_needed = mc.query_threshold(
+        state, jnp.asarray(last_cell), 0.8, cfg=cfg, max_items=16)
+    found = (np.asarray(dsts) == true_next[:, None]).any(axis=1)
+    print(f"\nafter topology change + decay: paged "
+          f"{float(np.mean(n_needed)):.2f} cells, found {found.mean():.1%} "
+          f"(graph re-learned online, no retraining)")
+
+
+if __name__ == "__main__":
+    main()

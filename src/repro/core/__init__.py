@@ -1,0 +1,19 @@
+"""MCPrioQ core: the paper's contribution as a composable JAX library.
+
+Public API:
+  * :mod:`repro.core.mcprioq` — single-shard structure (init/update/query/decay)
+  * :mod:`repro.core.sharded` — mesh-sharded variant (all_to_all routing)
+  * :mod:`repro.core.epoch` — RCU-analogue snapshot store for serving
+  * :mod:`repro.core.speculative` — online n-gram drafter for LM serving
+"""
+
+from repro.core.mcprioq import (  # noqa: F401
+    MCConfig,
+    MCState,
+    decay,
+    init,
+    maybe_decay,
+    query_threshold,
+    query_topk,
+    update_batch,
+)

@@ -1,0 +1,87 @@
+"""Epoch snapshots: the RCU grace-period analogue (DESIGN.md §2).
+
+In the paper, readers run inside RCU read-side critical sections; writers
+mutate concurrently and reclamation waits for a grace period.  In an SPMD
+functional runtime there is no shared mutable heap: a *published snapshot* (an
+immutable pytree) plays the role of the RCU-protected structure, and the
+"grace period" is the moment no consumer can reference version ``v-1`` any
+more — trivially the publish of ``v`` for program-ordered steps, and a
+versioned buffer hand-off across hosts.
+
+``EpochStore`` is the host-side coordinator: serving threads ``acquire()`` a
+snapshot (read-side critical section enter), while the learner thread
+``publish()``-es new versions.  Python reference assignment is atomic under
+the GIL, so readers never observe a torn snapshot — the lock-free property.
+``retired_versions`` mirrors RCU's deferred reclamation: a version is retired
+once its reader count drops to zero AND a newer version exists; on device this
+lets the buffer be donated.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, NamedTuple, Optional
+
+
+class Snapshot(NamedTuple):
+    version: int
+    state: Any  # immutable pytree (e.g. MCState)
+
+
+class EpochStore:
+    """Single-writer / many-reader snapshot store with reader accounting."""
+
+    def __init__(self, state: Any):
+        self._snap = Snapshot(0, state)
+        self._readers: dict[int, int] = {}
+        self._lock = threading.Lock()  # protects accounting only, never reads
+        self._on_retire: Optional[Callable[[Snapshot], None]] = None
+        self.retired_versions: list[int] = []
+
+    # -- read side -------------------------------------------------------
+    def acquire(self) -> Snapshot:
+        """Enter a read-side critical section: pin the current snapshot."""
+        snap = self._snap  # atomic ref read (GIL)
+        with self._lock:
+            self._readers[snap.version] = self._readers.get(snap.version, 0) + 1
+        return snap
+
+    def release(self, snap: Snapshot) -> None:
+        """Leave the read-side critical section; may trigger reclamation."""
+        with self._lock:
+            self._readers[snap.version] -= 1
+            self._maybe_retire_locked()
+
+    # -- write side ------------------------------------------------------
+    def publish(self, state: Any) -> int:
+        """Publish a new version. Readers acquired before this keep seeing the
+        old snapshot until they release — never a torn state."""
+        new = Snapshot(self._snap.version + 1, state)
+        old = self._snap
+        self._snap = new  # the single atomic "pointer swap"
+        with self._lock:
+            self._readers.setdefault(old.version, self._readers.get(old.version, 0))
+            self._maybe_retire_locked()
+        return new.version
+
+    def synchronize(self) -> None:
+        """Block until every reader of pre-current versions has released —
+        the literal ``synchronize_rcu()``. Busy-wait is fine: sections are
+        one inference step long."""
+        cur = self._snap.version
+        while True:
+            with self._lock:
+                if all(n == 0 for v, n in self._readers.items() if v < cur):
+                    return
+
+    # -- reclamation -----------------------------------------------------
+    def _maybe_retire_locked(self) -> None:
+        cur = self._snap.version
+        for v in sorted(self._readers):
+            if v < cur and self._readers[v] == 0:
+                del self._readers[v]
+                self.retired_versions.append(v)
+
+    @property
+    def version(self) -> int:
+        return self._snap.version

@@ -1,0 +1,73 @@
+"""Expert-popularity monitor: MCPrioQ tracking MoE router decisions online.
+
+The (layer -> expert) choice stream is itself a sparse Markov-ish counter
+workload — exactly the paper's structure (DESIGN.md §Arch-applicability):
+src nodes are layer ids, dst nodes are expert ids, the counter is the
+routing frequency.  The EP load-balance monitor then asks the paper's
+query: "which experts serve a cumulative ``t`` of this layer's traffic?" —
+few experts at high t == imbalance; decay (§II.C) keeps the view fresh as
+routing drifts during training.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mcprioq as mc
+
+
+@dataclasses.dataclass(frozen=True)
+class MonitorConfig:
+    num_layers: int
+    num_experts: int
+    sort_passes: int = 2
+    decay_threshold: int = 1 << 20
+
+    def mc_config(self) -> mc.MCConfig:
+        cap = 1
+        while cap < self.num_experts:
+            cap *= 2
+        return mc.MCConfig(num_rows=max(2 * self.num_layers, 8),
+                           capacity=cap, sort_passes=self.sort_passes)
+
+
+def init(cfg: MonitorConfig) -> mc.MCState:
+    return mc.init(cfg.mc_config())
+
+
+def observe(state: mc.MCState, layer: int, expert_counts: jax.Array,
+            cfg: MonitorConfig) -> mc.MCState:
+    """Fold one layer's router histogram (aux['moe_expert_counts']) in."""
+    e = cfg.num_experts
+    src = jnp.full((e,), layer, jnp.int32)
+    dst = jnp.arange(e, dtype=jnp.int32)
+    state = mc.update_batch(state, src, dst,
+                            weights=expert_counts.astype(jnp.int32),
+                            mask=expert_counts > 0, cfg=cfg.mc_config())
+    return mc.maybe_decay(state, cfg=cfg.mc_config(),
+                          total_threshold=cfg.decay_threshold)
+
+
+def hot_experts(state: mc.MCState, layer: int, t: float,
+                cfg: MonitorConfig) -> Tuple[jax.Array, jax.Array, int]:
+    """Experts carrying cumulative traffic >= t for a layer, hottest first.
+    Returns (expert_ids, load_fractions, n_needed) — n_needed close to
+    num_experts*t means balanced routing; small n_needed flags collapse."""
+    dsts, probs, n = mc.query_threshold(
+        state, jnp.asarray([layer], jnp.int32), t,
+        cfg=cfg.mc_config(), max_items=cfg.num_experts)
+    return dsts[0], probs[0], int(n[0])
+
+
+def balance_report(state: mc.MCState, cfg: MonitorConfig,
+                   t: float = 0.9) -> Dict[int, int]:
+    """n_needed per layer at threshold t (the imbalance dashboard)."""
+    out = {}
+    for layer in range(cfg.num_layers):
+        _, _, n = hot_experts(state, layer, t, cfg)
+        out[layer] = n
+    return out

@@ -1,0 +1,180 @@
+"""Functional open-addressing hash table on JAX arrays.
+
+TPU adaptation of the paper's RCU hash tables (DESIGN.md §2): there are no
+pointers or CAS on a TPU, so the table is a pair of fixed-shape arrays
+(``keys``, ``vals``) and every operation is a pure function
+``table -> table``.  Linear probing with a bounded, *static* probe count makes
+every lookup/insert a fixed-trip-count loop — the TPU-idiomatic reading of the
+paper's "wait-free" guarantee (no retries, ever).
+
+Sentinels: ``EMPTY = -1`` (never written), ``TOMB = -2`` (deleted; probe
+continues through it, insert may reuse it). Keys must be non-negative int32.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = -1
+TOMB = -2
+
+
+class HashTable(NamedTuple):
+    """Open-addressing table. ``size`` must be a power of two."""
+
+    keys: jax.Array  # int32[size]
+    vals: jax.Array  # int32[size]
+
+
+def make(size: int) -> HashTable:
+    if size & (size - 1):
+        raise ValueError(f"hash table size must be a power of two, got {size}")
+    return HashTable(
+        keys=jnp.full((size,), EMPTY, dtype=jnp.int32),
+        vals=jnp.full((size,), EMPTY, dtype=jnp.int32),
+    )
+
+
+def hash_u32(x: jax.Array) -> jax.Array:
+    """splitmix32-style avalanche; int32 in, uint32 out."""
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _slot0(key: jax.Array, size: int) -> jax.Array:
+    return (hash_u32(key) & jnp.uint32(size - 1)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("max_probes",))
+def lookup(table: HashTable, key: jax.Array, max_probes: int = 64) -> Tuple[jax.Array, jax.Array]:
+    """Return ``(val, found)``. ``val`` is EMPTY when not found.
+
+    Fixed ``max_probes`` trip count; with load factor <= 0.5 the probability of
+    a chain longer than 64 is negligible (overflow shows up as a miss and is
+    tracked by the caller's overflow counter).
+    """
+    size = table.keys.shape[0]
+    h0 = _slot0(key, size)
+
+    def body(i, carry):
+        val, done = carry
+        idx = (h0 + i) & (size - 1)
+        k = table.keys[idx]
+        hit = (k == key) & ~done
+        val = jnp.where(hit, table.vals[idx], val)
+        done = done | (k == key) | (k == EMPTY)
+        return val, done
+
+    val, _ = jax.lax.fori_loop(0, max_probes, body, (jnp.int32(EMPTY), jnp.bool_(False)))
+    return val, val != EMPTY
+
+
+def lookup_batch(table: HashTable, keys: jax.Array, max_probes: int = 64):
+    """vmapped read-only probe: ``(vals[B], found[B])``."""
+    return jax.vmap(lambda k: lookup(table, k, max_probes))(keys)
+
+
+@functools.partial(jax.jit, static_argnames=("max_probes",))
+def insert(
+    table: HashTable, key: jax.Array, val: jax.Array, max_probes: int = 64
+) -> Tuple[HashTable, jax.Array, jax.Array]:
+    """Insert or update ``key -> val``.
+
+    Returns ``(table, slot, ok)``; ``ok`` False means the probe window was
+    exhausted (caller should count it as an overflow drop).  The first TOMB
+    seen is reused only if the key is not found further down the chain, which
+    keeps the chain invariant intact.
+    """
+    size = table.keys.shape[0]
+    h0 = _slot0(key, size)
+
+    def body(i, carry):
+        slot, tomb_slot, done = carry
+        idx = (h0 + i) & (size - 1)
+        k = table.keys[idx]
+        is_hit = (k == key) & ~done
+        is_empty = (k == EMPTY) & ~done
+        is_tomb = (k == TOMB) & ~done & (tomb_slot < 0)
+        tomb_slot = jnp.where(is_tomb, idx, tomb_slot)
+        # land on the key itself, or on the first EMPTY (end of chain)
+        slot = jnp.where(is_hit, idx, jnp.where(is_empty, idx, slot))
+        done = done | (k == key) | (k == EMPTY)
+        return slot, tomb_slot, done
+
+    slot, tomb_slot, done = jax.lax.fori_loop(
+        0, max_probes, body, (jnp.int32(-1), jnp.int32(-1), jnp.bool_(False))
+    )
+    # if we stopped at EMPTY but passed a TOMB, prefer the TOMB slot
+    landed_key = jnp.where(slot >= 0, table.keys[jnp.maximum(slot, 0)], EMPTY)
+    use_tomb = (slot >= 0) & (landed_key == EMPTY) & (tomb_slot >= 0)
+    slot = jnp.where(use_tomb, tomb_slot, slot)
+    ok = slot >= 0
+    widx = jnp.maximum(slot, 0)
+    new_keys = table.keys.at[widx].set(jnp.where(ok, key, table.keys[widx]))
+    new_vals = table.vals.at[widx].set(jnp.where(ok, val, table.vals[widx]))
+    return HashTable(new_keys, new_vals), slot, ok
+
+
+@functools.partial(jax.jit, static_argnames=("max_probes",))
+def delete(table: HashTable, key: jax.Array, max_probes: int = 64) -> Tuple[HashTable, jax.Array]:
+    """Tombstone ``key``. Returns ``(table, deleted)``."""
+    size = table.keys.shape[0]
+    h0 = _slot0(key, size)
+
+    def body(i, carry):
+        slot, done = carry
+        idx = (h0 + i) & (size - 1)
+        k = table.keys[idx]
+        hit = (k == key) & ~done
+        slot = jnp.where(hit, idx, slot)
+        done = done | (k == key) | (k == EMPTY)
+        return slot, done
+
+    slot, _ = jax.lax.fori_loop(0, max_probes, body, (jnp.int32(-1), jnp.bool_(False)))
+    ok = slot >= 0
+    widx = jnp.maximum(slot, 0)
+    new_keys = table.keys.at[widx].set(jnp.where(ok, TOMB, table.keys[widx]))
+    return HashTable(new_keys, table.vals), ok
+
+
+@functools.partial(jax.jit, static_argnames=("max_probes",))
+def insert_batch_sequential(
+    table: HashTable,
+    keys: jax.Array,
+    vals: jax.Array,
+    active: jax.Array,
+    max_probes: int = 64,
+) -> Tuple[HashTable, jax.Array, jax.Array]:
+    """Sequentially insert a batch (lax.scan). Deterministic: batch order wins.
+
+    Returns ``(table, slots[B], n_dropped)``.  This is the RCU "writer side";
+    batched readers (:func:`lookup_batch`) never conflict with it because the
+    caller sequences update and query steps (DESIGN.md: epoch snapshots).
+    """
+
+    def step(carry, item):
+        tab, dropped = carry
+        k, v, a = item
+        new_tab, slot, ok = insert(tab, k, v, max_probes)
+        tab = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(a, n, o), new_tab, tab
+        )
+        dropped = dropped + jnp.where(a & ~ok, 1, 0)
+        slot = jnp.where(a, slot, -1)
+        return (tab, dropped), slot
+
+    (table, n_dropped), slots = jax.lax.scan(
+        step, (table, jnp.int32(0)), (keys, vals, active)
+    )
+    return table, slots, n_dropped
+
+
+def load_factor(table: HashTable) -> jax.Array:
+    return jnp.mean((table.keys >= 0).astype(jnp.float32))

@@ -1,0 +1,372 @@
+"""MCPrioQ: online sparse Markov chain with priority-ordered edge queries.
+
+This is the paper's contribution as a composable JAX module (DESIGN.md §1-2).
+
+Data layout
+-----------
+  * src hash table  : node-id -> row index into the slabs (open addressing)
+  * slabs           : per-row stable edge slots (dst, cnt) + ``order`` perm
+  * two counters    : per-edge ``cnt`` and per-row ``tot``; probability is
+                      ``cnt/tot`` computed at query time (paper §II.3)
+  * optional dst hash: per-row open-addressing table dst -> slot ("optional
+                      optimization", paper §II.2); slots are stable so the
+                      hash survives reordering, like the paper's pointers.
+
+Update semantics (paper §II.A, TPU-batched)
+-------------------------------------------
+A batch of transitions is split into the paper's two cases:
+  * **update of edge** (normal case): the edge already exists — a pure
+    conflict-free scatter-add on (row, slot), exactly the paper's "O(1) lookup
+    + atomic increment".  In-batch duplicates aggregate in the scatter.
+  * **new edge** (rare case): handled by a deterministic sequential pass
+    (lax.scan) that allocates rows/slots and applies Space-Saving tail
+    replacement when a row is full (DESIGN.md assumption log).
+Afterwards ``sort_passes`` odd-even passes restore approximate order — the
+paper's lock-free bubble sort.
+
+Inference (paper §II.B)
+-----------------------
+``query_threshold`` walks the order permutation accumulating probability until
+the cumulative sum crosses ``t``: complexity O(CDF^-1(t)) items touched.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashtable as ht
+from repro.core import slab as sl
+from repro.core.hashtable import EMPTY, HashTable
+from repro.core.slab import Slabs
+
+
+def _next_pow2(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
+class MCConfig:
+    """Static configuration (hashable; safe as a jit static arg)."""
+
+    num_rows: int = 1024          # max distinct src nodes tracked
+    capacity: int = 128           # max out-degree tracked per src (C)
+    table_size: int = 0           # src hash slots; 0 -> 4 * num_rows pow2
+    max_probes: int = 64
+    sort_passes: int = 1          # odd-even passes per update batch
+    use_dst_hash: bool = False    # paper's optional dst->slot hash table
+    dst_table_size: int = 0       # per-row; 0 -> 4 * capacity pow2
+
+    def resolved_table_size(self) -> int:
+        return self.table_size or _next_pow2(4 * self.num_rows)
+
+    def resolved_dst_table_size(self) -> int:
+        return self.dst_table_size or _next_pow2(4 * self.capacity)
+
+
+class MCState(NamedTuple):
+    src_table: HashTable   # node-id -> row
+    slabs: Slabs
+    n_rows: jax.Array      # int32[]   allocated rows
+    # optional per-row dst hash (zero-size arrays when disabled)
+    dh_keys: jax.Array     # int32[N, H]
+    dh_vals: jax.Array     # int32[N, H]
+    # observability counters (drops are the price of fixed shapes; DESIGN §2)
+    dropped_rows: jax.Array    # srcs dropped because num_rows exhausted
+    dropped_probes: jax.Array  # items dropped on probe-window overflow
+    evictions: jax.Array       # Space-Saving tail replacements
+
+
+def init(cfg: MCConfig) -> MCState:
+    n, c = cfg.num_rows, cfg.capacity
+    h = cfg.resolved_dst_table_size() if cfg.use_dst_hash else 1
+    return MCState(
+        src_table=ht.make(cfg.resolved_table_size()),
+        slabs=sl.make(n, c),
+        n_rows=jnp.int32(0),
+        dh_keys=jnp.full((n, h), EMPTY, dtype=jnp.int32),
+        dh_vals=jnp.full((n, h), EMPTY, dtype=jnp.int32),
+        dropped_rows=jnp.int32(0),
+        dropped_probes=jnp.int32(0),
+        evictions=jnp.int32(0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# per-row dst hash helpers (optional optimisation path)
+# ---------------------------------------------------------------------------
+
+
+def _dh_lookup(state: MCState, row: jax.Array, key: jax.Array, cfg: MCConfig):
+    tab = HashTable(state.dh_keys[row], state.dh_vals[row])
+    return ht.lookup(tab, key, cfg.max_probes)
+
+
+def _dh_set(state: MCState, row: jax.Array, key: jax.Array, slot: jax.Array,
+            active: jax.Array, cfg: MCConfig) -> MCState:
+    tab = HashTable(state.dh_keys[row], state.dh_vals[row])
+    new_tab, _, _ = ht.insert(tab, key, slot, cfg.max_probes)
+    dh_keys = state.dh_keys.at[row].set(
+        jnp.where(active, new_tab.keys, state.dh_keys[row]))
+    dh_vals = state.dh_vals.at[row].set(
+        jnp.where(active, new_tab.vals, state.dh_vals[row]))
+    return state._replace(dh_keys=dh_keys, dh_vals=dh_vals)
+
+
+def _dh_del(state: MCState, row: jax.Array, key: jax.Array,
+            active: jax.Array, cfg: MCConfig) -> MCState:
+    tab = HashTable(state.dh_keys[row], state.dh_vals[row])
+    new_tab, _ = ht.delete(tab, key, cfg.max_probes)
+    dh_keys = state.dh_keys.at[row].set(
+        jnp.where(active, new_tab.keys, state.dh_keys[row]))
+    return state._replace(dh_keys=dh_keys)
+
+
+def _dh_rebuild_all(state: MCState, cfg: MCConfig) -> MCState:
+    """Vectorised rebuild of every row hash from the slabs (used after decay).
+
+    Rows are independent, so a vmap over rows of a sequential slot-insert loop
+    is conflict-free.
+    """
+    if not cfg.use_dst_hash:
+        return state
+    h = cfg.resolved_dst_table_size()
+
+    def rebuild_row(dsts, cnts):
+        tab = ht.make(h)
+
+        def body(i, tab):
+            new_tab, _, _ = ht.insert(tab, dsts[i], jnp.int32(i), cfg.max_probes)
+            live = cnts[i] > 0
+            return jax.tree_util.tree_map(
+                lambda n, o: jnp.where(live, n, o), new_tab, tab)
+
+        return jax.lax.fori_loop(0, dsts.shape[0], body, tab)
+
+    tabs = jax.vmap(rebuild_row)(state.slabs.dst, state.slabs.cnt)
+    return state._replace(dh_keys=tabs.keys, dh_vals=tabs.vals)
+
+
+# ---------------------------------------------------------------------------
+# lookups
+# ---------------------------------------------------------------------------
+
+
+def lookup_rows(state: MCState, src: jax.Array, cfg: MCConfig):
+    """Batched src -> row. Returns ``(rows[B], found[B])``; row 0 when missing."""
+    rows, found = ht.lookup_batch(state.src_table, src, cfg.max_probes)
+    return jnp.where(found, rows, 0), found
+
+
+def _find_slots(state: MCState, rows: jax.Array, dst: jax.Array, cfg: MCConfig):
+    """Batched (row, dst) -> slot via dst-hash or row scan (paper §II.2)."""
+    if cfg.use_dst_hash:
+        slots, found = jax.vmap(
+            lambda r, d: _dh_lookup(state, r, d, cfg))(rows, dst)
+        return jnp.where(found, slots, 0), found
+    slots, found = jax.vmap(
+        lambda r, d: sl.find_slot(state.slabs, r, d))(rows, dst)
+    return slots, found
+
+
+# ---------------------------------------------------------------------------
+# update
+# ---------------------------------------------------------------------------
+
+
+def _slow_path(state: MCState, src, dst, w, active, cfg: MCConfig) -> MCState:
+    """Sequential insert pass for new edges / new rows (the paper's rare case).
+
+    Deterministic (batch order), fully masked — inactive items are no-ops.
+    """
+    n_cap = cfg.num_rows
+
+    def step(state: MCState, item):
+        s, d, wi, a = item
+        # --- src row (lookup or allocate) -------------------------------
+        row0, found_src = ht.lookup(state.src_table, s, cfg.max_probes)
+        can_alloc = state.n_rows < n_cap
+        do_alloc = a & ~found_src & can_alloc
+        row = jnp.where(found_src, row0, state.n_rows)
+        new_tab, _, ins_ok = ht.insert(state.src_table, s, row, cfg.max_probes)
+        take_ins = do_alloc & ins_ok
+        src_table = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(take_ins, n, o), new_tab, state.src_table)
+        n_rows = state.n_rows + jnp.where(take_ins, 1, 0)
+        dropped_rows = state.dropped_rows + jnp.where(a & ~found_src & ~can_alloc, 1, 0)
+        dropped_probes = state.dropped_probes + jnp.where(do_alloc & ~ins_ok, 1, 0)
+        have_row = found_src | take_ins
+        act = a & have_row
+        row = jnp.where(have_row, row, 0)
+
+        # --- dst slot (find / free / Space-Saving tail replace) ---------
+        slabs = state.slabs
+        slot_eq, found_d = sl.find_slot(slabs, row, d)
+        slot_free, has_free = sl.free_slot(slabs, row)
+        victim = sl.tail_slot(slabs, row)
+        slot = jnp.where(found_d, slot_eq, jnp.where(has_free, slot_free, victim))
+        replace = act & ~found_d & ~has_free
+        evicted_dst = slabs.dst[row, slot]
+        # Space-Saving: the newcomer inherits the evicted count (overestimate)
+        base = jnp.where(found_d, slabs.cnt[row, slot],
+                         jnp.where(has_free, 0, slabs.cnt[row, slot]))
+        new_c = base + wi
+        cnt = slabs.cnt.at[row, slot].set(jnp.where(act, new_c, slabs.cnt[row, slot]))
+        dstv = slabs.dst.at[row, slot].set(jnp.where(act, d, slabs.dst[row, slot]))
+        tot = slabs.tot.at[row].add(jnp.where(act, wi, 0))
+        slabs = Slabs(dst=dstv, cnt=cnt, tot=tot, order=slabs.order)
+        state = state._replace(
+            src_table=src_table, slabs=slabs, n_rows=n_rows,
+            dropped_rows=dropped_rows, dropped_probes=dropped_probes,
+            evictions=state.evictions + jnp.where(replace, 1, 0))
+        if cfg.use_dst_hash:
+            state = _dh_del(state, row, evicted_dst, replace, cfg)
+            state = _dh_set(state, row, d, slot, act & ~found_d, cfg)
+        return state, None
+
+    state, _ = jax.lax.scan(step, state, (src, dst, w, active))
+    return state
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def update_batch(
+    state: MCState,
+    src: jax.Array,
+    dst: jax.Array,
+    weights: Optional[jax.Array] = None,
+    mask: Optional[jax.Array] = None,
+    *,
+    cfg: MCConfig,
+) -> MCState:
+    """Apply a batch of transitions ``src[i] -> dst[i]`` (paper §II.A).
+
+    Fast path (existing edges): one conflict-free scatter-add — the batched
+    equivalent of the paper's atomic fetch-add.  Slow path (new edges): the
+    sequential pass above.  Then ``cfg.sort_passes`` odd-even passes.
+    """
+    b = src.shape[0]
+    w = jnp.ones((b,), jnp.int32) if weights is None else weights.astype(jnp.int32)
+    m = jnp.ones((b,), bool) if mask is None else mask
+    m = m & (src >= 0) & (dst >= 0)
+
+    # classify against the pre-state: edge exists <=> fast
+    rows0, found_src0 = lookup_rows(state, src, cfg)
+    slots0, found_d0 = _find_slots(state, rows0, dst, cfg)
+    fast = m & found_src0 & found_d0
+
+    # fast path: scatter-add (duplicates aggregate, like contended atomics)
+    add_w = jnp.where(fast, w, 0)
+    slabs = state.slabs
+    cnt = slabs.cnt.at[rows0, slots0].add(add_w)
+    tot = slabs.tot.at[rows0].add(add_w)
+    state = state._replace(slabs=Slabs(slabs.dst, cnt, tot, slabs.order))
+
+    # slow path: everything else, sequential + masked
+    state = _slow_path(state, src, dst, w, m & ~fast, cfg)
+
+    # lock-free bubble sort, vectorised
+    slabs = state.slabs
+    order = sl.oddeven_passes(slabs.cnt, slabs.order, cfg.sort_passes)
+    return state._replace(slabs=Slabs(slabs.dst, slabs.cnt, slabs.tot, order))
+
+
+# ---------------------------------------------------------------------------
+# inference
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_items"))
+def query_threshold(
+    state: MCState,
+    src: jax.Array,
+    threshold: float,
+    *,
+    cfg: MCConfig,
+    max_items: int = 16,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Items in descending probability until cumulative prob >= threshold.
+
+    Returns ``(dsts[B, max_items], probs[B, max_items], n_needed[B])`` where
+    entries past ``n_needed`` are EMPTY/0.  ``n_needed`` is the paper's
+    CDF^-1(t): how many items a reader must touch.  Unknown srcs yield 0.
+    """
+    rows, found = lookup_rows(state, src, cfg)
+    order = state.slabs.order[rows]                       # [B, C]
+    c = jnp.take_along_axis(state.slabs.cnt[rows], order, axis=1)
+    d = jnp.take_along_axis(state.slabs.dst[rows], order, axis=1)
+    tot = jnp.maximum(state.slabs.tot[rows], 1).astype(jnp.float32)
+    p = c.astype(jnp.float32) / tot[:, None]
+    cum = jnp.cumsum(p, axis=1)
+    # item i is needed if the cumulative sum *before* it is < t and it is live
+    before = cum - p
+    needed = (before < threshold) & (c > 0) & found[:, None]
+    n_needed = jnp.sum(needed.astype(jnp.int32), axis=1)
+    k = max_items
+    dk, pk, nk = d[:, :k], p[:, :k], needed[:, :k]
+    dk = jnp.where(nk, dk, EMPTY)
+    pk = jnp.where(nk, pk, 0.0)
+    return dk, pk, n_needed
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k"))
+def query_topk(state: MCState, src: jax.Array, *, cfg: MCConfig, k: int = 8):
+    """Top-k edges by (approximate) probability. ``(dsts[B,k], probs[B,k])``."""
+    rows, found = lookup_rows(state, src, cfg)
+    order = state.slabs.order[rows][:, :k]
+    c = jnp.take_along_axis(state.slabs.cnt[rows], order, axis=1)
+    d = jnp.take_along_axis(state.slabs.dst[rows], order, axis=1)
+    tot = jnp.maximum(state.slabs.tot[rows], 1).astype(jnp.float32)
+    p = c.astype(jnp.float32) / tot[:, None]
+    live = (c > 0) & found[:, None]
+    return jnp.where(live, d, EMPTY), jnp.where(live, p, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# decay (paper §II.C)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def decay(state: MCState, *, cfg: MCConfig) -> MCState:
+    """Halve all counters, evict dead edges, compact, rebuild dst hashes."""
+    slabs, _ = sl.decay(state.slabs)
+    state = state._replace(slabs=slabs)
+    return _dh_rebuild_all(state, cfg)
+
+
+def maybe_decay(state: MCState, *, cfg: MCConfig, total_threshold: int) -> MCState:
+    """Decay when any row total exceeds ``total_threshold`` (paper §II.C
+    suggests decaying "at some threshold over the number of total
+    transitions")."""
+    should = jnp.any(state.slabs.tot > total_threshold)
+    return jax.lax.cond(
+        should, lambda s: decay(s, cfg=cfg), lambda s: s, state)
+
+
+# ---------------------------------------------------------------------------
+# invariant checks (used by tests and the property suite)
+# ---------------------------------------------------------------------------
+
+
+def check_invariants(state: MCState) -> dict:
+    slabs = state.slabs
+    order_ok = jnp.all(
+        jnp.sort(slabs.order, axis=1)
+        == jnp.arange(slabs.order.shape[1], dtype=jnp.int32)[None, :])
+    tot_ok = jnp.all(slabs.tot == jnp.sum(slabs.cnt, axis=1))
+    free_ok = jnp.all((slabs.cnt == 0) == (slabs.dst == EMPTY))
+    nonneg = jnp.all(slabs.cnt >= 0)
+    return {
+        "order_is_permutation": bool(order_ok),
+        "tot_matches_cnt_sum": bool(tot_ok),
+        "free_slots_consistent": bool(free_ok),
+        "counts_nonnegative": bool(nonneg),
+        "sorted_fraction": float(sl.sorted_fraction(slabs.cnt, slabs.order)),
+    }

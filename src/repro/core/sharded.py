@@ -1,0 +1,166 @@
+"""Mesh-sharded MCPrioQ: node-space partitioning with all_to_all routing.
+
+The paper scales by lock-free concurrency on one cache-coherent host.  On a
+TPU pod the equivalent scale-out axis is *node-space sharding*: every shard
+owns ``hash(src) % num_shards`` of the graph, a global update batch is routed
+to owner shards with a fixed-capacity ``all_to_all`` (the same dispatch shape
+as MoE expert-parallel routing), and each shard applies its local
+``update_batch``.  Queries route the same way and the answers are routed back.
+
+Fixed per-destination bucket capacity keeps shapes static (overflowed items
+are dropped and counted, like the paper's "approximately correct" reads —
+the observability counter makes the approximation measurable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import mcprioq as mc
+from repro.core.hashtable import EMPTY, hash_u32
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedConfig:
+    base: mc.MCConfig
+    num_shards: int
+    axis: str = "shard"
+    bucket_factor: float = 2.0  # capacity = factor * fair share
+
+    def bucket_capacity(self, local_batch: int) -> int:
+        fair = max(1, local_batch // self.num_shards)
+        return int(self.bucket_factor * fair)
+
+
+def owner_of(src: jax.Array, num_shards: int) -> jax.Array:
+    """Owner shard of a node id. Uses the high mix bits so the src hash table
+    inside each shard (which uses the low bits) stays well distributed."""
+    return ((hash_u32(src) >> jnp.uint32(8)) % jnp.uint32(num_shards)).astype(jnp.int32)
+
+
+def init_sharded(cfg: ShardedConfig, mesh: jax.sharding.Mesh) -> mc.MCState:
+    """Global state: every array gains a leading ``num_shards`` dim, sharded
+    over ``cfg.axis``. Inside shard_map each shard sees its own MCState."""
+    one = mc.init(cfg.base)
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_shards,) + x.shape), one)
+    sharding = jax.sharding.NamedSharding(mesh, P(cfg.axis))
+    return jax.tree_util.tree_map(lambda x: jax.device_put(x, sharding), stacked)
+
+
+# ---------------------------------------------------------------------------
+# bucket building (per-shard local work)
+# ---------------------------------------------------------------------------
+
+
+def _build_buckets(vals_list, owner: jax.Array, num_shards: int, cap: int):
+    """Scatter items into [num_shards, cap] send buckets grouped by owner.
+
+    Returns (buckets..., pos, dropped) where ``pos[i]`` is the in-bucket slot
+    of item i (>= cap means dropped). Deterministic: stable sort by owner.
+    """
+    b = owner.shape[0]
+    sort_idx = jnp.argsort(owner, stable=True)
+    owner_s = owner[sort_idx]
+    starts = jnp.searchsorted(owner_s, jnp.arange(num_shards, dtype=owner.dtype))
+    pos_s = jnp.arange(b, dtype=jnp.int32) - starts[owner_s]
+    outs = []
+    for v in vals_list:
+        buf = jnp.full((num_shards, cap) + v.shape[1:], EMPTY, v.dtype)
+        # out-of-capacity positions fall off via mode="drop"
+        buf = buf.at[owner_s, pos_s].set(v[sort_idx], mode="drop")
+        outs.append(buf)
+    # per-item position in original order
+    pos = jnp.zeros((b,), jnp.int32).at[sort_idx].set(pos_s)
+    dropped = jnp.sum((pos_s >= cap).astype(jnp.int32))
+    return outs, pos, dropped
+
+
+# ---------------------------------------------------------------------------
+# distributed update / query (call under shard_map; wrappers below)
+# ---------------------------------------------------------------------------
+
+
+def _update_local(state, src, dst, w, scfg: ShardedConfig):
+    """Per-shard body: route then apply. ``state`` leading dim is 1."""
+    state = jax.tree_util.tree_map(lambda x: x[0], state)
+    n, cap = scfg.num_shards, scfg.bucket_capacity(src.shape[0])
+    (bsrc, bdst, bw), _, dropped = _build_buckets(
+        [src, dst, w], owner_of(src, n), n, cap)
+    rsrc = jax.lax.all_to_all(bsrc, scfg.axis, 0, 0, tiled=True)
+    rdst = jax.lax.all_to_all(bdst, scfg.axis, 0, 0, tiled=True)
+    rw = jax.lax.all_to_all(bw, scfg.axis, 0, 0, tiled=True)
+    rsrc, rdst, rw = (x.reshape(-1) for x in (rsrc, rdst, rw))
+    state = mc.update_batch(state, rsrc, rdst, weights=rw,
+                            mask=rsrc != EMPTY, cfg=scfg.base)
+    state = state._replace(dropped_probes=state.dropped_probes + dropped)
+    return jax.tree_util.tree_map(lambda x: x[None], state)
+
+
+def _query_local(state, src, threshold, max_items, scfg: ShardedConfig):
+    state = jax.tree_util.tree_map(lambda x: x[0], state)
+    n, cap = scfg.num_shards, scfg.bucket_capacity(src.shape[0])
+    (bsrc,), pos, _ = _build_buckets([src], owner_of(src, n), n, cap)
+    rsrc = jax.lax.all_to_all(bsrc, scfg.axis, 0, 0, tiled=True)
+    d, p, need = mc.query_threshold(
+        state, rsrc.reshape(-1), threshold, cfg=scfg.base, max_items=max_items)
+    d = d.reshape(n, cap, max_items)
+    p = p.reshape(n, cap, max_items)
+    need = need.reshape(n, cap)
+    # route answers back to the requesting shard
+    d = jax.lax.all_to_all(d, scfg.axis, 0, 0, tiled=True)
+    p = jax.lax.all_to_all(p, scfg.axis, 0, 0, tiled=True)
+    need = jax.lax.all_to_all(need, scfg.axis, 0, 0, tiled=True)
+    # un-permute: item i sits at [owner[i], pos[i]]
+    own = owner_of(src, n)
+    ok = pos < cap
+    gi = jnp.clip(pos, 0, cap - 1)
+    di = d[own, gi]
+    pi = p[own, gi]
+    ni = need[own, gi]
+    di = jnp.where(ok[:, None], di, EMPTY)
+    pi = jnp.where(ok[:, None], pi, 0.0)
+    ni = jnp.where(ok, ni, 0)
+    return di, pi, ni
+
+
+# ---------------------------------------------------------------------------
+# public pjit-able wrappers
+# ---------------------------------------------------------------------------
+
+
+def make_update_fn(scfg: ShardedConfig, mesh: jax.sharding.Mesh):
+    """Returns jitted ``(state, src[B], dst[B], w[B]) -> state`` with batch
+    data-sharded over the shard axis and state node-sharded."""
+    a = scfg.axis
+    state_spec = jax.tree_util.tree_map(lambda _: P(a), mc.init(scfg.base))
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(state_spec, P(a), P(a), P(a)), out_specs=state_spec,
+        check_vma=False)
+    def fn(state, src, dst, w):
+        return _update_local(state, src, dst, w, scfg)
+
+    return jax.jit(fn)
+
+
+def make_query_fn(scfg: ShardedConfig, mesh: jax.sharding.Mesh,
+                  threshold: float, max_items: int):
+    a = scfg.axis
+    state_spec = jax.tree_util.tree_map(lambda _: P(a), mc.init(scfg.base))
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(state_spec, P(a)), out_specs=(P(a), P(a), P(a)),
+        check_vma=False)
+    def fn(state, src):
+        return _query_local(state, src, threshold, max_items, scfg)
+
+    return jax.jit(fn)

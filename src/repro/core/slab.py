@@ -1,0 +1,163 @@
+"""Edge slabs: the TPU-native form of the paper's sorted doubly-linked list.
+
+Key adaptation (DESIGN.md §2): in the paper, the dst hash table points at
+*list nodes*, and a bubble swap re-links the nodes without moving them — so
+pointers stay valid.  In array land, position is identity, so instead we keep
+edge *slots* stable (``dst``/``cnt`` never move once allocated) and maintain a
+separate permutation ``order[r, :]`` listing slot ids in (approximately)
+descending count order.  The paper's lock-free adjacent-node swap becomes a
+vectorised **odd-even transposition pass over the permutation** — one
+compare-exchange on even-aligned pairs, one on odd-aligned pairs.  Slots never
+move, so slot references (the optional dst hash) survive every swap, exactly
+like the paper's pointers survive an RCU swap.
+
+Invariants (checked in tests):
+  * ``cnt >= 0``;  ``cnt[r, s] == 0  <=>`` slot ``s`` of row ``r`` is free
+    (``dst == EMPTY``).
+  * ``order[r]`` is a permutation of ``range(C)`` at all times.
+  * ``tot[r] == sum(cnt[r])`` after every public op.
+  * k odd-even passes never increase the number of inversions.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashtable import EMPTY
+
+
+class Slabs(NamedTuple):
+    dst: jax.Array  # int32[N, C]  dst node-id per slot, EMPTY if free
+    cnt: jax.Array  # int32[N, C]  transition counter per slot (0 == free)
+    tot: jax.Array  # int32[N]     per-row total transitions (paper's 2nd counter)
+    order: jax.Array  # int32[N, C] slot ids, approx. descending by cnt
+
+
+def make(num_rows: int, capacity: int) -> Slabs:
+    return Slabs(
+        dst=jnp.full((num_rows, capacity), EMPTY, dtype=jnp.int32),
+        cnt=jnp.zeros((num_rows, capacity), dtype=jnp.int32),
+        tot=jnp.zeros((num_rows,), dtype=jnp.int32),
+        order=jnp.broadcast_to(
+            jnp.arange(capacity, dtype=jnp.int32), (num_rows, capacity)
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# odd-even transposition: the lock-free bubble sort of the paper, vectorised
+# ---------------------------------------------------------------------------
+
+
+def _half_pass(cnt: jax.Array, order: jax.Array, start: int) -> jax.Array:
+    """One compare-exchange sweep over pairs (start, start+1), (start+2, ...).
+
+    Descending order target: swap when left < right. Operates on the
+    permutation only; the slabs themselves never move (stable slots).
+    """
+    c = jnp.take_along_axis(cnt, order, axis=1)
+    left_o = order[:, start:-1:2]
+    right_o = order[:, start + 1 :: 2]
+    # align shapes (odd start on even C leaves a trailing unpaired element)
+    m = min(left_o.shape[1], right_o.shape[1])
+    left_o, right_o = left_o[:, :m], right_o[:, :m]
+    left_c = c[:, start:-1:2][:, :m]
+    right_c = c[:, start + 1 :: 2][:, :m]
+    swap = left_c < right_c
+    new_left = jnp.where(swap, right_o, left_o)
+    new_right = jnp.where(swap, left_o, right_o)
+    order = order.at[:, start : start + 2 * m : 2].set(new_left)
+    order = order.at[:, start + 1 : start + 1 + 2 * m : 2].set(new_right)
+    return order
+
+
+def oddeven_passes(cnt: jax.Array, order: jax.Array, passes: int) -> jax.Array:
+    """``passes`` full odd-even passes (each = even sweep + odd sweep).
+
+    C passes sort fully; 1 pass fixes the "single small increment" case that
+    the paper argues is the normal case.  Between passes the order is
+    *approximately correct* — the paper's own reader-visible guarantee.
+    """
+    for _ in range(passes):
+        order = _half_pass(cnt, order, 0)
+        order = _half_pass(cnt, order, 1)
+    return order
+
+
+def full_sort(cnt: jax.Array, order: jax.Array) -> jax.Array:
+    """Exact descending argsort (used by decay/compaction, not the hot path).
+
+    Stable sort on -cnt keeps free slots (cnt 0) at the tail deterministically.
+    """
+    del order
+    return jnp.argsort(-cnt, axis=1, stable=True).astype(jnp.int32)
+
+
+def inversions(cnt: jax.Array, order: jax.Array) -> jax.Array:
+    """Number of adjacent inversions per row (0 == perfectly sorted)."""
+    c = jnp.take_along_axis(cnt, order, axis=1)
+    return jnp.sum((c[:, :-1] < c[:, 1:]).astype(jnp.int32), axis=1)
+
+
+def sorted_fraction(cnt: jax.Array, order: jax.Array) -> jax.Array:
+    """Fraction of adjacent pairs in correct (non-increasing) order."""
+    c = jnp.take_along_axis(cnt, order, axis=1)
+    ok = (c[:, :-1] >= c[:, 1:]).astype(jnp.float32)
+    return jnp.mean(ok)
+
+
+# ---------------------------------------------------------------------------
+# row-level find / allocate (vectorised over a batch of rows)
+# ---------------------------------------------------------------------------
+
+
+def find_slot(slabs: Slabs, row: jax.Array, dst: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Scan row ``row`` for ``dst``; returns ``(slot, found)``.
+
+    O(C) work but a single vector compare — the paper's observation that "a
+    hash table is hard to beat, but practically the choice may not be that
+    obvious" (§II.2) is exactly this: on TPU a C-lane compare is one VPU op.
+    """
+    hits = slabs.dst[row] == dst
+    slot = jnp.argmax(hits).astype(jnp.int32)
+    return slot, jnp.any(hits)
+
+
+def free_slot(slabs: Slabs, row: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """First free slot (cnt == 0) of ``row``; ``(slot, has_free)``."""
+    free = slabs.cnt[row] == 0
+    slot = jnp.argmax(free).astype(jnp.int32)
+    return slot, jnp.any(free)
+
+
+def tail_slot(slabs: Slabs, row: jax.Array) -> jax.Array:
+    """Slot currently holding the (approximate) minimum count: order tail."""
+    return slabs.order[row, -1]
+
+
+# ---------------------------------------------------------------------------
+# decay (paper §II.C): halve counters, evict zeros, compact via sort
+# ---------------------------------------------------------------------------
+
+
+def decay(slabs: Slabs) -> Tuple[Slabs, jax.Array]:
+    """Multiply every counter by 0.5 (integer shift), evict cnt==0 edges.
+
+    Returns ``(slabs, n_evicted)``.  ``tot`` is recomputed as the exact row sum
+    so the two-counter probability stays consistent (the paper keeps the ratio
+    invariant; integer halving of both sides does too, up to rounding — we
+    re-sum to make it exact).  Compaction = one exact sort, putting the newly
+    freed slots at the order tail where allocation finds them.
+    """
+    new_cnt = slabs.cnt >> 1
+    died = (new_cnt == 0) & (slabs.dst != EMPTY)
+    new_dst = jnp.where(new_cnt == 0, EMPTY, slabs.dst)
+    new_tot = jnp.sum(new_cnt, axis=1).astype(slabs.tot.dtype)
+    new_order = full_sort(new_cnt, slabs.order)
+    return (
+        Slabs(dst=new_dst, cnt=new_cnt, tot=new_tot, order=new_order),
+        jnp.sum(died.astype(jnp.int32)),
+    )

@@ -1,0 +1,117 @@
+"""Online n-gram drafter: MCPrioQ as a first-class LM serving feature.
+
+The paper's target workload — "recommend items in descending probability until
+cumulative probability >= t" — is precisely the draft-proposal problem of
+speculative decoding: given the current context, propose the most probable
+next tokens.  We maintain an MCPrioQ whose src nodes are rolling hashes of the
+last ``n`` tokens and whose dst nodes are next tokens, learned *online* from
+the very tokens the target model emits (continuous learning, §II.C decay keeps
+it adaptive).  Drafting a chain of k tokens = k greedy top-1 queries; the
+cumulative-threshold query supplies candidate *sets* for tree-style
+verification.
+
+This module is architecture-agnostic (DESIGN.md §Arch-applicability): it only
+sees token streams.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mcprioq as mc
+from repro.core.hashtable import EMPTY, hash_u32
+
+
+@dataclasses.dataclass(frozen=True)
+class NGramConfig:
+    order: int = 2                 # context length n
+    mc: mc.MCConfig = mc.MCConfig(num_rows=8192, capacity=64, sort_passes=1)
+    decay_threshold: int = 1 << 18
+
+
+class DrafterState(NamedTuple):
+    chain: mc.MCState
+
+
+def init(cfg: NGramConfig) -> DrafterState:
+    return DrafterState(chain=mc.init(cfg.mc))
+
+
+def context_ids(tokens: jax.Array, order: int) -> jax.Array:
+    """Rolling hash of the last ``order`` tokens at every position.
+
+    tokens: int32[..., S] -> ctx: int32[..., S] where ctx[..., i] hashes
+    tokens[..., i-order+1 : i+1].  Non-negative (top bit cleared) so ids are
+    valid hash-table keys.
+    """
+    h = jnp.zeros_like(tokens, dtype=jnp.uint32)
+    for k in range(order):
+        t = jnp.roll(tokens, k, axis=-1).astype(jnp.uint32)
+        # positions before the context window see rolled garbage; mask below
+        h = h * jnp.uint32(1000003) + hash_u32(t.astype(jnp.int32))
+    idx = jnp.arange(tokens.shape[-1])
+    valid = idx >= (order - 1)
+    ctx = (h & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
+    return jnp.where(valid, ctx, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def observe(state: DrafterState, tokens: jax.Array, *, cfg: NGramConfig) -> DrafterState:
+    """Learn from a batch of token sequences. tokens: int32[B, S]."""
+    ctx = context_ids(tokens, cfg.order)        # [B, S]
+    src = ctx[:, :-1].reshape(-1)
+    dst = tokens[:, 1:].reshape(-1)
+    chain = mc.update_batch(state.chain, src, dst, cfg=cfg.mc)
+    chain = mc.maybe_decay(chain, cfg=cfg.mc, total_threshold=cfg.decay_threshold)
+    return DrafterState(chain=chain)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k"))
+def draft(state: DrafterState, context: jax.Array, *, cfg: NGramConfig,
+          k: int = 4) -> Tuple[jax.Array, jax.Array]:
+    """Greedy draft of k tokens per sequence.
+
+    context: int32[B, >=order] recent tokens.  Returns (draft[B, k],
+    ok[B, k]) — ok False where the chain had no transition (caller stops
+    speculation there).
+    """
+    order = cfg.order
+
+    def step(ctx_window, _):
+        # ctx_window: int32[B, order]
+        src = context_ids(ctx_window, order)[:, -1]
+        dsts, probs = mc.query_topk(state.chain, src, cfg=cfg.mc, k=1)
+        nxt = dsts[:, 0]
+        ok = (nxt != EMPTY) & (probs[:, 0] > 0)
+        nxt = jnp.where(ok, nxt, 0)
+        new_window = jnp.concatenate([ctx_window[:, 1:], nxt[:, None]], axis=1)
+        return new_window, (nxt, ok)
+
+    window = context[:, -order:]
+    _, (toks, oks) = jax.lax.scan(step, window, None, length=k)
+    # accumulate ok: once a step fails, the rest of the chain is invalid
+    oks = jnp.cumprod(oks.astype(jnp.int32), axis=0).astype(bool)
+    return toks.T, oks.T
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_items"))
+def candidates(state: DrafterState, context: jax.Array, threshold: float,
+               *, cfg: NGramConfig, max_items: int = 8):
+    """Cumulative-probability candidate set for the next token — the paper's
+    headline query, used for tree-style speculation or top-p style pruning."""
+    src = context_ids(context[:, -cfg.order:], cfg.order)[:, -1]
+    return mc.query_threshold(state.chain, src, threshold,
+                              cfg=cfg.mc, max_items=max_items)
+
+
+def acceptance_rate(draft_tokens: jax.Array, target_tokens: jax.Array,
+                    ok: jax.Array) -> jax.Array:
+    """Fraction of drafted tokens accepted by the target (prefix match)."""
+    match = (draft_tokens == target_tokens) & ok
+    accepted = jnp.cumprod(match.astype(jnp.int32), axis=1)
+    return jnp.mean(jnp.sum(accepted, axis=1) / jnp.maximum(1, jnp.sum(ok, axis=1)))

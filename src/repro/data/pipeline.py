@@ -1,0 +1,54 @@
+"""Device data pipeline: host batches -> mesh-sharded global arrays.
+
+Single-process in this container; the code path is the multi-host one
+(``jax.make_array_from_process_local_data``) so it drops onto a real pod
+unchanged: every host feeds its slice of the global batch.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.sharding.specs import batch_axes
+
+
+def batch_sharding(mesh: jax.sharding.Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P(batch_axes(mesh)))
+
+
+def shard_batch(batch: Dict[str, np.ndarray], mesh: jax.sharding.Mesh
+                ) -> Dict[str, jax.Array]:
+    """Host batch dict -> global sharded arrays (batch dim over BATCH axes).
+    Falls back to replication for arrays whose batch dim does not divide."""
+    sh = batch_sharding(mesh)
+    ax = 1
+    for a in batch_axes(mesh):
+        ax *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+
+    out = {}
+    for k, v in batch.items():
+        if v.shape[0] % ax == 0:
+            out[k] = jax.make_array_from_process_local_data(sh, v)
+        else:
+            out[k] = jax.device_put(
+                v, NamedSharding(mesh, P(*([None] * v.ndim))))
+    return out
+
+
+class ShardedIterator:
+    """Wrap a host iterator; yields mesh-sharded batches."""
+
+    def __init__(self, it: Iterator[Dict[str, np.ndarray]],
+                 mesh: jax.sharding.Mesh):
+        self.it = it
+        self.mesh = mesh
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return shard_batch(next(self.it), self.mesh)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+  * :mod:`repro.kernels.slab_update` — fused batched edge increment (§II.A)
+  * :mod:`repro.kernels.oddeven`     — lock-free bubble sort, vectorised (§II.2)
+  * :mod:`repro.kernels.cdf_query`   — threshold inference (§II.B)
+
+Public API lives in :mod:`repro.kernels.ops` (padding + backend dispatch);
+``ref.py`` holds the pure-jnp oracles each kernel is tested against.
+"""
+
+from repro.kernels import ops  # noqa: F401

@@ -1,0 +1,108 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handle padding to block multiples, the order-gather layout transform, and
+backend dispatch: ``impl='pallas'`` (interpret=True on CPU — the container
+has no TPU), ``impl='ref'`` (pure-jnp oracle), ``impl='auto'`` (pallas on
+TPU, ref otherwise — the ref *is* the XLA fast path on CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cdf_query as _cdf
+from repro.kernels import oddeven as _oe
+from repro.kernels import ref as _ref
+from repro.kernels import slab_update as _su
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_rows(x: jax.Array, mult: int, fill) -> Tuple[jax.Array, int]:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        pad_block = jnp.full((pad,) + x.shape[1:], fill, x.dtype)
+        x = jnp.concatenate([x, pad_block], axis=0)
+    return x, n
+
+
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("passes", "impl"))
+def oddeven_sort(cnt: jax.Array, order: jax.Array, *, passes: int = 1,
+                 impl: str = "auto") -> jax.Array:
+    """k odd-even passes over every slab row; returns the new order
+    permutation (slabs themselves never move — DESIGN.md §2)."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _ref.oddeven_on_slabs_ref(cnt, order, passes)
+    c_ord = jnp.take_along_axis(cnt, order, axis=1)
+    rb = min(_oe.DEFAULT_ROWS_PER_BLOCK, cnt.shape[0])
+    c_ord, n = _pad_rows(c_ord, rb, 0)
+    order_p, _ = _pad_rows(order, rb, 0)
+    _, new_order = _oe.oddeven_pallas(
+        c_ord, order_p, passes=passes, rows_per_block=rb,
+        interpret=not _on_tpu())
+    return new_order[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def slab_update(rows: jax.Array, dsts: jax.Array, w: jax.Array,
+                dst_slab: jax.Array, cnt: jax.Array, tot: jax.Array,
+                *, impl: str = "auto"):
+    """Fast-path batched increments; returns (cnt', tot').
+    rows < 0 = padding/inactive items."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        _, cnt2, tot2, _ = _ref.slab_update_ref(rows, dsts, w, dst_slab, cnt, tot)
+        return cnt2, tot2
+    rb = min(_su.DEFAULT_ROWS_PER_BLOCK, cnt.shape[0])
+    dst_p, n = _pad_rows(dst_slab, rb, -1)
+    cnt_p, _ = _pad_rows(cnt, rb, 0)
+    tot_p, _ = _pad_rows(tot, rb, 0)
+    cnt2, tot2 = _su.slab_update_pallas(
+        rows, dsts, w, dst_p, cnt_p, tot_p, rows_per_block=rb,
+        interpret=not _on_tpu())
+    return cnt2[:n], tot2[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def decay_sort(cnt: jax.Array, dst: jax.Array, order: jax.Array,
+               *, impl: str = "auto"):
+    """Fused §II.C decay: halve counters, evict dead edges, fully re-sort.
+
+    The compaction sort composes the odd-even kernel with C/2+1 passes (a
+    full odd-even transposition network sorts any input), so the whole decay
+    runs as VPU sweeps over the slab tiles.  Returns (cnt', dst', order',
+    tot') with evicted slots at the order tail.
+    """
+    new_cnt = cnt >> 1
+    new_dst = jnp.where(new_cnt == 0, -1, dst)
+    new_tot = jnp.sum(new_cnt, axis=1).astype(jnp.int32)
+    passes = cnt.shape[1] // 2 + 1
+    new_order = oddeven_sort(new_cnt, order, passes=passes, impl=impl)
+    return new_cnt, new_dst, new_order, new_tot
+
+
+@functools.partial(jax.jit, static_argnames=("max_items", "chunks", "impl"))
+def cdf_query(c_ord: jax.Array, d_ord: jax.Array, tot: jax.Array,
+              threshold, *, max_items: int = 16, chunks: int = 1,
+              impl: str = "auto"):
+    """Threshold inference over pre-ordered rows; see cdf_query.py."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        t = threshold if isinstance(threshold, float) else jnp.asarray(threshold)
+        return _ref.cdf_query_ref(c_ord, d_ord, tot, t, max_items)
+    qb = min(_cdf.DEFAULT_QUERIES_PER_BLOCK, c_ord.shape[0])
+    c_p, b = _pad_rows(c_ord, qb, 0)
+    d_p, _ = _pad_rows(d_ord, qb, 0)
+    t_p, _ = _pad_rows(tot, qb, 0)
+    dk, pk, nn = _cdf.cdf_query_pallas(
+        c_p, d_p, t_p, threshold, max_items=max_items,
+        queries_per_block=qb, chunks=chunks, interpret=not _on_tpu())
+    return dk[:b], pk[:b], nn[:b]

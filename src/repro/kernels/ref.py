@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth; kernels must match exactly
+(integer ops) or to float tolerance (probability ops).  The oracles reuse the
+core library where it defines the semantics (slab.py odd-even passes).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import slab as sl
+from repro.core.hashtable import EMPTY
+
+
+def oddeven_ref(c_ord: jax.Array, order: jax.Array, passes: int):
+    """k odd-even passes over counts-in-order + the order permutation.
+
+    c_ord[N, C] are the counts *already gathered into order position* (the
+    kernel-side layout); order[N, C] the slot permutation. Returns the pair
+    after ``passes`` full (even+odd) sweeps, descending target.
+    """
+    for _ in range(passes):
+        for start in (0, 1):
+            left_c = c_ord[:, start:-1:2]
+            right_c = c_ord[:, start + 1 :: 2]
+            m = min(left_c.shape[1], right_c.shape[1])
+            left_c, right_c = left_c[:, :m], right_c[:, :m]
+            left_o = order[:, start:-1:2][:, :m]
+            right_o = order[:, start + 1 :: 2][:, :m]
+            swap = left_c < right_c
+            nl_c = jnp.where(swap, right_c, left_c)
+            nr_c = jnp.where(swap, left_c, right_c)
+            nl_o = jnp.where(swap, right_o, left_o)
+            nr_o = jnp.where(swap, left_o, right_o)
+            c_ord = c_ord.at[:, start : start + 2 * m : 2].set(nl_c)
+            c_ord = c_ord.at[:, start + 1 : start + 1 + 2 * m : 2].set(nr_c)
+            order = order.at[:, start : start + 2 * m : 2].set(nl_o)
+            order = order.at[:, start + 1 : start + 1 + 2 * m : 2].set(nr_o)
+    return c_ord, order
+
+
+def oddeven_on_slabs_ref(cnt: jax.Array, order: jax.Array, passes: int):
+    """Same semantics as slab.oddeven_passes (permutation-only view)."""
+    return sl.oddeven_passes(cnt, order, passes)
+
+
+def slab_update_ref(rows: jax.Array, dsts: jax.Array, w: jax.Array,
+                    dst: jax.Array, cnt: jax.Array, tot: jax.Array):
+    """Fast-path batched edge increment (paper §II.A.2, existing edges only).
+
+    For each item i: find slot of dsts[i] in row rows[i]; if present add w[i]
+    to cnt and tot.  Items whose edge is absent are no-ops (the caller sends
+    them down the slow path).  rows < 0 marks padding.
+    """
+    active = rows >= 0
+    safe_rows = jnp.maximum(rows, 0)
+    hit = dst[safe_rows] == dsts[:, None]          # [B, C]
+    found = jnp.any(hit, axis=1) & active
+    slot = jnp.argmax(hit, axis=1)
+    addw = jnp.where(found, w, 0)
+    cnt = cnt.at[safe_rows, slot].add(addw)
+    tot = tot.at[safe_rows].add(addw)
+    return dst, cnt, tot, found
+
+
+def cdf_query_ref(c_ord: jax.Array, d_ord: jax.Array, tot: jax.Array,
+                  threshold: float, max_items: int):
+    """Cumulative-probability threshold query (paper §II.B).
+
+    c_ord/d_ord[B, C]: counts/dsts gathered in descending-priority order
+    (zeros for missing rows). Returns (dsts[B,k], probs[B,k], n_needed[B]).
+    """
+    totf = jnp.maximum(tot, 1).astype(jnp.float32)
+    p = c_ord.astype(jnp.float32) / totf[:, None]
+    cum = jnp.cumsum(p, axis=1)
+    before = cum - p
+    needed = (before < threshold) & (c_ord > 0)
+    n_needed = jnp.sum(needed.astype(jnp.int32), axis=1)
+    k = max_items
+    keep = needed[:, :k]
+    dk = jnp.where(keep, d_ord[:, :k], EMPTY)
+    pk = jnp.where(keep, p[:, :k], 0.0)
+    return dk, pk, n_needed

@@ -1,0 +1,285 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first (before any jax-importing import): jax
+locks the device count at first init, and only the dry-run wants 512
+placeholder devices.
+
+Per cell this script:
+  1. builds ShapeDtypeStruct inputs (launch/cells.py — no allocation),
+  2. jit-lowers train_step / prefill / serve_step with in/out shardings from
+     the name-based rules (sharding/specs.py),
+  3. ``.lower().compile()`` — any sharding mismatch / unsupported collective
+     / compile-time OOM fails the cell (a bug in our system, per the brief),
+  4. records memory_analysis / cost_analysis / collective bytes + the
+     three roofline terms to a JSON file for EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] --out results/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch import cells as cells_mod
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.optim import adamw
+from repro.sharding.specs import batch_axes, partition_specs
+from repro.train.train_step import TrainConfig, abstract_state, make_train_step
+
+
+def _batch_shardings(specs, mesh):
+    """Batch inputs: shard dim0 over the BATCH axes where divisible."""
+    ax = 1
+    for a in batch_axes(mesh):
+        ax *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+
+    def one(s):
+        if s.shape and s.shape[0] % ax == 0:
+            return NamedSharding(mesh, P(batch_axes(mesh)))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(one, specs)
+
+
+def _cache_shardings(caches, mesh, cfg):
+    """KV caches: batch dim over BATCH axes; seq dim of K/V over model when
+    kv_heads cannot shard (GQA kv<16); kv-head dim over model when it can."""
+    ax_names = batch_axes(mesh)
+    ax = 1
+    for a in ax_names:
+        ax *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    model_ax = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+
+    def one(path, s):
+        last = path[-1]
+        # dict entries carry .key; NamedTuple fields (KVCache.k etc) carry
+        # .name — missing the latter silently loses the cache sharding
+        name = str(getattr(last, "name", None) or getattr(last, "key", ""))
+        dims = [None] * len(s.shape)
+        # find the batch dim: caches under 'stack' carry a leading period dim
+        # UNLESS they are the per-layer list variant (sp_decode_attn), whose
+        # path contains a sequence index
+        in_list = any(type(p).__name__ == "SequenceKey" for p in path)
+        stacked = (not in_list) and any(
+            str(getattr(p, "key", "")) == "stack" for p in path)
+        b_dim = 1 if stacked else 0
+        if len(s.shape) > b_dim and s.shape[b_dim] % ax == 0:
+            dims[b_dim] = ax_names
+        if name in ("k", "v", "mem_k", "mem_v") and len(s.shape) >= b_dim + 4:
+            kvh = s.shape[b_dim + 2]
+            seq = s.shape[b_dim + 1]
+            if kvh % model_ax == 0:
+                dims[b_dim + 2] = "model"
+            elif seq % model_ax == 0:
+                dims[b_dim + 1] = "model"
+        elif name == "positions" and len(s.shape) >= b_dim + 2:
+            seq = s.shape[b_dim + 1]
+            # positions must shard like the K/V seq dim when that is sharded
+            kv_sharded_on_seq = True  # mirrors the k/v rule below
+            if cfg.num_kv_heads % model_ax == 0:
+                kv_sharded_on_seq = False
+            if kv_sharded_on_seq and seq % model_ax == 0:
+                dims[b_dim + 1] = "model"
+        elif name in ("state", "conv_buf", "h"):
+            # recurrent states: shard inner dim over model when divisible
+            inner = s.shape[-1]
+            if inner % model_ax == 0:
+                dims[-1] = "model"
+        return NamedSharding(mesh, P(*dims))
+
+    out = jax.tree_util.tree_map_with_path(one, caches)
+    _verify_cache_shardings(caches, out, mesh, cfg)
+    return out
+
+
+def _verify_cache_shardings(caches, shardings, mesh, cfg) -> None:
+    """Structural check: every large cache leaf must actually be sharded.
+
+    Guards against the class of bug found in §Perf iter 1a (pytree-path API
+    mismatch silently dropping every KV-cache sharding): any leaf bigger
+    than 64 MB/device-equivalent whose spec came out fully replicated is a
+    rule failure, not a preference.
+    """
+    n_dev = mesh.devices.size
+    leaves = jax.tree_util.tree_leaves_with_path(caches)
+    specs = jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: isinstance(x, NamedSharding))
+    for (path, leaf), sh in zip(leaves, specs):
+        nbytes = 1
+        for d in leaf.shape:
+            nbytes *= d
+        nbytes *= jnp.dtype(leaf.dtype).itemsize
+        replicated = all(e is None for e in sh.spec)
+        if replicated and nbytes / n_dev > 64 * 1024 * 1024:
+            name = "/".join(str(getattr(p, "name", None)
+                                or getattr(p, "key", p)) for p in path)
+            raise AssertionError(
+                f"cache leaf {name} ({nbytes/1e9:.1f} GB) has a fully "
+                f"replicated sharding — rule failure (see §Perf iter 1a)")
+
+
+# §Perf hillclimb variants: named config overrides applied on top of the
+# paper-faithful baseline (comma-separable, e.g. --variant fsdp2d,remat_dots)
+VARIANTS = {
+    "baseline": {},
+    "sp_attn": {"sp_decode_attn": True},
+    "moe_gather": {"moe_combine": "gather"},
+    "moe_ep": {"moe_impl": "ep"},
+    "fsdp2d": {"shard_strategy": "fsdp2d"},
+    "remat_dots": {"remat": "dots"},
+    "remat_none": {"remat": "none"},
+}
+# train-config variants (grad-accumulation microbatches)
+TRAIN_VARIANTS = {"mb2": 2, "mb4": 4, "mb8": 8}
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool,
+               donate: bool = True, variant: str = "baseline") -> dict:
+    import dataclasses
+
+    from repro.sharding import specs as specs_mod
+
+    cfg = get_config(arch)
+    overrides = {}
+    microbatches = 1
+    for v in variant.split(","):
+        if v in TRAIN_VARIANTS:
+            microbatches = TRAIN_VARIANTS[v]
+        else:
+            overrides.update(VARIANTS[v])
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    cell = cells_mod.cell_of(arch, shape)
+    if cell is None:
+        return {"arch": arch, "shape": shape, "status": "skipped",
+                "reason": "full-attention arch: 500k dense KV cache "
+                          "(sub-quadratic attention required; DESIGN.md §5)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    model = Model(cfg)
+    t0 = time.time()
+
+    with mesh, specs_mod.strategy(cfg.shard_strategy):
+        if cell.kind == "train":
+            tcfg = TrainConfig(microbatches=microbatches)
+            state = abstract_state(model, tcfg)
+            state_specs = partition_specs(state, mesh, mode="train")
+            state_sh = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), state_specs)
+            step = make_train_step(model, tcfg)
+            bspecs = cells_mod.batch_specs(cfg, cell)
+            bsh = _batch_shardings(bspecs, mesh)
+            fn = jax.jit(step, in_shardings=(state_sh, bsh),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,) if donate else ())
+            lowered = fn.lower(state, bspecs)
+        elif cell.kind == "prefill":
+            params = model.abstract_params()
+            psh = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s),
+                partition_specs(params, mesh, mode="serve"))
+            bspecs = cells_mod.batch_specs(cfg, cell)
+            bsh = _batch_shardings(bspecs, mesh)
+            fn = jax.jit(lambda p, b: model.prefill(p, b, cell.seq),
+                         in_shardings=(psh, bsh))
+            lowered = fn.lower(params, bspecs)
+        else:  # decode
+            params = model.abstract_params()
+            psh = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s),
+                partition_specs(params, mesh, mode="serve"))
+            caches, tokens, pos = cells_mod.decode_specs(cfg, cell)
+            csh = _cache_shardings(caches, mesh, cfg)
+            tsh = _batch_shardings({"t": tokens}, mesh)["t"]
+            possh = _batch_shardings({"p": pos}, mesh)["p"]
+            fn = jax.jit(model.decode_step,
+                         in_shardings=(psh, csh, tsh, possh),
+                         out_shardings=(None, csh),
+                         donate_argnums=(1,) if donate else ())
+            lowered = fn.lower(params, caches, tokens, pos)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    roof = rl.analyse(compiled, cfg, cell, n_dev)
+    out = {
+        "arch": arch, "shape": shape, "status": "ok", "variant": variant,
+        "mesh": list(mesh.devices.shape), "multi_pod": multi_pod,
+        "kind": cell.kind, "batch": cell.batch, "seq": cell.seq,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": (mem.argument_size_in_bytes
+                                    + mem.output_size_in_bytes
+                                    + mem.temp_size_in_bytes
+                                    - mem.alias_size_in_bytes),
+        },
+        "roofline": roof.to_dict(),
+    }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--variant", default="baseline",
+                    help=f"comma-sep of {sorted(VARIANTS)}")
+    args = ap.parse_args()
+
+    todo = []
+    if args.all:
+        for arch, shape, _ in cells_mod.all_cells():
+            todo.append((arch, shape))
+    else:
+        todo.append((args.arch, args.shape))
+
+    results = []
+    for arch, shape in todo:
+        try:
+            res = lower_cell(arch, shape, args.multi_pod,
+                             variant=args.variant)
+        except Exception as e:  # a failing cell is a bug — surface it loudly
+            res = {"arch": arch, "shape": shape, "status": "FAILED",
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+        results.append(res)
+        print(json.dumps({k: v for k, v in res.items() if k != "trace"}),
+              flush=True)
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            tag = "multipod" if args.multi_pod else "singlepod"
+            if args.variant != "baseline":
+                tag = f"{tag}__{args.variant.replace(',', '+')}"
+            fname = f"{arch}__{shape}__{tag}.json".replace("/", "_")
+            with open(os.path.join(args.out, fname), "w") as f:
+                json.dump(res, f, indent=1)
+
+    n_fail = sum(r["status"] == "FAILED" for r in results)
+    print(f"\n{len(results)} cells, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

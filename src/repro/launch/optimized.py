@@ -1,0 +1,86 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Final optimized sweep: per-cell best variants from the §Perf hillclimb.
+
+Baseline (paper-faithful sharding) and optimized runs are recorded
+SEPARATELY (results/dryrun vs results/dryrun_opt) so the reproduction and
+the beyond-paper gains are both visible (brief requirement).
+
+Variant policy (derived in EXPERIMENTS.md §Perf):
+  * train/prefill, dense-family archs  -> fsdp2d  (no TP activation traffic)
+  * train/prefill, MoE archs           -> moe_ep  (EP all_to_all dispatch)
+  * decode, every arch with KV caches  -> sp_attn (+ moe_ep for MoE)
+  * ssm decode (no attention)          -> baseline already optimal
+
+    PYTHONPATH=src python -m repro.launch.optimized [--multi-pod] \
+        --out results/dryrun_opt
+"""
+
+import argparse
+import json
+import traceback
+
+from repro.configs import ARCHS, get_config
+from repro.launch import cells as cells_mod
+from repro.launch.dryrun import lower_cell
+
+MOE = ("moonshot-v1-16b-a3b", "deepseek-moe-16b")
+
+
+def best_variant(arch: str, shape: str) -> str:
+    """Measured-best variant per cell class (EXPERIMENTS §Perf).
+
+    Negative results are honored: fsdp2d only helps when the global batch
+    covers every chip (train_4k: 256 seqs == 256 chips; prefill's batch 32
+    cannot, and fsdp2d regressed 10-90x there); sp_attn only helps when the
+    cache is seq-sharded (kv_heads % 16 != 0) and the batch splits the data
+    axis; EP MoE pays off for train/prefill token volumes, not single-token
+    decode.
+    """
+    cfg = get_config(arch)
+    kind = "train" if shape == "train_4k" else (
+        "prefill" if shape == "prefill_32k" else "decode")
+    cell = cells_mod.cell_of(arch, shape)
+    parts = []
+    if arch in MOE:
+        if kind in ("train", "prefill"):
+            parts.append("moe_ep")
+    elif kind == "train":
+        parts.append("fsdp2d")
+    if (kind == "decode" and cfg.pattern != ("ssm",)
+            and cfg.num_kv_heads % 16 != 0
+            and cell is not None and cell.batch % 16 == 0):
+        parts.append("sp_attn")
+    return ",".join(parts) if parts else "baseline"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="results/dryrun_opt")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    n_fail = 0
+    for arch, shape, cell in cells_mod.all_cells():
+        variant = best_variant(arch, shape)
+        try:
+            res = lower_cell(arch, shape, args.multi_pod, variant=variant)
+        except Exception as e:
+            res = {"arch": arch, "shape": shape, "status": "FAILED",
+                   "variant": variant, "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-1500:]}
+            n_fail += 1
+        res["variant"] = variant
+        print(json.dumps({k: v for k, v in res.items() if k != "trace"}),
+              flush=True)
+        tag = "multipod" if args.multi_pod else "singlepod"
+        fname = f"{arch}__{shape}__{tag}.json".replace("/", "_")
+        with open(os.path.join(args.out, fname), "w") as f:
+            json.dump(res, f, indent=1)
+    print(f"\noptimized sweep done, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model zoo: 10 assigned architectures on shared substrates."""
+
+from repro.models.model import Model  # noqa: F401

@@ -1,0 +1,310 @@
+"""GQA attention: chunked flash-style forward, KV caches, RoPE, local window.
+
+Pure-XLA (jnp + lax.scan) by design: dense matmul attention is already
+MXU-optimal under XLA fusion, and keeping it out of Pallas keeps
+``compiled.cost_analysis()`` FLOPs faithful for §Roofline (DESIGN.md §4).
+
+Three entry points:
+  * ``attend``       — full-sequence forward (train / prefill), online-softmax
+                       scan over KV chunks so the (S, T) score matrix never
+                       materialises beyond a chunk.
+  * ``decode_attend`` — single-token decode against a preallocated cache.
+  * caches           — ``init_cache`` (linear, global attention) and
+                       ``init_ring_cache`` (fixed window W, O(W) memory for
+                       500k-token contexts).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, pdtype_of
+from repro.sharding.specs import BATCH, MODEL, constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def make_attention(cfg: ModelConfig, key) -> Dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    pd = pdtype_of(cfg)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), pd),
+        "wk": dense_init(ks[1], (d, kv, hd), pd),
+        "wv": dense_init(ks[2], (d, kv, hd), pd),
+        "wo": dense_init(ks[3], (h, hd, d), pd,
+                         scale=1.0 / math.sqrt(h * hd * 2 * cfg.num_layers)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), pd)
+        p["bk"] = jnp.zeros((kv, hd), pd)
+        p["bv"] = jnp.zeros((kv, hd), pd)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, Dh], positions: [B, S] (absolute)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# projections
+# ---------------------------------------------------------------------------
+
+
+def project_qkv(p: Dict, x: jax.Array, cfg: ModelConfig,
+                positions: Optional[jax.Array]) -> Tuple[jax.Array, ...]:
+    """x: [B, S, D] -> q [B,S,H,Dh], k,v [B,S,KV,Dh] (roped if configured)."""
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dke->bske", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dke->bske", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = constrain(q, BATCH, None, MODEL, None)
+    k = constrain(k, BATCH, None, MODEL, None)
+    v = constrain(v, BATCH, None, MODEL, None)
+    if cfg.use_rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def project_out(p: Dict, o: jax.Array, x_dtype) -> jax.Array:
+    """o: [B, S, H, Dh] -> [B, S, D]."""
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"].astype(x_dtype))
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention
+# ---------------------------------------------------------------------------
+
+
+def _flash_stats(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 causal: bool, window: int,
+                 q_positions: jax.Array, kv_positions: jax.Array,
+                 kv_valid_len: Optional[jax.Array], kv_chunk: int):
+    """Online-softmax statistics (m, l, acc) — acc is the un-normalised
+    numerator, so partial results combine exactly across KV shards
+    (sequence-parallel attention)."""
+    b, sq, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(b, sq, kvh, g, hd) * scale
+    if sq == 1:
+        # single-token decode: the (Sq, ck) score tile is tiny regardless of
+        # chunking, and the reshape/swapaxes below would COPY the whole KV
+        # cache every step (2x decode HBM traffic, §Perf) — use one chunk
+        kv_chunk = t
+    n_chunks = max(1, t // kv_chunk)
+    assert t % n_chunks == 0, (t, kv_chunk)
+    ck = kv_chunk if t >= kv_chunk else t
+
+    if n_chunks == 1:
+        ks = k[None]
+        vs = v[None]
+        ps = kv_positions[None]
+    else:
+        ks = k.reshape(b, n_chunks, ck, kvh, hd).swapaxes(0, 1)
+        vs = v.reshape(b, n_chunks, ck, kvh, hd).swapaxes(0, 1)
+        ps = kv_positions.reshape(b, n_chunks, ck).swapaxes(0, 1)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kc, vc, pc = inp  # [B, ck, KV, Dh], [B, ck]
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kc).astype(jnp.float32)
+        mask = jnp.ones((b, sq, ck), bool)
+        if causal:
+            mask &= pc[:, None, :] <= q_positions[:, :, None]
+        if window > 0:
+            mask &= pc[:, None, :] > q_positions[:, :, None] - window
+        if kv_valid_len is not None:
+            mask &= pc < kv_valid_len[:, None]
+        mask &= pc[:, None, :] >= 0
+        s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p.astype(vc.dtype), vc).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, sq, kvh, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kvh, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, kvh, g, hd), jnp.float32)
+    if n_chunks == 1:
+        (m, l, acc), _ = step((m0, l0, a0), (ks[0], vs[0], ps[0]))
+    else:
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (ks, vs, ps))
+    return m, l, acc
+
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
+           causal: bool = True, window: int = 0,
+           q_positions: Optional[jax.Array] = None,
+           kv_positions: Optional[jax.Array] = None,
+           kv_valid_len: Optional[jax.Array] = None,
+           kv_chunk: int = 1024) -> jax.Array:
+    """Memory-efficient attention.
+
+    q: [B, Sq, H, Dh]; k, v: [B, T, KV, Dh]; H = KV * G.
+    q_positions/kv_positions: absolute positions [B, Sq] / [B, T] (default
+    aranges).  window > 0 masks kv_pos <= q_pos - window (sliding window).
+    kv_valid_len: [B] — cache fill level for decode.
+    Returns [B, Sq, H, Dh].
+    """
+    b, sq, h, hd = q.shape
+    t = k.shape[1]
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(sq), (b, sq))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+    m, l, acc = _flash_stats(
+        q, k, v, causal=causal, window=window, q_positions=q_positions,
+        kv_positions=kv_positions, kv_valid_len=kv_valid_len,
+        kv_chunk=kv_chunk)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV caches
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # [B, T, KV, Dh]
+    v: jax.Array          # [B, T, KV, Dh]
+    positions: jax.Array  # [B, T] absolute positions held per slot (-1 empty)
+    ring: bool            # static-ish flag array (bool[]) — ring vs linear
+
+
+def init_cache(b: int, t: int, kvh: int, hd: int, dtype,
+               ring: bool = False) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((b, t, kvh, hd), dtype),
+        v=jnp.zeros((b, t, kvh, hd), dtype),
+        positions=jnp.full((b, t), -1, jnp.int32),
+        ring=jnp.asarray(ring),
+    )
+
+
+def cache_insert(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
+                 positions: jax.Array) -> KVCache:
+    """Write S new entries. positions: [B, S] absolute token positions.
+    Linear cache: slot == position.  Ring cache: slot == position % W."""
+    t = cache.k.shape[1]
+    slots = jnp.where(cache.ring, positions % t, positions)
+    b_idx = jnp.arange(k_new.shape[0])[:, None]
+    k = cache.k.at[b_idx, slots].set(k_new.astype(cache.k.dtype))
+    v = cache.v.at[b_idx, slots].set(v_new.astype(cache.v.dtype))
+    pos = cache.positions.at[b_idx, slots].set(positions)
+    return KVCache(k, v, pos, cache.ring)
+
+
+def decode_attend(q: jax.Array, cache: KVCache, *, window: int = 0,
+                  q_positions: jax.Array, kv_chunk: int = 1024) -> jax.Array:
+    """q: [B, 1, H, Dh] against the cache; positions make masking exact for
+    both linear and ring layouts (empty slots carry position -1)."""
+    return attend(
+        q, cache.k, cache.v, causal=True, window=window,
+        q_positions=q_positions, kv_positions=cache.positions,
+        kv_chunk=min(kv_chunk, cache.k.shape[1]))
+
+
+def sp_insert_attend(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                     cache: KVCache, *, window: int = 0,
+                     q_positions: jax.Array, mesh, kv_chunk: int = 1024
+                     ) -> Tuple[jax.Array, KVCache]:
+    """Sequence-parallel cache insert + decode attention (beyond-paper).
+
+    The KV cache's seq dim is sharded over the ``model`` axis (the GQA
+    kv_heads < model-axis case).  Both halves of the step stay local:
+
+      * insert — only the shard owning slot ``pos % T`` (ring) / ``pos``
+        writes; a plain pjit scatter onto a seq-sharded cache makes GSPMD
+        all-gather the whole cache (the 30 GB/step + 50 GB peak observed on
+        qwen2 decode_32k, §Perf).
+      * attend — each shard runs flash over its local KV slice; the exact
+        softmax is reassembled from (m, l, acc) partials with a psum: an
+        O(B·H·Dh) collective instead of an O(B·T·KV·Dh) gather.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    b = q.shape[0]
+    data_ax = dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
+    m_ax = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    dp = "data" if (b % data_ax == 0 and data_ax > 1) else None
+    t_global = cache.k.shape[1]
+    t_loc = t_global // m_ax
+
+    def local_fn(qc, knc, vnc, kc, vc, pc, ring, qp):
+        shard = jax.lax.axis_index("model")
+        offset = shard * t_loc
+        # --- owner-local insert ---------------------------------------
+        slots = jnp.where(ring, qp % t_global, qp)      # [B, S_new] global
+        mine = (slots >= offset) & (slots < offset + t_loc)
+        li = jnp.clip(slots - offset, 0, t_loc - 1)
+        b_idx = jnp.arange(qc.shape[0])[:, None]
+        kc = kc.at[b_idx, li].set(
+            jnp.where(mine[..., None, None], knc.astype(kc.dtype),
+                      kc[b_idx, li]))
+        vc = vc.at[b_idx, li].set(
+            jnp.where(mine[..., None, None], vnc.astype(vc.dtype),
+                      vc[b_idx, li]))
+        pc = pc.at[b_idx, li].set(jnp.where(mine, qp, pc[b_idx, li]))
+        # --- local flash + exact LSE combine ---------------------------
+        m, l, acc = _flash_stats(
+            qc, kc, vc, causal=True, window=window, q_positions=qp,
+            kv_positions=pc, kv_valid_len=None,
+            kv_chunk=min(kv_chunk, kc.shape[1]))
+        gm = jax.lax.pmax(m, "model")
+        scale = jnp.exp(m - gm)
+        denom = jax.lax.psum(l * scale, "model")
+        num = jax.lax.psum(acc * scale[..., None], "model")
+        out = num / jnp.maximum(denom, 1e-30)[..., None]
+        bq, sq = qc.shape[:2]
+        out = out.reshape(bq, sq, qc.shape[2], qc.shape[3]).astype(qc.dtype)
+        return out, kc, vc, pc
+
+    fn = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(dp, None, None, None), P(dp, None, None, None),
+                  P(dp, None, None, None), P(dp, "model", None, None),
+                  P(dp, "model", None, None), P(dp, "model"), P(),
+                  P(dp, None)),
+        out_specs=(P(dp, None, None, None), P(dp, "model", None, None),
+                   P(dp, "model", None, None), P(dp, "model")),
+        check_vma=False)
+    out, k2, v2, p2 = fn(q, k_new, v_new, cache.k, cache.v, cache.positions,
+                         cache.ring, q_positions)
+    return out, KVCache(k2, v2, p2, cache.ring)

@@ -1,0 +1,147 @@
+"""Common building blocks: norms, embeddings, init, chunked cross-entropy."""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (He-ish, stddev 1/sqrt(fan_in))."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32)
+            * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def make_norm(cfg: ModelConfig, d: Optional[int] = None) -> PyTree:
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), pdtype_of(cfg))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), pdtype_of(cfg))
+    return p
+
+
+def apply_norm(p: PyTree, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / LM head
+# ---------------------------------------------------------------------------
+
+
+def make_embeddings(cfg: ModelConfig, key) -> Dict[str, jax.Array]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"tok": embed_init(k1, (cfg.vocab_size, cfg.d_model), pdtype_of(cfg))}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(k2, (cfg.d_model, cfg.vocab_size), pdtype_of(cfg))
+    if not cfg.use_rope:
+        p["pos"] = embed_init(k3, (cfg.max_position_actual(), cfg.d_model),
+                              pdtype_of(cfg))
+    return p
+
+
+def embed_tokens(p, tokens: jax.Array, cfg: ModelConfig,
+                 positions: Optional[jax.Array] = None) -> jax.Array:
+    x = jnp.take(p["tok"], tokens, axis=0).astype(dtype_of(cfg))
+    if not cfg.use_rope:
+        if positions is None:
+            positions = jnp.arange(tokens.shape[-1])
+        x = x + jnp.take(p["pos"], positions, axis=0).astype(dtype_of(cfg))
+    return x
+
+
+def lm_logits(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = p["tok"].T if cfg.tie_embeddings else p["head"]
+    return jnp.einsum("...d,dv->...v", x, w.astype(x.dtype))
+
+
+def sinusoidal_positions(length: int, d: int) -> jax.Array:
+    """Whisper-style sinusoidal table [length, d] (float32)."""
+    pos = jnp.arange(length)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    inv = jnp.exp(-math.log(10_000.0) * dim / (d // 2 - 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy: never materialise (B, S, V)
+# ---------------------------------------------------------------------------
+
+
+def chunked_cross_entropy(emb_params, x: jax.Array, targets: jax.Array,
+                          mask: jax.Array, cfg: ModelConfig,
+                          chunk: int = 512):
+    """Mean CE over valid tokens, computing logits in sequence chunks.
+
+    x: [B, S, D] final hidden states; targets/mask: [B, S].  The (B, S, V)
+    logits tensor (2.1 GB/chip for recurrentgemma's 256k vocab at 4k seq)
+    never exists: each scan step sees (B, chunk, V) and reduces immediately.
+    """
+    b, s, d = x.shape
+    if s % chunk:
+        chunk = s  # fallback for tiny smoke shapes
+    n_chunks = s // chunk
+    xs = x.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    ts = targets.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    ms = mask.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint  # recompute chunk logits in backward: the (B, chunk, V)
+    def step(carry, inp):  # tensor is never stored (8 chunks would be ~13 GB)
+        tot_nll, tot_cnt = carry
+        xc, tc, mc = inp
+        logits = lm_logits(emb_params, xc, cfg).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        return (tot_nll + jnp.sum(nll), tot_cnt + jnp.sum(mc)), None
+
+    (tot_nll, tot_cnt), _ = jax.lax.scan(
+        step, (jnp.float32(0), jnp.float32(0)), (xs, ts, ms))
+    return tot_nll / jnp.maximum(tot_cnt, 1.0)

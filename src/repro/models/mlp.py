@@ -1,0 +1,39 @@
+"""Dense MLP: gated (SwiGLU/GeGLU) or plain 4x (GELU) variants."""
+
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import activation, dense_init, pdtype_of
+from repro.sharding.specs import BATCH, MODEL, constrain
+
+
+def make_mlp(cfg: ModelConfig, key, d_ff: int = 0) -> Dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    pd = pdtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    out_scale = 1.0 / math.sqrt(f * 2 * cfg.num_layers)
+    p = {
+        "w1": dense_init(ks[0], (d, f), pd),
+        "w2": dense_init(ks[1], (f, d), pd, scale=out_scale),
+    }
+    if cfg.gated_mlp:
+        p["wg"] = dense_init(ks[2], (d, f), pd)
+    return p
+
+
+def apply_mlp(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = activation(cfg.act)
+    h = jnp.einsum("bsd,df->bsf", x, p["w1"].astype(x.dtype))
+    if cfg.gated_mlp:
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))
+        h = act(g) * h
+    else:
+        h = act(h)
+    h = constrain(h, BATCH, None, MODEL)
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(x.dtype))

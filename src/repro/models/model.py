@@ -1,0 +1,329 @@
+"""Model facade: init / loss / prefill / decode for every assigned arch."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tfm
+from repro.models.common import (
+    apply_norm,
+    chunked_cross_entropy,
+    dtype_of,
+    embed_tokens,
+    lm_logits,
+    make_embeddings,
+    make_norm,
+    sinusoidal_positions,
+)
+from repro.sharding.specs import BATCH, constrain
+
+PyTree = Any
+
+
+def _stack_trees(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+class Model:
+    """Functional model bound to a ModelConfig. All methods are pure."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------
+    # params
+    # ------------------------------------------------------------------
+
+    def init(self, rng: jax.Array) -> PyTree:
+        cfg = self.cfg
+        keys = jax.random.split(rng, 8)
+        params: Dict[str, PyTree] = {
+            "emb": make_embeddings(cfg, keys[0]),
+            "final_norm": make_norm(cfg),
+        }
+        # leading dense layers (deepseek)
+        if cfg.first_dense_layers:
+            params["pre"] = [
+                tfm.make_block(cfg, "dense_mlp", jax.random.fold_in(keys[1], i))
+                for i in range(cfg.first_dense_layers)
+            ]
+        # stacked periods
+        np_ = cfg.num_periods()
+        if np_:
+            periods = []
+            for i in range(np_):
+                kp = jax.random.fold_in(keys[2], i)
+                periods.append({
+                    f"pos{j}": tfm.make_block(cfg, kind,
+                                              jax.random.fold_in(kp, j))
+                    for j, kind in enumerate(self._decoder_pattern())
+                })
+            params["stack"] = _stack_trees(periods)
+        # remainder
+        tail = cfg.tail_kinds()
+        if tail:
+            params["tail"] = [
+                tfm.make_block(cfg, self._map_kind(kind),
+                               jax.random.fold_in(keys[3], i))
+                for i, kind in enumerate(tail)
+            ]
+        # encoder (whisper)
+        if cfg.encoder_layers:
+            enc_periods = [
+                {"pos0": tfm.make_block(cfg, "enc_attn",
+                                        jax.random.fold_in(keys[4], i))}
+                for i in range(cfg.encoder_layers)
+            ]
+            params["enc_stack"] = _stack_trees(enc_periods)
+            params["enc_norm"] = make_norm(cfg)
+        return params
+
+    def abstract_params(self) -> PyTree:
+        return jax.eval_shape(self.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    def _map_kind(self, kind: str) -> str:
+        return "cross" if (self.cfg.encoder_layers and kind == "attn") else kind
+
+    def _decoder_pattern(self) -> Tuple[str, ...]:
+        return tuple(self._map_kind(k) for k in self.cfg.pattern)
+
+    # ------------------------------------------------------------------
+    # forward
+    # ------------------------------------------------------------------
+
+    def _encode(self, params: PyTree, frames: jax.Array) -> jax.Array:
+        """Whisper encoder over stub frame embeddings [B, T, D]."""
+        cfg = self.cfg
+        x = frames.astype(dtype_of(cfg))
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model
+                                     ).astype(x.dtype)[None]
+        pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        x, _, _ = tfm.stack_forward(params["enc_stack"], x, cfg,
+                                    positions=pos, kinds=("enc_attn",))
+        return apply_norm(params["enc_norm"], x, cfg)
+
+    def _embed_inputs(self, params, batch) -> Tuple[jax.Array, jax.Array, int]:
+        """Returns (x, positions, n_prefix)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s_text = tokens.shape
+        if cfg.frontend == "patch":
+            prefix = batch["prefix_embeds"].astype(dtype_of(cfg))
+            npre = prefix.shape[1]
+            pos = jnp.broadcast_to(jnp.arange(npre + s_text),
+                                   (b, npre + s_text))
+            x_tok = embed_tokens(params["emb"], tokens, cfg,
+                                 positions=pos[0, npre:])
+            x = jnp.concatenate([prefix, x_tok], axis=1)
+            return x, pos, npre
+        pos = jnp.broadcast_to(jnp.arange(s_text), (b, s_text))
+        x = embed_tokens(params["emb"], tokens, cfg, positions=pos[0])
+        return x, pos, 0
+
+    def _body(self, params, x, positions, caches=None, memory=None):
+        """pre -> stack -> tail. Returns (x, aux, caches')."""
+        cfg = self.cfg
+        aux_all: Dict[str, jax.Array] = {}
+        new_caches: Dict[str, PyTree] = {}
+        c_pre = None if caches is None else caches.get("pre")
+        if cfg.first_dense_layers:
+            out_pre = []
+            for i, bp in enumerate(params["pre"]):
+                c = None if c_pre is None else c_pre[i]
+                x, aux, nc = tfm.block_forward(
+                    bp, x, cfg, "dense_mlp", positions=positions, cache=c,
+                    memory=memory)
+                out_pre.append(nc)
+                aux_all.update(aux)
+            new_caches["pre"] = out_pre
+        if "stack" in params:
+            c_stack = None if caches is None else caches.get("stack")
+            x, aux, cs = tfm.stack_forward(
+                params["stack"], x, cfg, positions=positions,
+                caches=c_stack, memory=memory,
+                kinds=self._decoder_pattern())
+            for k2, v in aux.items():
+                aux_all[k2] = aux_all.get(k2, 0.0) + v
+            new_caches["stack"] = cs
+        if "tail" in params:
+            c_tail = None if caches is None else caches.get("tail")
+            out_tail = []
+            for i, (bp, kind) in enumerate(
+                    zip(params["tail"], self.cfg.tail_kinds())):
+                c = None if c_tail is None else c_tail[i]
+                x, aux, nc = tfm.block_forward(
+                    bp, x, cfg, self._map_kind(kind), positions=positions,
+                    cache=c, memory=memory)
+                out_tail.append(nc)
+                aux_all.update(aux)
+            new_caches["tail"] = out_tail
+        x = apply_norm(params["final_norm"], x, cfg)
+        return x, aux_all, (new_caches if caches is not None else None)
+
+    # ------------------------------------------------------------------
+    # training loss
+    # ------------------------------------------------------------------
+
+    def loss_fn(self, params: PyTree, batch: Dict[str, jax.Array]
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        memory = None
+        if cfg.encoder_layers:
+            memory = self._encode(params, batch["frames"])
+        x, positions, npre = self._embed_inputs(params, batch)
+        x = constrain(x, BATCH, None, None)
+        x, aux, _ = self._body(params, x, positions, memory=memory)
+        if npre:
+            x = x[:, npre:]
+        mask = batch.get("loss_mask",
+                         jnp.ones_like(batch["targets"], jnp.float32))
+        ce = chunked_cross_entropy(params["emb"], x, batch["targets"],
+                                   mask.astype(jnp.float32), cfg)
+        loss = ce
+        if "moe_lb_loss" in aux:
+            loss = loss + 1e-2 * aux["moe_lb_loss"] + 1e-3 * aux["moe_z_loss"]
+        metrics = {"ce": ce, "loss": loss}
+        for k2 in ("moe_lb_loss", "moe_z_loss"):
+            if k2 in aux:
+                metrics[k2] = aux[k2]
+        return loss, metrics
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+
+    def init_caches(self, b: int, max_len: int, enc_len: int = 0) -> PyTree:
+        cfg = self.cfg
+        dt = dtype_of(cfg)
+        kv, hd = cfg.num_kv_heads, cfg.head_dim
+
+        def one(kind: str) -> PyTree:
+            if kind in ("attn", "dense_mlp"):
+                return attn_mod.init_cache(b, max_len, kv, hd, dt)
+            if kind == "local_attn":
+                return attn_mod.init_cache(
+                    b, min(cfg.local_window, max_len), kv, hd, dt, ring=True)
+            if kind == "cross":
+                return {
+                    "self": attn_mod.init_cache(
+                        b, min(cfg.decoder_max_len, max_len), kv, hd, dt),
+                    "mem_k": jnp.zeros((b, enc_len, kv, hd), dt),
+                    "mem_v": jnp.zeros((b, enc_len, kv, hd), dt),
+                }
+            if kind == "ssm":
+                return ssm_mod.init_ssm_cache(cfg, b, dt)
+            if kind == "rglru":
+                return rglru_mod.init_rglru_cache(cfg, b, dt)
+            raise ValueError(kind)
+
+        caches: Dict[str, PyTree] = {}
+        if cfg.first_dense_layers:
+            caches["pre"] = [one("dense_mlp")
+                             for _ in range(cfg.first_dense_layers)]
+        np_ = cfg.num_periods()
+        if np_:
+            period = {f"pos{j}": one(kind)
+                      for j, kind in enumerate(self._decoder_pattern())}
+            if cfg.sp_decode_attn:
+                # per-layer list: stacking shard_map outputs forces a layout
+                # change that GSPMD resolves by replicating the whole stacked
+                # cache (2x15 GB/step gathers on qwen2 decode, §Perf) —
+                # separate leaves keep every cache shard-local
+                caches["stack"] = [
+                    jax.tree_util.tree_map(jnp.copy, period)
+                    for _ in range(np_)]
+            else:
+                caches["stack"] = jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(x[None], (np_,) + x.shape),
+                    period)
+        tail = cfg.tail_kinds()
+        if tail:
+            caches["tail"] = [one(self._map_kind(k)) for k in tail]
+        return caches
+
+    def prefill(self, params: PyTree, batch: Dict[str, jax.Array],
+                max_len: int) -> Tuple[jax.Array, PyTree]:
+        """Process the prompt; returns (last-token logits [B, V], caches)."""
+        cfg = self.cfg
+        memory = None
+        enc_len = 0
+        if cfg.encoder_layers:
+            memory = self._encode(params, batch["frames"])
+            enc_len = memory.shape[1]
+        x, positions, npre = self._embed_inputs(params, batch)
+        caches = self.init_caches(x.shape[0], max_len, enc_len)
+        x, _, caches = self._body(params, x, positions, caches=caches,
+                                  memory=memory)
+        logits = lm_logits(params["emb"], x[:, -1], cfg)
+        return logits, caches
+
+    def extend_step(self, params: PyTree, caches: PyTree, tokens: jax.Array,
+                    pos0: jax.Array) -> Tuple[jax.Array, PyTree]:
+        """Extend warm caches by K tokens in ONE forward (speculative-decode
+        verification).  tokens: [B, K]; pos0: [B] absolute position of
+        tokens[:, 0].  Returns (logits [B, K, V], caches').
+
+        Exact for every layer family: attention re-reads the whole cache
+        (positions mask), SSM/RG-LRU thread initial recurrent state +
+        conv left-context.  Rollback after partial acceptance is free —
+        pytrees are immutable, the caller just keeps the pre-extend caches.
+        """
+        cfg = self.cfg
+        b, k = tokens.shape
+        positions = pos0[:, None] + jnp.arange(k)[None, :]
+        x = embed_tokens(
+            params["emb"], tokens, cfg,
+            positions=None if cfg.use_rope else jnp.clip(
+                positions, 0, cfg.max_position_actual() - 1))
+        x = constrain(x, BATCH, None, None)
+        x, _, new_caches = self._body(params, x, positions, caches=caches)
+        logits = lm_logits(params["emb"], x, cfg)
+        return logits, new_caches
+
+    def decode_step(self, params: PyTree, caches: PyTree, tokens: jax.Array,
+                    pos: jax.Array) -> Tuple[jax.Array, PyTree]:
+        """One token per sequence. tokens: [B, 1]; pos: [B] absolute position
+        of that token. Returns (logits [B, V], caches')."""
+        cfg = self.cfg
+        positions = pos[:, None]
+        x = embed_tokens(
+            params["emb"], tokens, cfg,
+            positions=None if cfg.use_rope else jnp.clip(
+                positions, 0, cfg.max_position_actual() - 1))
+        x = constrain(x, BATCH, None, None)
+
+        new_caches: Dict[str, PyTree] = {}
+        if cfg.first_dense_layers:
+            out = []
+            for i, bp in enumerate(params["pre"]):
+                x, nc = tfm.block_decode(bp, x, cfg, "dense_mlp",
+                                         positions=positions,
+                                         cache=caches["pre"][i])
+                out.append(nc)
+            new_caches["pre"] = out
+        if "stack" in params:
+            x, cs = tfm.stack_decode(params["stack"], x, cfg,
+                                     positions=positions,
+                                     caches=caches["stack"],
+                                     kinds=self._decoder_pattern())
+            new_caches["stack"] = cs
+        if "tail" in params:
+            out = []
+            for i, (bp, kind) in enumerate(
+                    zip(params["tail"], cfg.tail_kinds())):
+                x, nc = tfm.block_decode(bp, x, cfg, self._map_kind(kind),
+                                         positions=positions,
+                                         cache=caches["tail"][i])
+                out.append(nc)
+            new_caches["tail"] = out
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = lm_logits(params["emb"], x[:, -1], cfg)
+        return logits, new_caches

@@ -1,0 +1,255 @@
+"""Mixture-of-Experts block: shared + fine-grained routed experts (top-k).
+
+DeepSeekMoE / Moonlight style: ``num_shared_experts`` always-on experts (fused
+into one wider MLP — mathematically identical for gated MLPs) plus
+``num_experts`` routed experts with top-k gating.
+
+Dispatch is **sort-based with fixed capacity** (MaxText "dropping" strategy):
+argsort tokens by expert id, gather into an (E, C, D) tile, grouped einsum,
+weighted scatter-combine.  No one-hot dispatch einsum — HLO FLOPs stay equal
+to useful expert FLOPs, which keeps §Roofline's MODEL_FLOPS/HLO_FLOPs honest.
+Expert-parallel: the E dim of the expert tiles shards over the ``model`` mesh
+axis (64 experts / 16 = 4 per shard); XLA inserts the dispatch/combine
+all-to-alls from the sharding constraints.
+
+The router's expert-choice histogram is also an MCPrioQ customer: the serving
+engine tracks online expert popularity with the paper's structure
+(DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import activation, dense_init, pdtype_of
+from repro.models.mlp import apply_mlp, make_mlp
+from repro.sharding.specs import BATCH, DATA, MODEL, constrain
+
+
+def make_moe(cfg: ModelConfig, key) -> Dict:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    pd = pdtype_of(cfg)
+    ks = jax.random.split(key, 5)
+    out_scale = 1.0 / math.sqrt(f * 2 * cfg.num_layers)
+    p = {
+        "router": dense_init(ks[0], (d, e), pd, scale=0.02),
+        "we1": dense_init(ks[1], (e, d, f), pd),
+        "we2": dense_init(ks[2], (e, f, d), pd, scale=out_scale),
+    }
+    if cfg.gated_mlp:
+        p["weg"] = dense_init(ks[3], (e, d, f), pd)
+    if cfg.num_shared_experts:
+        shared_cfg = cfg  # same act/gating; width = n_shared * expert width
+        p["shared"] = make_mlp(shared_cfg, ks[4],
+                               d_ff=cfg.num_shared_experts * f)
+    return p
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    fair = tokens * cfg.experts_per_token / cfg.num_experts
+    cap = int(math.ceil(fair * cfg.capacity_factor / 128.0)) * 128
+    return max(cap, 128)
+
+
+def apply_moe_ep(p: Dict, x: jax.Array, cfg: ModelConfig
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Expert-parallel MoE with explicit all_to_all dispatch (shard_map).
+
+    §Perf hillclimb variant: the dense-pjit path's scatter-add combine
+    compiles to TB-scale dense all-reduces; here tokens are *routed* to the
+    expert-owning shards with the same fixed-capacity bucket + all_to_all
+    pattern as the paper's node-sharded MCPrioQ (core/sharded.py), computed
+    locally, and routed back — collective volume is O(tokens·D) instead of
+    O(tokens·D·model_axis).  Exact same math as apply_moe up to capacity
+    drop boundaries.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.sharded import _build_buckets
+    from repro.sharding.specs import batch_axes, current_mesh
+
+    mesh = current_mesh()
+    assert mesh is not None, "apply_moe_ep needs an active mesh"
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    m_ax = sizes.get("model", 1)
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    e_loc = e // m_ax
+    dpa = tuple(a for a in batch_axes(mesh) if a != "model")
+    dp_size = 1
+    for a in dpa:
+        dp_size *= sizes[a]
+    bspec = dpa if (b % dp_size == 0 and dp_size > 1) else None
+    sspec = "model" if s % m_ax == 0 else None
+    x_spec = P(bspec, sspec, None)
+    t_loc = (b // (dp_size if bspec else 1)) * (s // (m_ax if sspec else 1))
+    cap = max(64, int(math.ceil(cfg.capacity_factor * t_loc * k / m_ax
+                                / 8.0)) * 8)
+    cap2 = max(64, int(math.ceil(cfg.capacity_factor * m_ax * cap / e_loc
+                                 / 8.0)) * 8)
+
+    def local_fn(xc, router_w, we1, weg, we2):
+        bl, sl, _ = xc.shape
+        n = bl * sl
+        xt = xc.reshape(n, d)
+        logits = jnp.einsum("td,de->te", xt,
+                            router_w.astype(xc.dtype)).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, k)
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+        flat_e = top_e.reshape(-1).astype(jnp.int32)
+        flat_t = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+        flat_p = top_p.reshape(-1)
+        owner = flat_e // e_loc
+        (b_t, b_e, b_p), pair_pos, dropped = _build_buckets(
+            [flat_t, flat_e, flat_p.astype(jnp.float32)], owner, m_ax, cap)
+        send_x = xt[jnp.clip(b_t, 0, n - 1)] * (b_t >= 0)[..., None]
+        # --- route to expert owners ------------------------------------
+        recv_x = jax.lax.all_to_all(send_x, "model", 0, 0, tiled=True)
+        recv_e = jax.lax.all_to_all(b_e, "model", 0, 0, tiled=True)
+        shard = jax.lax.axis_index("model")
+        local_e = jnp.where(recv_e >= 0, recv_e - shard * e_loc, -1)
+        # --- group by local expert and run the grouped MLP -------------
+        rx = recv_x.reshape(-1, d)
+        re = local_e.reshape(-1)
+        (g_i,), g_pos, dropped2 = _build_buckets(
+            [jnp.arange(rx.shape[0], dtype=jnp.int32)],
+            jnp.where(re >= 0, re, e_loc), e_loc + 1, cap2)
+        g_i = g_i[:e_loc]                                   # drop junk row
+        xe = rx[jnp.clip(g_i, 0, rx.shape[0] - 1)] * (g_i >= 0)[..., None]
+        act = activation(cfg.act)
+        hh = jnp.einsum("ecd,edf->ecf", xe, we1.astype(xc.dtype))
+        if cfg.gated_mlp:
+            gg = jnp.einsum("ecd,edf->ecf", xe, weg.astype(xc.dtype))
+            hh = act(gg) * hh
+        else:
+            hh = act(hh)
+        ye = jnp.einsum("ecf,efd->ecd", hh, we2.astype(xc.dtype))
+        # scatter grouped outputs back to recv-slot order (local)
+        back = jnp.zeros((rx.shape[0], d), ye.dtype)
+        ok_g = (g_i >= 0)
+        back = back.at[jnp.clip(g_i, 0, rx.shape[0] - 1).reshape(-1)].add(
+            (ye * ok_g[..., None]).reshape(-1, d))
+        back = back.reshape(m_ax, cap, d)
+        # --- route results home + weighted combine (all local) ---------
+        home = jax.lax.all_to_all(back, "model", 0, 0, tiled=True)
+        ok_pair = pair_pos < cap
+        gi = jnp.clip(pair_pos, 0, cap - 1)
+        vals = home[owner, gi]                              # [n*k, d]
+        wgt = jnp.where(ok_pair, flat_p, 0.0).astype(ye.dtype)
+        out = jnp.sum((vals * wgt[:, None]).reshape(n, k, d), axis=1)
+        # --- aux (reduced over every sharded axis) ----------------------
+        red = (dpa + ("model",)) if bspec else ("model",)
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.zeros((e,), jnp.float32).at[flat_e].add(1.0) / (n * k)
+        lb = e * jnp.sum(jax.lax.pmean(me, red) * jax.lax.pmean(ce, red))
+        z = jax.lax.pmean(
+            jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1))), red)
+        drop_tot = jax.lax.psum(dropped + dropped2, red)
+        cnt = jax.lax.psum(
+            jnp.zeros((e,), jnp.int32).at[flat_e].add(1), red)
+        return out.reshape(bl, sl, d).astype(xc.dtype), lb, z, drop_tot, cnt
+
+    fn = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(x_spec, P(None, None), P("model", None, None),
+                  P("model", None, None), P("model", None, None)),
+        out_specs=(x_spec, P(), P(), P(), P()),
+        check_vma=False)
+    weg = p.get("weg", p["we1"])  # placeholder when ungated (unused)
+    out, lb, z, drop_tot, cnt = fn(x, p["router"], p["we1"], weg, p["we2"])
+    if cfg.num_shared_experts:
+        out = out + apply_mlp(p["shared"], x, cfg)
+    aux = {"moe_lb_loss": lb, "moe_z_loss": z, "moe_dropped": drop_tot,
+           "moe_expert_counts": cnt}
+    return out, aux
+
+
+def apply_moe(p: Dict, x: jax.Array, cfg: ModelConfig
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [B, S, D] -> (out [B, S, D], aux metrics incl. load-balance loss)."""
+    if cfg.moe_impl == "ep":
+        from repro.sharding.specs import current_mesh
+        if current_mesh() is not None:
+            return apply_moe_ep(p, x, cfg)
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    n = b * s
+    xt = x.reshape(n, d)
+
+    logits = jnp.einsum("td,de->te", xt, p["router"].astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                     # [n, k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)     # renormalise
+
+    # ---- sort-based dispatch with fixed capacity ----------------------
+    cap = _capacity(n, cfg)
+    flat_e = top_e.reshape(-1)                                  # [n*k]
+    flat_t = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)      # token ids
+    flat_p = top_p.reshape(-1)
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    se, st, sp = flat_e[sort_idx], flat_t[sort_idx], flat_p[sort_idx]
+    starts = jnp.searchsorted(se, jnp.arange(e, dtype=se.dtype))
+    pos = jnp.arange(n * k, dtype=jnp.int32) - starts[se]       # slot in expert
+    keep = pos < cap
+
+    # gather tokens into expert tiles [E, C, D] (dropped slots read token 0
+    # and are zero-masked)
+    tok_at = jnp.zeros((e, cap), jnp.int32).at[se, pos].set(
+        st, mode="drop")
+    gate_at = jnp.zeros((e, cap), jnp.float32).at[se, pos].set(
+        jnp.where(keep, sp, 0.0), mode="drop")
+    xe = xt[tok_at]                                             # [E, C, D]
+    xe = xe * (gate_at[..., None] > 0)
+    # EP over experts AND capacity over the data axis: the (E, C, D) dispatch
+    # buffer never exists unsharded (2 GB/chip otherwise at 1M tokens)
+    xe = constrain(xe, MODEL, DATA, None)
+
+    # ---- grouped expert MLP -------------------------------------------
+    act = activation(cfg.act)
+    h = jnp.einsum("ecd,edf->ecf", xe, p["we1"].astype(x.dtype))
+    if cfg.gated_mlp:
+        g = jnp.einsum("ecd,edf->ecf", xe, p["weg"].astype(x.dtype))
+        h = act(g) * h
+    else:
+        h = act(h)
+    h = constrain(h, MODEL, DATA, None)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["we2"].astype(x.dtype))
+
+    # ---- weighted combine back to tokens ------------------------------
+    if cfg.moe_combine == "gather":
+        # invert the sort: each (token, k) pair gathers its expert output —
+        # no scatter-add, so SPMD reshards only the gathered values instead
+        # of all-reducing a dense (n, d) buffer (§Perf hillclimb variant)
+        pos_u = jnp.zeros((n * k,), jnp.int32).at[sort_idx].set(pos)
+        keep_u = pos_u < cap
+        slot = jnp.clip(pos_u, 0, cap - 1)
+        vals = ye[flat_e, slot]                         # [n*k, d]
+        wgt = jnp.where(keep_u, flat_p, 0.0).astype(ye.dtype)
+        out = jnp.sum((vals * wgt[:, None]).reshape(n, k, d), axis=1)
+    else:
+        yw = ye * gate_at[..., None].astype(ye.dtype)
+        out = jnp.zeros((n, d), ye.dtype).at[tok_at.reshape(-1)].add(
+            yw.reshape(-1, d))
+    out = constrain(out, BATCH, None)
+
+    if cfg.num_shared_experts:
+        out = out + apply_mlp(p["shared"], x, cfg).reshape(n, d)
+
+    # ---- aux: load balance + router z-loss ----------------------------
+    me = jnp.mean(probs, axis=0)                                # [e]
+    ce = jnp.zeros((e,), jnp.float32).at[flat_e].add(1.0) / (n * k)
+    lb_loss = e * jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    dropped = jnp.sum((~keep).astype(jnp.int32))
+    aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss,
+           "moe_dropped": dropped,
+           "moe_expert_counts": jnp.zeros((e,), jnp.int32).at[flat_e].add(1)}
+    return out.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,150 @@
+"""RG-LRU recurrence block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block = gate branch (GeLU) x recurrence branch (conv4 -> RG-LRU) -> out proj.
+RG-LRU: r_t = sigmoid(block-diag gate), i_t = sigmoid(block-diag gate),
+a_t = a^{c r_t} with a = sigmoid(Lambda);
+h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * u_t).
+
+Train: jax.lax.associative_scan over the linear recurrence (log-depth on
+sequence — the sub-quadratic property that makes long_500k runnable).
+Decode: one multiply-add — O(1) state.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, pdtype_of
+from repro.sharding.specs import BATCH, MODEL, constrain
+
+
+class RGLRUCache(NamedTuple):
+    h: jax.Array          # [B, W] recurrent state
+    conv_buf: jax.Array   # [B, K-1, W]
+
+
+def make_rglru(cfg: ModelConfig, key) -> Dict:
+    d, w, heads = cfg.d_model, cfg.rnn_width, cfg.num_heads
+    bw = w // heads
+    pd = pdtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    # Lambda init so a in (0.9, 0.999): sigmoid^-1 over that range
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u) - jnp.log1p(-u)
+    return {
+        "wx": dense_init(ks[1], (d, w), pd),
+        "wgate": dense_init(ks[2], (d, w), pd),
+        "conv_w": dense_init(ks[3], (cfg.ssm_conv, w), pd,
+                             scale=1.0 / math.sqrt(cfg.ssm_conv)),
+        "conv_b": jnp.zeros((w,), pd),
+        "ga_w": dense_init(ks[4], (heads, bw, bw), pd),
+        "ga_b": jnp.zeros((heads, bw), pd),
+        "gi_w": dense_init(ks[5], (heads, bw, bw), pd),
+        "gi_b": jnp.zeros((heads, bw), pd),
+        "lambda_p": lam,
+        "out_proj": dense_init(
+            jax.random.fold_in(key, 7), (w, d), pd,
+            scale=1.0 / math.sqrt(w * 2 * cfg.num_layers)),
+    }
+
+
+def _conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    k = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(k):
+        out = out + pad[:, i : i + u.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _gates(p: Dict, u: jax.Array, cfg: ModelConfig):
+    """Block-diagonal r/i gates + log recurrence weight. u: [B, S, W]."""
+    b, s, w = u.shape
+    heads = cfg.num_heads
+    uh = u.reshape(b, s, heads, w // heads)
+    r = jax.nn.sigmoid(jnp.einsum("bshi,hij->bshj", uh,
+                                  p["ga_w"].astype(u.dtype)).astype(jnp.float32)
+                       + p["ga_b"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bshi,hij->bshj", uh,
+                                  p["gi_w"].astype(u.dtype)).astype(jnp.float32)
+                       + p["gi_b"].astype(jnp.float32))
+    r = r.reshape(b, s, w)
+    i = i.reshape(b, s, w)
+    log_a = -cfg.rglru_c * r * jax.nn.softplus(-p["lambda_p"])  # log sigmoid
+    return i, log_a
+
+
+def apply_rglru(p: Dict, x: jax.Array, cfg: ModelConfig,
+                return_state: bool = False,
+                initial: "RGLRUCache | None" = None):
+    """Full-sequence forward. x: [B, S, D] -> [B, S, D]
+    (plus an RGLRUCache when ``return_state``).
+
+    ``initial`` threads a previous cache: conv left-context + recurrent h0
+    (h_t = (prod a_1..t) h0 + scan_t), making K-token cache extension exact.
+    A zero cache reproduces fresh prefill.
+    """
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x,
+                                  p["wgate"].astype(x.dtype)))
+    u_new = jnp.einsum("bsd,dw->bsw", x, p["wx"].astype(x.dtype))
+    u_new = constrain(u_new, BATCH, None, MODEL)
+    if initial is not None:
+        u_raw = jnp.concatenate(
+            [initial.conv_buf.astype(u_new.dtype), u_new], axis=1)
+    else:
+        u_raw = u_new
+    u = _conv(u_raw, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    if initial is not None:
+        u = u[:, p["conv_w"].shape[0] - 1:, :]
+    i, log_a = _gates(p, u, cfg)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bt = beta * (i * u.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    a_cum, h = jax.lax.associative_scan(combine, (a, bt), axis=1)
+    if initial is not None:
+        h = h + a_cum * initial.h[:, None, :]
+    y = h.astype(x.dtype) * gate
+    out = jnp.einsum("bsw,wd->bsd", y, p["out_proj"].astype(x.dtype))
+    if return_state:
+        k = p["conv_w"].shape[0]
+        cache = RGLRUCache(h=h[:, -1],
+                           conv_buf=u_raw[:, u_raw.shape[1] - (k - 1):])
+        return out, cache
+    return out
+
+
+def init_rglru_cache(cfg: ModelConfig, b: int, dtype) -> RGLRUCache:
+    return RGLRUCache(
+        h=jnp.zeros((b, cfg.rnn_width), jnp.float32),
+        conv_buf=jnp.zeros((b, cfg.ssm_conv - 1, cfg.rnn_width), dtype),
+    )
+
+
+def decode_rglru(p: Dict, x: jax.Array, cache: RGLRUCache, cfg: ModelConfig
+                 ) -> Tuple[jax.Array, RGLRUCache]:
+    """Single-token step. x: [B, 1, D]."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x,
+                                  p["wgate"].astype(x.dtype)))
+    u = jnp.einsum("bsd,dw->bsw", x, p["wx"].astype(x.dtype))
+    window = jnp.concatenate([cache.conv_buf, u], axis=1)   # [B, K, W]
+    w = p["conv_w"].astype(x.dtype)
+    u1 = (jnp.einsum("bkw,kw->bw", window, w)
+          + p["conv_b"].astype(x.dtype))[:, None, :]
+    i, log_a = _gates(p, u1, cfg)
+    a = jnp.exp(log_a[:, 0])
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a[:, 0]), 1e-12))
+    h = cache.h * a + beta * (i[:, 0] * u1[:, 0].astype(jnp.float32))
+    y = h[:, None, :].astype(x.dtype) * gate
+    out = jnp.einsum("bsw,wd->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, RGLRUCache(h=h, conv_buf=window[:, 1:, :])

@@ -1,0 +1,219 @@
+"""Mamba-2 SSD (state-space duality) layer: chunked train scan + O(1) decode.
+
+Faithful to the SSD block decomposition (arXiv:2405.21060): intra-chunk
+quadratic term + inter-chunk state recurrence.  The chunk length is the
+TPU tiling knob (ssm_chunk, default 256 = two MXU tiles).  Decode carries a
+(B, H, P, N) state and a depthwise-conv ring buffer — constant memory at
+524k-token contexts (the long_500k cell).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, pdtype_of
+from repro.sharding.specs import BATCH, MODEL, constrain
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array      # [B, H, P, N] running SSM state
+    conv_buf: jax.Array   # [B, K-1, conv_dim] last inputs for the conv
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def make_ssm(cfg: ModelConfig, key) -> Dict:
+    d, din, h = cfg.d_model, cfg.d_inner, cfg.ssm_heads
+    g, n, kk = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_conv
+    pd = pdtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * din + 2 * g * n + h   # z, x, B, C, dt
+    dt = jnp.exp(jax.random.uniform(ks[2], (h,), jnp.float32,
+                                    math.log(1e-3), math.log(1e-1)))
+    return {
+        "in_proj": dense_init(ks[0], (d, in_dim), pd),
+        "conv_w": dense_init(ks[1], (kk, conv_dim(cfg)), pd,
+                             scale=1.0 / math.sqrt(kk)),
+        "conv_b": jnp.zeros((conv_dim(cfg),), pd),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "ssm_D": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((din,), pd),
+        "out_proj": dense_init(ks[3], (din, d), pd,
+                               scale=1.0 / math.sqrt(din * 2 * cfg.num_layers)),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq. xbc: [B, S, C], w: [K, C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(k):
+        out = out + pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :]
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _split_proj(p, x, cfg: ModelConfig):
+    din, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    zxbcdt = constrain(zxbcdt, BATCH, None, MODEL)
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din : din + conv_dim(cfg)]
+    dt = zxbcdt[..., din + conv_dim(cfg) :]
+    assert dt.shape[-1] == h
+    return z, xbc, dt
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array,
+                eps: float) -> jax.Array:
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    return (y * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32))
+
+
+def apply_ssm(p: Dict, x: jax.Array, cfg: ModelConfig,
+              return_state: bool = False,
+              initial: "SSMCache | None" = None):
+    """Full-sequence SSD forward. x: [B, S, D] -> [B, S, D]
+    (plus an SSMCache when ``return_state`` — the prefill->decode handoff).
+
+    ``initial`` threads a previous cache through: the conv sees the last
+    K-1 pre-projection inputs and the state recurrence starts from
+    ``initial.state`` — this is what makes K-token cache *extension* exact
+    (speculative-decoding verification), and a zero cache reproduces the
+    fresh prefill.
+    """
+    b, s, _ = x.shape
+    din, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    h, pdim, q = cfg.ssm_heads, cfg.ssm_headdim, min(cfg.ssm_chunk, x.shape[1])
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    z, xbc_new, dt = _split_proj(p, x, cfg)
+    if initial is not None:
+        xbc_raw = jnp.concatenate(
+            [initial.conv_buf.astype(xbc_new.dtype), xbc_new], axis=1)
+    else:
+        xbc_raw = xbc_new
+    xbc = _causal_conv(xbc_raw, p["conv_w"].astype(x.dtype),
+                       p["conv_b"].astype(x.dtype))
+    if initial is not None:
+        xbc = xbc[:, cfg.ssm_conv - 1:, :]  # drop the context rows
+    xs = xbc[..., :din].reshape(b, s, h, pdim)
+    bmat = xbc[..., din : din + g * n].reshape(b, s, g, n)
+    cmat = xbc[..., din + g * n :].reshape(b, s, g, n)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # [b,s,h]
+    a = -jnp.exp(p["A_log"])                                          # [h]
+    da = dt * a                                                        # [b,s,h]
+
+    # chunk views
+    xs_c = xs.reshape(b, nc, q, h, pdim).astype(jnp.float32)
+    b_c = bmat.reshape(b, nc, q, g, n).astype(jnp.float32)
+    c_c = cmat.reshape(b, nc, q, g, n).astype(jnp.float32)
+    dt_c = dt.reshape(b, nc, q, h)
+    da_c = da.reshape(b, nc, q, h)
+    da_cs = jnp.cumsum(da_c, axis=2)                                  # [b,nc,q,h]
+
+    # intra-chunk (quadratic within chunk): L[i,j] = exp(da_cs[i]-da_cs[j]), i>=j
+    li = da_cs[:, :, :, None, :]                                       # i
+    lj = da_cs[:, :, None, :, :]                                       # j
+    mask = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    decay = jnp.where(mask, jnp.exp(li - lj), 0.0)                    # [b,nc,q,q,h]
+    # scores: C_i . B_j  (groups broadcast over heads: h = g * (h//g))
+    hg = h // g
+    c_h = jnp.repeat(c_c, hg, axis=3)                                 # [b,nc,q,h,n]
+    b_h = jnp.repeat(b_c, hg, axis=3)
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", c_h, b_h)                   # [b,nc,q,q,h]
+    y_diag = jnp.einsum("bcijh,bcjh,bcjhp->bcihp",
+                        cb * decay, dt_c, xs_c)
+
+    # chunk states: S_c = sum_j exp(da_cs[last]-da_cs[j]) dt_j x_j B_j^T
+    seg = jnp.exp(da_cs[:, :, -1:, :] - da_cs)                        # [b,nc,q,h]
+    states = jnp.einsum("bcjh,bcjh,bcjhp,bcjhn->bchpn",
+                        seg, dt_c, xs_c, b_h)
+    # inter-chunk recurrence over running state
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])                         # [b,nc,h]
+
+    def step(carry, inp):
+        s_c, dec = inp
+        new = carry * dec[:, :, None, None] + s_c
+        return new, carry  # emit state *entering* the chunk
+
+    init = (initial.state if initial is not None
+            else jnp.zeros((b, h, pdim, n), jnp.float32))
+    final_state, prev_states = jax.lax.scan(
+        step, init,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)                          # [b,nc,h,p,n]
+
+    y_off = jnp.einsum("bcihn,bchpn,bcih->bcihp",
+                       c_h, prev_states, jnp.exp(da_cs))
+    y = (y_diag + y_off).reshape(b, s, h, pdim)
+    y = y + xs.astype(jnp.float32) * p["ssm_D"][None, None, :, None]
+    y = y.reshape(b, s, din)
+    y = _gated_norm(y, z, p["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype),
+                     p["out_proj"].astype(x.dtype))
+    if return_state:
+        k = cfg.ssm_conv
+        cache = SSMCache(state=final_state,
+                         conv_buf=xbc_raw[:, xbc_raw.shape[1] - (k - 1):, :])
+        return out, cache
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_cache(cfg: ModelConfig, b: int, dtype) -> SSMCache:
+    return SSMCache(
+        state=jnp.zeros((b, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+                        jnp.float32),
+        conv_buf=jnp.zeros((b, cfg.ssm_conv - 1, conv_dim(cfg)), dtype),
+    )
+
+
+def decode_ssm(p: Dict, x: jax.Array, cache: SSMCache, cfg: ModelConfig
+               ) -> Tuple[jax.Array, SSMCache]:
+    """Single-token step. x: [B, 1, D] -> ([B, 1, D], cache')."""
+    b = x.shape[0]
+    din, g, n, h, pdim = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state,
+                          cfg.ssm_heads, cfg.ssm_headdim)
+    z, xbc, dt = _split_proj(p, x, cfg)
+    # conv over ring buffer + current input
+    window = jnp.concatenate([cache.conv_buf, xbc], axis=1)  # [B, K, C]
+    w = p["conv_w"].astype(x.dtype)
+    conv = jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"].astype(x.dtype)
+    xbc1 = jax.nn.silu(conv)
+    new_buf = window[:, 1:, :]
+
+    xs = xbc1[:, :din].reshape(b, h, pdim).astype(jnp.float32)
+    bm = xbc1[:, din : din + g * n].reshape(b, g, n).astype(jnp.float32)
+    cm = xbc1[:, din + g * n :].reshape(b, g, n).astype(jnp.float32)
+    hg = h // g
+    bm = jnp.repeat(bm, hg, axis=1)                                   # [b,h,n]
+    cm = jnp.repeat(cm, hg, axis=1)
+
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [b,h]
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt1 * a)                                             # [b,h]
+    state = (cache.state * da[:, :, None, None]
+             + jnp.einsum("bh,bhp,bhn->bhpn", dt1, xs, bm))
+    y = jnp.einsum("bhn,bhpn->bhp", cm, state)
+    y = y + xs * p["ssm_D"][None, :, None]
+    y = y.reshape(b, 1, din)
+    y = _gated_norm(y, z, p["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype),
+                     p["out_proj"].astype(x.dtype))
+    return out, SSMCache(state=state, conv_buf=new_buf)

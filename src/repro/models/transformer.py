@@ -1,0 +1,354 @@
+"""Block assembly: pre-norm residual blocks + scan-over-periods stacking.
+
+A config's ``pattern`` (e.g. ("rglru", "rglru", "attn")) defines the cycled
+layer kinds.  Params/caches are stacked with a leading ``num_periods`` dim and
+iterated with ``lax.scan`` — essential to keep HLO size and compile time
+bounded for 88-layer models on a 512-device dry-run.  Pattern remainders and
+``first_dense_layers`` are unrolled.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import apply_norm, dtype_of, make_norm
+from repro.sharding.specs import BATCH, MODEL, constrain
+
+PyTree = Any
+
+
+def cast_stacked_params(stack: PyTree, cfg: ModelConfig) -> PyTree:
+    """Cast stacked (leading layer-dim) >=3-D fp32 weights to compute dtype
+    BEFORE the layer scan: the FSDP weight all-gather then moves bf16, not
+    fp32 master weights (GSPMD won't sink a post-gather convert; §Perf
+    iter 5).  Stacked 2-D leaves (norm scales per layer) stay fp32."""
+    dt = dtype_of(cfg)
+
+    def one(a):
+        if a.ndim >= 3 and a.dtype == jnp.float32:
+            return a.astype(dt)
+        return a
+
+    return jax.tree_util.tree_map(one, stack)
+
+
+def _cast_block_params(p: PyTree, cfg: ModelConfig) -> PyTree:
+    """Cast >=2-D fp32 weights to the compute dtype ONCE at block entry.
+
+    Numerically identical to the per-einsum ``astype`` (which becomes a
+    no-op), but crucial under FSDP: XLA does not sink a post-gather convert,
+    so fp32 master weights were all-gathered in fp32 — casting the sharded
+    weight first halves every weight-gather (granite train: 26 f32 gathers
+    -> bf16, §Perf iter 5).  1-D params (norm scales, A_log, biases) stay
+    fp32 for numerics.
+    """
+    dt = dtype_of(cfg)
+
+    def one(a):
+        if a.ndim >= 2 and a.dtype == jnp.float32:
+            return a.astype(dt)
+        return a
+
+    return jax.tree_util.tree_map(one, p)
+
+
+# ---------------------------------------------------------------------------
+# single-block param construction
+# ---------------------------------------------------------------------------
+
+
+def make_block(cfg: ModelConfig, kind: str, key) -> PyTree:
+    ks = jax.random.split(key, 4)
+    p: Dict[str, PyTree] = {"norm1": make_norm(cfg)}
+    if kind in ("attn", "local_attn", "enc_attn", "cross"):
+        p["attn"] = attn.make_attention(cfg, ks[0])
+        p["norm2"] = make_norm(cfg)
+        if kind == "cross":
+            p["norm_x"] = make_norm(cfg)
+            p["xattn"] = attn.make_attention(cfg, ks[2])
+        if kind == "attn" and cfg.num_experts:
+            p["moe"] = moe_mod.make_moe(cfg, ks[1])
+        else:
+            p["mlp"] = mlp_mod.make_mlp(cfg, ks[1])
+    elif kind == "dense_mlp":  # deepseek first dense layer (attn + wide mlp)
+        p["attn"] = attn.make_attention(cfg, ks[0])
+        p["norm2"] = make_norm(cfg)
+        p["mlp"] = mlp_mod.make_mlp(cfg, ks[1],
+                                    d_ff=cfg.first_dense_d_ff or cfg.d_ff)
+    elif kind == "ssm":
+        p["ssm"] = ssm_mod.make_ssm(cfg, ks[0])
+    elif kind == "rglru":
+        p["rglru"] = rglru_mod.make_rglru(cfg, ks[0])
+        p["norm2"] = make_norm(cfg)
+        p["mlp"] = mlp_mod.make_mlp(cfg, ks[1])
+    else:
+        raise ValueError(kind)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (full sequence; train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def block_forward(p: PyTree, x: jax.Array, cfg: ModelConfig, kind: str, *,
+                  positions: jax.Array,
+                  memory: Optional[Tuple[jax.Array, jax.Array]] = None,
+                  cache: Optional[PyTree] = None):
+    """Returns (x', aux, cache').  cache' is None unless ``cache`` given
+    (prefill mode fills it)."""
+    aux: Dict[str, jax.Array] = {}
+    new_cache = cache
+    p = _cast_block_params(p, cfg)
+    h = apply_norm(p["norm1"], x, cfg)
+    if kind in ("attn", "local_attn", "enc_attn", "cross", "dense_mlp"):
+        causal = kind != "enc_attn"
+        window = cfg.local_window if kind == "local_attn" else 0
+        q, k, v = attn.project_qkv(p["attn"], h, cfg,
+                                   positions if cfg.use_rope else None)
+        if cache is not None:
+            # cache path == *extension*: insert the new K/V then attend over
+            # the whole cache (prior entries included; empty slots carry
+            # position -1 and mask out).  A fresh cache reproduces plain
+            # causal attention; a warm cache makes K-token speculative
+            # verification exact.
+            sc = cache["self"] if kind == "cross" else cache
+            if kind == "local_attn":
+                wlen = min(cfg.local_window, k.shape[1])
+                sc = attn.cache_insert(sc, k[:, -wlen:], v[:, -wlen:],
+                                       positions[:, -wlen:])
+            else:
+                sc = attn.cache_insert(sc, k, v, positions)
+            new_cache = dict(cache, self=sc) if kind == "cross" else sc
+            o = attn.decode_attend(q, sc, window=window,
+                                   q_positions=positions)
+        else:
+            o = attn.attend(q, k, v, causal=causal, window=window,
+                            q_positions=positions, kv_positions=positions,
+                            kv_chunk=1024)
+        x = x + attn.project_out(p["attn"], o, x.dtype)
+        if kind == "cross":
+            hx = apply_norm(p["norm_x"], x, cfg)
+            qx, _, _ = attn.project_qkv(p["xattn"], hx, cfg, None)
+            xp = p["xattn"]
+            if memory is not None:
+                # project the encoder memory into this layer's K/V space
+                mk = jnp.einsum("btd,dke->btke", memory,
+                                xp["wk"].astype(x.dtype))
+                mv = jnp.einsum("btd,dke->btke", memory,
+                                xp["wv"].astype(x.dtype))
+                if cache is not None:
+                    new_cache = dict(new_cache, mem_k=mk, mem_v=mv)
+            else:  # extension: reuse the projected memory in the cache
+                mk, mv = cache["mem_k"], cache["mem_v"]
+            ox = attn.attend(qx, mk, mv, causal=False, q_positions=positions,
+                             kv_chunk=1024)
+            x = x + attn.project_out(p["xattn"], ox, x.dtype)
+        h2 = apply_norm(p["norm2"], x, cfg)
+        if "moe" in p:
+            y, aux = moe_mod.apply_moe(p["moe"], h2, cfg)
+        else:
+            y = mlp_mod.apply_mlp(p["mlp"], h2, cfg)
+        x = x + y
+    elif kind == "ssm":
+        if cache is not None:
+            y, new_cache = ssm_mod.apply_ssm(p["ssm"], h, cfg,
+                                             return_state=True,
+                                             initial=cache)
+        else:
+            y = ssm_mod.apply_ssm(p["ssm"], h, cfg)
+        x = x + y
+    elif kind == "rglru":
+        if cache is not None:
+            y, new_cache = rglru_mod.apply_rglru(p["rglru"], h, cfg,
+                                                 return_state=True,
+                                                 initial=cache)
+        else:
+            y = rglru_mod.apply_rglru(p["rglru"], h, cfg)
+        x = x + y
+        h2 = apply_norm(p["norm2"], x, cfg)
+        x = x + mlp_mod.apply_mlp(p["mlp"], h2, cfg)
+    else:
+        raise ValueError(kind)
+    x = constrain(x, BATCH, MODEL, None)
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# decode (single token against caches)
+# ---------------------------------------------------------------------------
+
+
+def _sp_mesh(cfg: ModelConfig, cache):
+    """Mesh for sequence-parallel decode attention, or None for the plain
+    path.  Engages only when the cache is actually seq-sharded (kv_heads do
+    NOT divide the model axis — otherwise the cache shards on heads and the
+    shard_map in_specs would force a gather+rescatter every layer, §Perf)."""
+    if not cfg.sp_decode_attn:
+        return None
+    from repro.sharding.specs import current_mesh
+
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    model_ax = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    if cfg.num_kv_heads % model_ax == 0:   # cache shards on kv-heads already
+        return None
+    if cache.k.shape[1] % model_ax != 0:
+        return None
+    return mesh
+
+
+def block_decode(p: PyTree, x: jax.Array, cfg: ModelConfig, kind: str, *,
+                 positions: jax.Array, cache: PyTree,
+                 memory: Optional[Tuple[jax.Array, jax.Array]] = None):
+    """x: [B, 1, D]; positions: [B, 1] absolute. Returns (x', cache')."""
+    p = _cast_block_params(p, cfg)
+    h = apply_norm(p["norm1"], x, cfg)
+    if kind in ("attn", "local_attn", "cross", "dense_mlp"):
+        window = cfg.local_window if kind == "local_attn" else 0
+        q, k, v = attn.project_qkv(p["attn"], h, cfg,
+                                   positions if cfg.use_rope else None)
+        sc = cache["self"] if kind == "cross" else cache
+        mesh = _sp_mesh(cfg, sc)
+        if mesh is not None:
+            o, sc = attn.sp_insert_attend(q, k, v, sc, window=window,
+                                          q_positions=positions, mesh=mesh)
+        else:
+            sc = attn.cache_insert(sc, k, v, positions)
+            o = attn.decode_attend(q, sc, window=window,
+                                   q_positions=positions)
+        x = x + attn.project_out(p["attn"], o, x.dtype)
+        new_cache = dict(cache, self=sc) if kind == "cross" else sc
+        if kind == "cross":
+            hx = apply_norm(p["norm_x"], x, cfg)
+            qx, _, _ = attn.project_qkv(p["xattn"], hx, cfg, None)
+            mk, mv = memory if memory is not None else (
+                cache["mem_k"], cache["mem_v"])
+            ox = attn.attend(qx, mk, mv, causal=False, q_positions=positions,
+                             kv_chunk=1024)
+            x = x + attn.project_out(p["xattn"], ox, x.dtype)
+        h2 = apply_norm(p["norm2"], x, cfg)
+        if "moe" in p:
+            y, _ = moe_mod.apply_moe(p["moe"], h2, cfg)
+        else:
+            y = mlp_mod.apply_mlp(p["mlp"], h2, cfg)
+        x = x + y
+    elif kind == "ssm":
+        y, new_cache = ssm_mod.decode_ssm(p["ssm"], h, cache, cfg)
+        x = x + y
+    elif kind == "rglru":
+        y, new_cache = rglru_mod.decode_rglru(p["rglru"], h, cache, cfg)
+        x = x + y
+        h2 = apply_norm(p["norm2"], x, cfg)
+        x = x + mlp_mod.apply_mlp(p["mlp"], h2, cfg)
+    else:
+        raise ValueError(kind)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# stacked-period scan
+# ---------------------------------------------------------------------------
+
+
+def _remat(f, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return f
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(f)
+
+
+def stack_forward(stack_params: PyTree, x: jax.Array, cfg: ModelConfig, *,
+                  positions: jax.Array, caches: Optional[PyTree] = None,
+                  memory: Optional[jax.Array] = None,
+                  kinds: Optional[Tuple[str, ...]] = None):
+    """Scan over stacked periods. stack_params[f"pos{j}"] leaves have leading
+    num_periods dim. Returns (x, aux_sums, caches')."""
+    pattern = kinds or cfg.pattern
+
+    def period(x, inp):
+        params_i, cache_i = inp
+        aux_tot = {}
+        new_caches = {}
+        for j, kind in enumerate(pattern):
+            c = None if cache_i is None else cache_i[f"pos{j}"]
+            x, aux, nc = block_forward(
+                params_i[f"pos{j}"], x, cfg, kind,
+                positions=positions, cache=c, memory=memory)
+            new_caches[f"pos{j}"] = nc
+            for k2, v in aux.items():
+                if jnp.issubdtype(jnp.asarray(v).dtype, jnp.floating):
+                    aux_tot[k2] = aux_tot.get(k2, 0.0) + v
+        return x, (aux_tot, (new_caches if cache_i is not None else None))
+
+    stack_params = cast_stacked_params(stack_params, cfg)
+    if isinstance(caches, (list, tuple)):  # per-layer caches: unroll (see
+        aux_all: dict = {}                 # stack_decode note on GSPMD)
+        outs = []
+        n_periods = len(caches)
+        for i in range(n_periods):
+            params_i = jax.tree_util.tree_map(lambda a: a[i], stack_params)
+            x, (aux_i, nc) = period(x, (params_i, caches[i]))
+            outs.append(nc)
+            for k2, v in aux_i.items():
+                aux_all[k2] = aux_all.get(k2, 0.0) + v
+        return x, aux_all, outs
+
+    body = _remat(period, cfg)
+    x, (aux_stacked, caches_out) = jax.lax.scan(
+        body, x, (stack_params, caches))
+    aux = {k2: jnp.sum(v) for k2, v in aux_stacked.items()}
+    return x, aux, caches_out
+
+
+def stack_decode(stack_params: PyTree, x: jax.Array, cfg: ModelConfig, *,
+                 positions: jax.Array, caches: PyTree,
+                 kinds: Optional[Tuple[str, ...]] = None):
+    pattern = kinds or cfg.pattern
+    stack_params = cast_stacked_params(stack_params, cfg)
+
+    # Unrolled path (sp_decode_attn; caches is a per-layer LIST): a lax.scan
+    # would carry the *stacked* caches as xs and GSPMD reshards/replicates
+    # the whole stack around the loop (2x15 GB/step gathers on qwen2
+    # decode_32k, §Perf).  Decode bodies are small; unrolling with separate
+    # per-layer cache leaves keeps every cache fully shard-local.
+    if isinstance(caches, (list, tuple)):
+        n_periods = len(caches)
+        outs = []
+        for i in range(n_periods):
+            params_i = jax.tree_util.tree_map(lambda a: a[i], stack_params)
+            cache_i = caches[i]
+            new_caches = {}
+            for j, kind in enumerate(pattern):
+                x, nc = block_decode(params_i[f"pos{j}"], x, cfg, kind,
+                                     positions=positions,
+                                     cache=cache_i[f"pos{j}"])
+                new_caches[f"pos{j}"] = nc
+            outs.append(new_caches)
+        return x, outs
+
+    def period(x, inp):
+        params_i, cache_i = inp
+        new_caches = {}
+        for j, kind in enumerate(pattern):
+            x, nc = block_decode(params_i[f"pos{j}"], x, cfg, kind,
+                                 positions=positions,
+                                 cache=cache_i[f"pos{j}"])
+            new_caches[f"pos{j}"] = nc
+        return x, new_caches
+
+    x, caches_out = jax.lax.scan(period, x, (stack_params, caches))
+    return x, caches_out

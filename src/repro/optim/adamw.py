@@ -1,0 +1,89 @@
+"""Hand-rolled AdamW (no optax in this container) with sharded states.
+
+States mirror the parameter pytree, so the same partition specs apply —
+ZeRO-style optimizer-state sharding falls out of the param sharding rules
+(DESIGN.md §4).  Supports global-norm clipping and decoupled weight decay.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def init(params: PyTree) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms/biases/scalars (1-D params)."""
+    name = str(getattr(path[-1], "key", ""))
+    return name not in ("scale", "bias", "conv_b", "ga_b", "gi_b",
+                        "lambda_p", "A_log", "ssm_D", "dt_bias", "norm_scale")
+
+
+def update(grads: PyTree, state: AdamWState, params: PyTree,
+           cfg: AdamWConfig, lr_scale: jax.Array | float = 1.0
+           ) -> Tuple[PyTree, AdamWState, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(path, p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu2 = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu2 = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mhat = mu2 / b1c
+        nhat = nu2 / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        if _decay_mask(path):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                mu2, nu2)
+
+    out = jax.tree_util.tree_map_with_path(
+        upd, params, grads, state.mu, state.nu)
+    # tree of 3-tuples -> 3 trees
+    treedef = jax.tree_util.tree_structure(params)
+    flat = treedef.flatten_up_to(out)
+    new_p = treedef.unflatten([t[0] for t in flat])
+    new_mu = treedef.unflatten([t[1] for t in flat])
+    new_nu = treedef.unflatten([t[2] for t in flat])
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr)}
+    return new_p, AdamWState(step, new_mu, new_nu), metrics

@@ -1,0 +1,195 @@
+"""Serving engine: prefill/decode loop with the MCPrioQ speculative drafter.
+
+The paper's structure is a first-class serving feature here (DESIGN.md
+§Arch-applicability):
+  * an **online n-gram drafter** (core/speculative.py) continuously learns
+    token transitions from the engine's own emitted tokens — an online sparse
+    Markov chain exactly as §II of the paper describes — and proposes draft
+    chains;
+  * the **target model** verifies a K-token draft in ONE ``extend_step``
+    forward (vs K sequential decodes); rejection rollback is free because
+    cache pytrees are immutable — the engine just keeps the pre-extend
+    caches and re-extends with the accepted prefix (recurrent-state-safe
+    for SSM/RG-LRU archs);
+  * the chain lives behind an :class:`EpochStore` snapshot (the RCU
+    analogue): the learner publishes new versions while serving reads.
+
+Acceptance is conservative (batch-wide longest common prefix) to keep
+shapes static; greedy outputs are bit-identical to plain decoding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import speculative as spec
+from repro.core.epoch import EpochStore
+from repro.models.model import Model
+from repro.serve import sampling
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 64
+    max_cache_len: int = 512
+    draft_len: int = 4            # speculation depth (0 = disabled)
+    ngram: spec.NGramConfig = spec.NGramConfig()
+    greedy: bool = True
+    temperature: float = 1.0
+
+
+class Engine:
+    """Host-side orchestration; all device work is jitted, static-shaped."""
+
+    def __init__(self, model: Model, params: PyTree, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.drafter_store = EpochStore(spec.init(cfg.ngram))
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cfg.max_cache_len))
+        self._decode = jax.jit(model.decode_step)
+        self._extend = jax.jit(model.extend_step)
+        self._observe = jax.jit(
+            lambda st, toks: spec.observe(st, toks, cfg=cfg.ngram))
+        self._draft = jax.jit(
+            lambda st, ctx: spec.draft(st, ctx, cfg=cfg.ngram,
+                                       k=max(cfg.draft_len, 1)))
+        # model_calls counts decode+extend forwards (the latency metric);
+        # plain greedy needs exactly max_new_tokens-1 of them
+        self.stats = {"model_calls": 0, "accepted": 0, "drafted": 0,
+                      "rounds": 0}
+
+    # ------------------------------------------------------------------
+    def generate(self, batch: Dict[str, jax.Array], rng: jax.Array
+                 ) -> np.ndarray:
+        """Generate max_new_tokens per sequence. Returns int32 [B, N]."""
+        cfg = self.cfg
+        tokens = np.asarray(batch["tokens"])
+        b, s = tokens.shape
+        logits, caches = self._prefill(self.params, batch)
+        out = np.zeros((b, cfg.max_new_tokens), np.int32)
+        rng, sub = jax.random.split(rng)
+        cur = self._sample(logits, sub)          # first new token
+        pos = jnp.full((b,), s, jnp.int32)       # cache position of `cur`
+        n_done = 0
+        history = tokens.copy()
+
+        while n_done < cfg.max_new_tokens:
+            out[:, n_done] = np.asarray(cur)
+            history = np.concatenate([history, np.asarray(cur)[:, None]], 1)
+            n_done += 1
+            if n_done >= cfg.max_new_tokens:
+                break
+            rng, sub = jax.random.split(rng)
+            budget = cfg.max_new_tokens - n_done
+            if cfg.draft_len > 0 and budget > 1 and cfg.greedy:
+                cur, pos, emitted = self._speculative_round(
+                    caches, cur, pos, history, min(cfg.draft_len, budget - 1),
+                    sub)
+                caches = self._caches  # updated by the round
+                for t in emitted:
+                    out[:, n_done] = t
+                    history = np.concatenate([history, t[:, None]], 1)
+                    n_done += 1
+                    if n_done >= cfg.max_new_tokens:
+                        break
+            else:
+                logits, caches = self._decode(self.params, caches,
+                                              cur[:, None], pos)
+                self.stats["model_calls"] += 1
+                cur = self._sample(logits, sub)
+                pos = pos + 1
+
+        # online learning: feed emitted tokens back into the chain and
+        # publish a new RCU snapshot for subsequent requests
+        snap = self.drafter_store.acquire()
+        try:
+            new_state = self._observe(snap.state, jnp.asarray(history))
+        finally:
+            self.drafter_store.release(snap)
+        self.drafter_store.publish(new_state)
+        return out
+
+    # ------------------------------------------------------------------
+    def _speculative_round(self, caches, cur, pos, history, k, rng
+                           ) -> Tuple[jax.Array, jax.Array, list]:
+        """One draft-verify round.
+
+        Feeds [cur, draft_0..draft_{k-2}] (k tokens) through extend_step;
+        logits[i] is the model's choice after consuming token i.  Batch-wide
+        longest-prefix acceptance; on partial acceptance the pre-extend
+        caches are kept (free rollback) and re-extended with the accepted
+        tokens only — exact for recurrent state too.
+        Returns (next cur, next pos, [emitted token arrays]).
+        """
+        snap = self.drafter_store.acquire()
+        try:
+            ctx = jnp.asarray(history[:, -max(self.cfg.ngram.order, 2):])
+            draft, ok = self._draft(snap.state, ctx)
+        finally:
+            self.drafter_store.release(snap)
+        draft = np.asarray(draft)[:, : k - 1] if k > 1 else \
+            np.zeros((cur.shape[0], 0), np.int32)
+        ok = np.asarray(ok)[:, : k - 1] if k > 1 else \
+            np.zeros((cur.shape[0], 0), bool)
+        n_drafted = int(ok.all(axis=0).cumprod().sum()) if ok.size else 0
+        draft = draft[:, :n_drafted]
+
+        if n_drafted == 0:  # nothing usable: plain decode step
+            logits, self._caches = self._decode(self.params, caches,
+                                                cur[:, None], pos)
+            self.stats["model_calls"] += 1
+            nxt = self._sample(logits, rng)
+            return nxt, pos + 1, []
+
+        self.stats["rounds"] += 1
+        self.stats["drafted"] += int(draft.size)
+        feed = jnp.concatenate(
+            [cur[:, None], jnp.asarray(draft)], axis=1)       # [B, 1+n]
+        logits, ext_caches = self._extend(self.params, caches, feed, pos)
+        self.stats["model_calls"] += 1
+        model_toks = np.asarray(self._sample_all(logits, rng))  # [B, 1+n]
+
+        # longest batch-wide prefix where model agrees with the draft
+        agree = (model_toks[:, :-1] == draft).all(axis=0) if draft.size \
+            else np.zeros((0,), bool)
+        n_acc = int(np.cumprod(agree).sum()) if agree.size else 0
+        self.stats["accepted"] += n_acc * draft.shape[0]
+
+        emitted = [model_toks[:, j] for j in range(n_acc)]
+        if n_acc == draft.shape[1]:
+            # fully accepted: keep the extended caches; bonus token is the
+            # model's continuation after the last draft token
+            self._caches = ext_caches
+            nxt = jnp.asarray(model_toks[:, n_acc])
+            return nxt, pos + n_acc + 1, emitted
+        # partial: roll back (keep pre-extend caches) and re-extend with the
+        # accepted prefix only; the correction token came from the verify
+        accepted_feed = feed[:, : n_acc + 1]
+        _, self._caches = self._extend(self.params, caches, accepted_feed,
+                                       pos)
+        self.stats["model_calls"] += 1
+        nxt = jnp.asarray(model_toks[:, n_acc])
+        return nxt, pos + n_acc + 1, emitted
+
+    # ------------------------------------------------------------------
+    def _sample(self, logits, rng):
+        if self.cfg.greedy:
+            return sampling.greedy(logits)
+        return sampling.temperature(rng, logits, self.cfg.temperature)
+
+    def _sample_all(self, logits, rng):
+        """logits [B, K, V] -> tokens [B, K] (greedy only for speculation)."""
+        return sampling.greedy(logits)
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.stats["accepted"] / max(1, self.stats["drafted"])

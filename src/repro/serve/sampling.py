@@ -1,0 +1,31 @@
+"""Sampling from LM logits — including the paper's cumulative-threshold
+semantics as top-p (the CDF^-1(t) query applied to the model distribution)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature(rng, logits: jax.Array, temp: float = 1.0) -> jax.Array:
+    return jax.random.categorical(rng, logits / max(temp, 1e-6)).astype(jnp.int32)
+
+
+def top_p(rng, logits: jax.Array, p: float = 0.9, temp: float = 1.0
+          ) -> jax.Array:
+    """Nucleus sampling == the paper's threshold query on the model's own
+    distribution: keep items in descending probability until cumsum >= p."""
+    logits = logits / max(temp, 1e-6)
+    probs = jax.nn.softmax(logits, axis=-1)
+    sorted_p, sorted_idx = jax.lax.top_k(probs, probs.shape[-1])
+    cum = jnp.cumsum(sorted_p, axis=-1)
+    keep = (cum - sorted_p) < p          # same "before < t" rule as cdf_query
+    masked = jnp.where(keep, sorted_p, 0.0)
+    masked = masked / jnp.sum(masked, axis=-1, keepdims=True)
+    pick = jax.random.categorical(rng, jnp.log(masked + 1e-30))
+    return jnp.take_along_axis(sorted_idx, pick[..., None],
+                               axis=-1)[..., 0].astype(jnp.int32)

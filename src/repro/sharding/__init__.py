@@ -1,0 +1,7 @@
+from repro.sharding.specs import (  # noqa: F401
+    batch_axes,
+    constrain,
+    current_mesh,
+    partition_specs,
+    resolve,
+)

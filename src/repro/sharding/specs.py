@@ -1,0 +1,219 @@
+"""Logical-axis sharding rules -> concrete PartitionSpecs.
+
+Logical axes used throughout the model code:
+  * BATCH — the data-parallel axes: ("pod", "data") on the multi-pod mesh,
+            ("data",) on a single pod.
+  * DATA  — the FSDP axis ("data"): weight shards that are all-gathered
+            per layer (ZeRO-3).  Dropped in ``serve`` mode (pure TP keeps
+            decode latency free of per-step weight gathers).
+  * MODEL — the tensor-parallel axis ("model").
+
+Divisibility-aware: a logical axis is silently dropped when the dim size
+does not divide the mesh axis size *and* padding would waste > 25% (GSPMD can
+pad, but for tiny dims like kv_heads=1 or ssm head vectors the padding waste
+dwarfs the gain; §Roofline measures what padding remains).
+
+A ``stage`` (pipeline) axis would compose here as an extra leading rule on the
+stacked-layer dim; not enabled for the assigned 16x16 / 2x16x16 meshes
+(DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+BATCH = "__batch__"
+DATA = "__data__"
+MODEL = "__model__"
+
+# sharding strategy (§Perf hillclimb):
+#   fsdp_tp (baseline): batch over (pod, data); activations model-sharded
+#                       (Megatron-SP style TP on the model axis)
+#   fsdp2d: batch over EVERY axis (pure data parallel, 1 seq/chip at 256);
+#           activation constraints never mention the model axis, weights
+#           stay 2D-sharded -> XLA gathers weights per layer (ZeRO-3 style)
+_STRATEGY: contextvars.ContextVar[str] = contextvars.ContextVar(
+    "shard_strategy", default="fsdp_tp")
+
+
+@contextlib.contextmanager
+def strategy(name: str):
+    tok = _STRATEGY.set(name)
+    try:
+        yield
+    finally:
+        _STRATEGY.reset(tok)
+
+
+def current_mesh() -> Optional[jax.sharding.Mesh]:
+    """The mesh installed by ``with mesh:`` (None outside any mesh context)."""
+    try:
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m is None or m.empty:
+            return None
+        return m
+    except Exception:
+        return None
+
+
+def batch_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    if _STRATEGY.get() == "fsdp2d":
+        return tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.axis_names)
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def resolve(spec_entry, mesh: jax.sharding.Mesh):
+    if spec_entry == BATCH:
+        return batch_axes(mesh)
+    if spec_entry == DATA:
+        # FSDP spans pods: otherwise weights replicate across pods and
+        # gradient sync becomes a full cross-pod fp32 all-reduce
+        # (+49% collective on the granite 2-pod probe, EXPERIMENTS §Perf)
+        return ("pod", "data") if "pod" in mesh.axis_names else "data"
+    if spec_entry == MODEL:
+        return "model"
+    return spec_entry
+
+
+def _axis_size(mesh: jax.sharding.Mesh, entry) -> int:
+    names = resolve(entry, mesh)
+    if names is None:
+        return 1
+    if isinstance(names, str):
+        names = (names,)
+    size = 1
+    for n in names:
+        size *= dict(zip(mesh.axis_names, mesh.devices.shape))[n]
+    return size
+
+
+def concretize(logical: Tuple, mesh: jax.sharding.Mesh,
+               shape: Optional[Tuple[int, ...]] = None,
+               strict: bool = False) -> P:
+    """Logical tuple -> PartitionSpec.
+
+    strict=True (jit in/out shardings): the runtime rejects non-divisible
+    argument shardings, so such entries are dropped (replicated).
+    strict=False (with_sharding_constraint on intermediates): GSPMD pads, so
+    entries are kept while padding waste stays <= 50% (e.g. 36 heads over a
+    16-way axis pad to 48; §Roofline's useful-FLOPs ratio measures the waste).
+    """
+    out = []
+    for i, entry in enumerate(logical):
+        if entry is None:
+            out.append(None)
+            continue
+        ax = _axis_size(mesh, entry)
+        if shape is not None and i < len(shape):
+            dim = shape[i]
+            if dim % ax != 0:
+                if strict:
+                    out.append(None)
+                    continue
+                padded = ((dim + ax - 1) // ax) * ax
+                if (padded - dim) / padded > 0.5:
+                    out.append(None)
+                    continue
+        out.append(resolve(entry, mesh))
+    return P(*out)
+
+
+def constrain(x: jax.Array, *logical) -> jax.Array:
+    """with_sharding_constraint if a mesh context is active; no-op otherwise
+    (keeps smoke tests mesh-free)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    if _STRATEGY.get() == "fsdp2d":
+        logical = tuple(None if e == MODEL else e for e in logical)
+    spec = concretize(tuple(logical), mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter rules (matched against '/'-joined tree paths)
+# ---------------------------------------------------------------------------
+
+# order matters: first match wins
+_PARAM_RULES = [
+    (r"emb/tok$", (MODEL, DATA)),          # [V, D]
+    (r"emb/head$", (DATA, MODEL)),         # [D, V]
+    (r"emb/pos$", (None, None)),
+    (r"(wq|bq)$", (DATA, MODEL, None)),    # [D, H, Dh] / [H, Dh]
+    (r"(wk|wv|bk|bv)$", (DATA, MODEL, None)),
+    (r"wo$", (MODEL, None, DATA)),         # [H, Dh, D]
+    (r"(w1|wg)$", (DATA, MODEL)),          # [D, F]
+    (r"w2$", (MODEL, DATA)),               # [F, D]
+    (r"router$", (DATA, None)),            # [D, E]
+    (r"(we1|weg)$", (MODEL, DATA, None)),  # [E, D, F]
+    (r"we2$", (MODEL, None, DATA)),        # [E, F, D]
+    (r"in_proj$", (DATA, MODEL)),
+    (r"out_proj$", (MODEL, DATA)),
+    (r"conv_w$", (None, MODEL)),           # [K, conv_dim]
+    (r"conv_b$", (MODEL,)),
+    (r"(A_log|ssm_D|dt_bias)$", (None,)),
+    (r"(wx|wgate)$", (DATA, MODEL)),       # rglru projections [D, W]
+    (r"(ga_w|gi_w)$", (MODEL, None, None)),  # [heads, W/h, W/h]
+    (r"(ga_b|gi_b|lambda_p)$", (MODEL, None)),  # [heads, W/h] / [W]-ish
+    (r"(scale|bias)$", None),              # norms: replicate
+]
+
+
+def _rule_for(path: str):
+    for pat, spec in _PARAM_RULES:
+        if re.search(pat, path):
+            return spec
+    return None
+
+
+def _bias_like(spec, ndim):
+    """Trim a weight rule to a lower-rank param (biases etc.)."""
+    if spec is None:
+        return None
+    return tuple(spec[-ndim:])
+
+
+def partition_specs(params: Any, mesh: jax.sharding.Mesh, *,
+                    mode: str = "train") -> Any:
+    """Pytree of PartitionSpec matching ``params`` (arrays or
+    ShapeDtypeStructs).
+
+    mode='train': FSDP(data) x TP(model).  mode='serve': TP only (DATA->None).
+    Params under a 'stack'/'enc_stack' subtree carry an extra leading
+    (scan) dim that is never sharded.
+    """
+
+    def one(path, leaf) -> P:
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        pstr = "/".join(str(k) for k in keys)
+        stacked = any(str(k) in ("stack", "enc_stack") for k in keys)
+        spec = _rule_for(pstr)
+        shape = tuple(leaf.shape)
+        ndim = len(shape) - (1 if stacked else 0)
+        if spec is None:
+            logical = (None,) * ndim
+        else:
+            logical = _bias_like(spec, ndim)
+            logical = tuple(logical) + (None,) * (ndim - len(logical))
+        if mode == "serve":
+            logical = tuple(None if e == DATA else e for e in logical)
+        if stacked:
+            logical = (None,) + logical
+        return concretize(logical, mesh, shape, strict=True)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def shardings_for(params: Any, mesh: jax.sharding.Mesh, *, mode="train"):
+    specs = partition_specs(params, mesh, mode=mode)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)

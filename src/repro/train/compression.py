@@ -1,0 +1,58 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 block-quantised gradients with an error-feedback accumulator: the
+quantisation residual is carried to the next step, which provably preserves
+convergence for SGD-family methods (Karimireddy et al., 2019).  On a real pod
+this halves/quarters gradient all-reduce bytes (the collective term in
+§Roofline for DP-heavy meshes); composed here as a pure grads->grads
+transform so it works under any pjit sharding.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+BLOCK = 256
+
+
+class EFState(NamedTuple):
+    residual: PyTree  # same structure as grads, fp32
+
+
+def init(grads_like: PyTree) -> EFState:
+    return EFState(residual=jax.tree_util.tree_map(
+        lambda g: jnp.zeros_like(g, jnp.float32), grads_like))
+
+
+def _quant_dequant_int8(g: jax.Array) -> jax.Array:
+    """Blockwise symmetric int8 quantise-dequantise."""
+    flat = g.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    amax = jnp.max(jnp.abs(fp), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(fp / scale), -127, 127).astype(jnp.int8)
+    dq = q.astype(jnp.float32) * scale
+    return dq.reshape(-1)[:n].reshape(g.shape)
+
+
+def compress(grads: PyTree, state: EFState) -> Tuple[PyTree, EFState, dict]:
+    """grads -> (compressed grads, new EF state, metrics)."""
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        cq = _quant_dequant_int8(gf)
+        return cq.astype(g.dtype), gf - cq
+
+    out = jax.tree_util.tree_map(one, grads, state.residual)
+    treedef = jax.tree_util.tree_structure(grads)
+    flat = treedef.flatten_up_to(out)
+    cg = treedef.unflatten([t[0] for t in flat])
+    res = treedef.unflatten([t[1] for t in flat])
+    err = sum(jnp.sum(jnp.square(r)) for r in jax.tree_util.tree_leaves(res))
+    return cg, EFState(res), {"ef_residual_sq": err}

@@ -1,0 +1,100 @@
+"""Training step factory: grads (+ microbatch accumulation, + optional
+gradient compression) -> AdamW update.  Pure function, pjit-ready."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim import adamw
+from repro.optim.schedule import warmup_cosine
+from repro.train import compression
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: adamw.AdamWConfig = adamw.AdamWConfig()
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    microbatches: int = 1          # grad accumulation via scan
+    compress_grads: bool = False   # int8 + error feedback
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt: adamw.AdamWState
+    ef: Optional[compression.EFState]
+
+
+def init_state(model: Model, rng: jax.Array, tcfg: TrainConfig) -> TrainState:
+    params = model.init(rng)
+    opt = adamw.init(params)
+    ef = compression.init(params) if tcfg.compress_grads else None
+    return TrainState(params, opt, ef)
+
+
+def abstract_state(model: Model, tcfg: TrainConfig) -> TrainState:
+    return jax.eval_shape(lambda: init_state(
+        model, jax.random.key(0), tcfg))
+
+
+def make_train_step(model: Model, tcfg: TrainConfig
+                    ) -> Callable[[TrainState, PyTree], Tuple[TrainState, dict]]:
+    """Returns step(state, batch) -> (state', metrics).
+
+    With microbatches > 1, the global batch's leading dim is split and
+    accumulated with a lax.scan — memory for activations scales with the
+    microbatch, not the global batch.
+    """
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, batch)
+        return grads, loss, metrics
+
+    def step(state: TrainState, batch: PyTree):
+        if tcfg.microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                assert b % tcfg.microbatches == 0, (b, tcfg.microbatches)
+                return x.reshape((tcfg.microbatches, b // tcfg.microbatches)
+                                 + x.shape[1:])
+            mbs = jax.tree_util.tree_map(split, batch)
+
+            def acc_fn(carry, mb):
+                g_acc, l_acc = carry
+                g, loss, _ = grads_of(state.params, mb)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, loss_sum), _ = jax.lax.scan(acc_fn, (g0, 0.0), mbs)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / tcfg.microbatches, grads)
+            loss = loss_sum / tcfg.microbatches
+            metrics = {"loss": loss}
+        else:
+            grads, loss, metrics = grads_of(state.params, batch)
+
+        ef = state.ef
+        if tcfg.compress_grads:
+            grads, ef, cmetrics = compression.compress(grads, ef)
+            metrics = {**metrics, **cmetrics}
+
+        lr_scale = warmup_cosine(state.opt.step,
+                                 warmup_steps=tcfg.warmup_steps,
+                                 total_steps=tcfg.total_steps)
+        params, opt, ometrics = adamw.update(
+            grads, state.opt, state.params, tcfg.optimizer, lr_scale)
+        metrics = {**metrics, **ometrics, "loss": loss}
+        return TrainState(params, opt, ef), metrics
+
+    return step

@@ -1,0 +1,146 @@
+"""Attention unit tests vs a naive O(S^2) oracle: GQA grouping, causal and
+sliding-window masks, chunked online softmax, linear + ring caches."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as at
+
+
+def naive_attention(q, k, v, *, causal, window, q_pos, kv_pos, kv_valid=None):
+    """Direct softmax attention with GQA broadcast. All f32."""
+    b, sq, h, d = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    out = np.zeros((b, sq, h, d), np.float32)
+    for bi in range(b):
+        for hi in range(h):
+            ki = hi // g
+            s = (q[bi, :, hi] @ k[bi, :, ki].T) / np.sqrt(d)  # [sq, t]
+            mask = np.ones((sq, t), bool)
+            if causal:
+                mask &= kv_pos[bi][None, :] <= q_pos[bi][:, None]
+            if window > 0:
+                mask &= kv_pos[bi][None, :] > q_pos[bi][:, None] - window
+            if kv_valid is not None:
+                mask &= kv_pos[bi][None, :] < kv_valid[bi]
+            mask &= kv_pos[bi][None, :] >= 0
+            s = np.where(mask, s, -1e30)
+            p = np.exp(s - s.max(-1, keepdims=True))
+            p = p / np.maximum(p.sum(-1, keepdims=True), 1e-30)
+            out[bi, :, hi] = p @ v[bi, :, ki]
+    return out
+
+
+@pytest.mark.parametrize("h,kvh", [(4, 4), (8, 2), (6, 1)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 3), (False, 0)])
+@pytest.mark.parametrize("kv_chunk", [4, 16, 64])
+def test_attend_matches_naive(h, kvh, causal, window, kv_chunk):
+    rng = np.random.default_rng(h * 100 + window + kv_chunk)
+    b, s, d = 2, 16, 8
+    q = rng.normal(size=(b, s, h, d)).astype(np.float32)
+    k = rng.normal(size=(b, s, kvh, d)).astype(np.float32)
+    v = rng.normal(size=(b, s, kvh, d)).astype(np.float32)
+    pos = np.broadcast_to(np.arange(s), (b, s)).astype(np.int32)
+    got = at.attend(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                    causal=causal, window=window,
+                    q_positions=jnp.asarray(pos),
+                    kv_positions=jnp.asarray(pos), kv_chunk=kv_chunk)
+    want = naive_attention(q, k, v, causal=causal, window=window,
+                           q_pos=pos, kv_pos=pos)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-5)
+
+
+def test_ring_cache_wraps_and_masks():
+    """Ring cache of size W: positions older than the window disappear,
+    recent W positions survive the wrap-around."""
+    b, w, kvh, d = 1, 4, 1, 8
+    cache = at.init_cache(b, w, kvh, d, jnp.float32, ring=True)
+    rng = np.random.default_rng(0)
+    keys, vals = [], []
+    for pos in range(7):  # wraps once (7 > 4)
+        kn = rng.normal(size=(b, 1, kvh, d)).astype(np.float32)
+        vn = rng.normal(size=(b, 1, kvh, d)).astype(np.float32)
+        keys.append(kn)
+        vals.append(vn)
+        cache = at.cache_insert(cache, jnp.asarray(kn), jnp.asarray(vn),
+                                jnp.asarray([[pos]], jnp.int32))
+    # slots must hold positions 3..6
+    assert sorted(np.asarray(cache.positions)[0].tolist()) == [3, 4, 5, 6]
+    # decode at pos 7 with window 4 sees positions 4,5,6 (+ self insert at 7)
+    q = rng.normal(size=(b, 1, kvh, d)).astype(np.float32)
+    kn = rng.normal(size=(b, 1, kvh, d)).astype(np.float32)
+    vn = rng.normal(size=(b, 1, kvh, d)).astype(np.float32)
+    cache = at.cache_insert(cache, jnp.asarray(kn), jnp.asarray(vn),
+                            jnp.asarray([[7]], jnp.int32))
+    got = at.decode_attend(jnp.asarray(q), cache, window=w,
+                           q_positions=jnp.asarray([[7]], jnp.int32))
+    # oracle over the full history with the same window
+    k_all = np.concatenate(keys + [kn], axis=1)
+    v_all = np.concatenate(vals + [vn], axis=1)
+    pos_all = np.arange(8, dtype=np.int32)[None, :]
+    want = naive_attention(q, k_all, v_all, causal=True, window=w,
+                           q_pos=np.asarray([[7]], np.int32), kv_pos=pos_all)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-5)
+
+
+def test_empty_cache_slots_are_masked():
+    b, t, kvh, d = 1, 8, 1, 4
+    cache = at.init_cache(b, t, kvh, d, jnp.float32)
+    rng = np.random.default_rng(1)
+    kn = rng.normal(size=(b, 2, kvh, d)).astype(np.float32)
+    vn = rng.normal(size=(b, 2, kvh, d)).astype(np.float32)
+    cache = at.cache_insert(cache, jnp.asarray(kn), jnp.asarray(vn),
+                            jnp.asarray([[0, 1]], jnp.int32))
+    q = rng.normal(size=(b, 1, kvh, d)).astype(np.float32)
+    got = at.decode_attend(jnp.asarray(q), cache,
+                           q_positions=jnp.asarray([[1]], jnp.int32))
+    want = naive_attention(q, kn, vn, causal=True, window=0,
+                           q_pos=np.asarray([[1]], np.int32),
+                           kv_pos=np.asarray([[0, 1]], np.int32))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-5)
+
+
+def test_rope_relative_property():
+    """RoPE: attention scores depend only on relative positions."""
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(1, 1, 2, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 1, 2, 16)).astype(np.float32))
+    def score(qp, kp):
+        qr = at.apply_rope(q, jnp.asarray([[qp]]), 10_000.0)
+        kr = at.apply_rope(k, jnp.asarray([[kp]]), 10_000.0)
+        return float(jnp.sum(qr[0, 0, 0] * kr[0, 0, 0]))
+    assert score(5, 3) == pytest.approx(score(105, 103), rel=1e-4)
+    assert score(5, 3) != pytest.approx(score(5, 4), rel=1e-3)
+
+
+def test_sp_insert_attend_matches_plain_on_host_mesh():
+    """shard_map SP path == plain insert+attend (1-device mesh degenerate)."""
+    from repro.launch.mesh import make_host_mesh
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rng = np.random.default_rng(3)
+    b, t, kvh, h, d = 2, 16, 2, 4, 8
+    cache = at.init_cache(b, t, kvh, d, jnp.float32)
+    kn = rng.normal(size=(b, 4, kvh, d)).astype(np.float32)
+    vn = rng.normal(size=(b, 4, kvh, d)).astype(np.float32)
+    pos0 = np.asarray([[0, 1, 2, 3]] * b, np.int32)
+    cache = at.cache_insert(cache, jnp.asarray(kn), jnp.asarray(vn),
+                            jnp.asarray(pos0))
+    q = jnp.asarray(rng.normal(size=(b, 1, h, d)).astype(np.float32))
+    k1 = jnp.asarray(rng.normal(size=(b, 1, kvh, d)).astype(np.float32))
+    v1 = jnp.asarray(rng.normal(size=(b, 1, kvh, d)).astype(np.float32))
+    qp = jnp.asarray([[4]] * b, jnp.int32)
+
+    plain_cache = at.cache_insert(cache, k1, v1, qp)
+    want = at.decode_attend(q, plain_cache, q_positions=qp)
+    with mesh:
+        got, sp_cache = at.sp_insert_attend(q, k1, v1, cache,
+                                            q_positions=qp, mesh=mesh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(sp_cache.k),
+                               np.asarray(plain_cache.k), rtol=1e-6)

@@ -1,0 +1,41 @@
+"""MCPrioQ as the MoE expert-popularity monitor (DESIGN §Arch-applicability)."""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import expert_monitor as em
+
+
+def test_monitor_flags_imbalance():
+    cfg = em.MonitorConfig(num_layers=4, num_experts=16)
+    state = em.init(cfg)
+    rng = np.random.default_rng(0)
+    for step in range(20):
+        # layer 0: collapsed routing (expert 3 gets ~85%); layer 1: uniform
+        c0 = rng.multinomial(512, [0.85 / 1] + [0.01] * 15)
+        c0 = np.roll(c0, 3)
+        c1 = rng.multinomial(512, [1 / 16] * 16)
+        state = em.observe(state, 0, jnp.asarray(c0), cfg)
+        state = em.observe(state, 1, jnp.asarray(c1), cfg)
+    report = em.balance_report(state, cfg, t=0.8)
+    assert report[0] <= 2, report       # collapsed: 1-2 experts carry 80%
+    assert report[1] >= 12, report      # uniform: ~13 experts needed
+    ids, load, n = em.hot_experts(state, 0, 0.5, cfg)
+    assert int(ids[0]) == 3             # hottest expert identified
+    assert float(load[0]) > 0.7
+
+
+def test_monitor_decay_tracks_drift():
+    cfg = em.MonitorConfig(num_layers=1, num_experts=8,
+                           decay_threshold=4096)
+    state = em.init(cfg)
+    hot_a = jnp.asarray([900, 10, 10, 10, 10, 10, 10, 10], jnp.int32)
+    hot_b = jnp.asarray([10, 10, 10, 10, 10, 10, 10, 900], jnp.int32)
+    for _ in range(8):
+        state = em.observe(state, 0, hot_a, cfg)
+    for _ in range(16):  # routing drifts; decay forgets the old regime
+        state = em.observe(state, 0, hot_b, cfg)
+    ids, load, _ = em.hot_experts(state, 0, 0.5, cfg)
+    assert int(ids[0]) == 7, np.asarray(ids)

@@ -1,0 +1,214 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import slab as sl
+from repro.kernels import cdf_query as cdfk
+from repro.kernels import oddeven as oek
+from repro.kernels import ref
+from repro.kernels import slab_update as suk
+
+SHAPES_2D = [(8, 16), (64, 128), (32, 256), (256, 128), (7, 32)]
+
+
+def _rand_slabs(rng, n, c, density=0.7, dtype=np.int32):
+    cnt = (rng.random((n, c)) < density) * rng.integers(1, 1000, (n, c))
+    cnt = cnt.astype(dtype)
+    dst = np.where(cnt > 0, rng.integers(0, 10_000, (n, c)), -1).astype(np.int32)
+    tot = cnt.sum(axis=1).astype(dtype)
+    order = np.argsort(-cnt, axis=1, kind="stable").astype(np.int32)
+    return jnp.asarray(dst), jnp.asarray(cnt), jnp.asarray(tot), jnp.asarray(order)
+
+
+# ---------------------------------------------------------------------------
+# oddeven
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,c", SHAPES_2D)
+@pytest.mark.parametrize("passes", [1, 2, 5])
+def test_oddeven_kernel_matches_ref(n, c, passes):
+    rng = np.random.default_rng(n * 1000 + c + passes)
+    cnt = jnp.asarray(rng.integers(0, 100, (n, c)).astype(np.int32))
+    order = jnp.asarray(
+        np.stack([rng.permutation(c) for _ in range(n)]).astype(np.int32))
+    c_ord = jnp.take_along_axis(cnt, order, axis=1)
+    # pad rows to the block multiple the kernel requires
+    rb = min(oek.DEFAULT_ROWS_PER_BLOCK, n)
+    pad = (-n) % rb
+    c_pad = jnp.pad(c_ord, ((0, pad), (0, 0)))
+    o_pad = jnp.pad(order, ((0, pad), (0, 0)))
+    got_c, got_o = oek.oddeven_pallas(
+        c_pad, o_pad, passes=passes, rows_per_block=rb, interpret=True)
+    want_c, want_o = ref.oddeven_ref(c_ord, order, passes)
+    np.testing.assert_array_equal(np.asarray(got_c)[:n], np.asarray(want_c))
+    np.testing.assert_array_equal(np.asarray(got_o)[:n], np.asarray(want_o))
+
+
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32])
+def test_oddeven_kernel_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    cnt = jnp.asarray(rng.integers(0, 50, (16, 64))).astype(dtype)
+    order = jnp.asarray(
+        np.stack([rng.permutation(64) for _ in range(16)]).astype(np.int32))
+    c_ord = jnp.take_along_axis(cnt, order, axis=1)
+    got_c, got_o = oek.oddeven_pallas(
+        c_ord, order, passes=3, rows_per_block=16, interpret=True)
+    want_c, want_o = ref.oddeven_ref(c_ord, order, 3)
+    np.testing.assert_array_equal(np.asarray(got_c), np.asarray(want_c))
+    np.testing.assert_array_equal(np.asarray(got_o), np.asarray(want_o))
+
+
+def test_oddeven_ref_equals_slab_semantics():
+    """kernel-layout oracle == core slab.oddeven_passes semantics."""
+    rng = np.random.default_rng(1)
+    cnt = jnp.asarray(rng.integers(0, 100, (32, 64)).astype(np.int32))
+    order = jnp.asarray(
+        np.stack([rng.permutation(64) for _ in range(32)]).astype(np.int32))
+    want = sl.oddeven_passes(cnt, order, 2)
+    c_ord = jnp.take_along_axis(cnt, order, axis=1)
+    _, got = ref.oddeven_ref(c_ord, order, 2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_oddeven_full_sort_after_C_passes():
+    rng = np.random.default_rng(2)
+    n, c = 16, 64
+    cnt = jnp.asarray(rng.integers(0, 10_000, (n, c)).astype(np.int32))
+    order = jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32), (n, c))
+    c_ord = jnp.take_along_axis(cnt, order, axis=1)
+    got_c, got_o = oek.oddeven_pallas(
+        c_ord, order, passes=c // 2 + 1, rows_per_block=n, interpret=True)
+    got_c = np.asarray(got_c)
+    assert np.all(got_c[:, :-1] >= got_c[:, 1:]), "not fully sorted"
+    # permutation property retained
+    assert np.all(np.sort(np.asarray(got_o), axis=1) == np.arange(c))
+
+
+# ---------------------------------------------------------------------------
+# slab_update
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,c", [(16, 32), (256, 128), (64, 64)])
+@pytest.mark.parametrize("batch", [4, 64, 256])
+def test_slab_update_kernel_matches_ref(n, c, batch):
+    rng = np.random.default_rng(n + batch)
+    dst, cnt, tot, _ = _rand_slabs(rng, n, c)
+    # build updates: half hit existing edges, half miss / padding
+    rows = rng.integers(0, n, batch).astype(np.int32)
+    rows[rng.random(batch) < 0.2] = -1  # padding
+    dsts = np.empty(batch, np.int32)
+    dnp, cnp = np.asarray(dst), np.asarray(cnt)
+    for i, r in enumerate(rows):
+        live = np.nonzero((r >= 0) * (cnp[max(r, 0)] > 0))[0]
+        if r >= 0 and len(live) and rng.random() < 0.7:
+            dsts[i] = dnp[r, rng.choice(live)]
+        else:
+            dsts[i] = 123456 + i  # guaranteed miss
+    w = rng.integers(1, 5, batch).astype(np.int32)
+    rb = min(suk.DEFAULT_ROWS_PER_BLOCK, n)
+    got_cnt, got_tot = suk.slab_update_pallas(
+        jnp.asarray(rows), jnp.asarray(dsts), jnp.asarray(w),
+        dst, cnt, tot, rows_per_block=rb, interpret=True)
+    _, want_cnt, want_tot, _ = ref.slab_update_ref(
+        jnp.asarray(rows), jnp.asarray(dsts), jnp.asarray(w), dst, cnt, tot)
+    np.testing.assert_array_equal(np.asarray(got_cnt), np.asarray(want_cnt))
+    np.testing.assert_array_equal(np.asarray(got_tot), np.asarray(want_tot))
+
+
+def test_slab_update_duplicate_aggregation():
+    """In-batch duplicates of one edge aggregate like contended atomics."""
+    dst = jnp.asarray([[5, 7, -1, -1]], jnp.int32)
+    cnt = jnp.asarray([[10, 3, 0, 0]], jnp.int32)
+    tot = jnp.asarray([13], jnp.int32)
+    rows = jnp.zeros((8,), jnp.int32)
+    dsts = jnp.asarray([5] * 8, jnp.int32)
+    w = jnp.ones((8,), jnp.int32)
+    got_cnt, got_tot = suk.slab_update_pallas(
+        rows, dsts, w, dst, cnt, tot, rows_per_block=1, interpret=True)
+    assert int(got_cnt[0, 0]) == 18
+    assert int(got_tot[0]) == 21
+
+
+# ---------------------------------------------------------------------------
+# cdf_query
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,c", [(8, 16), (128, 128), (64, 256)])
+@pytest.mark.parametrize("t", [0.5, 0.9, 0.99])
+@pytest.mark.parametrize("chunks", [1, 4])
+def test_cdf_query_kernel_matches_ref(b, c, t, chunks):
+    rng = np.random.default_rng(b + int(t * 100) + chunks)
+    # zipf-ish sorted counts
+    raw = np.sort(rng.zipf(1.5, (b, c)).astype(np.int32), axis=1)[:, ::-1]
+    raw[rng.random((b, c)) < 0.1] = 0
+    raw = np.sort(raw, axis=1)[:, ::-1].copy()
+    c_ord = jnp.asarray(raw)
+    d_ord = jnp.asarray(rng.integers(0, 1000, (b, c)).astype(np.int32))
+    tot = jnp.asarray(raw.sum(axis=1).astype(np.int32))
+    qb = min(cdfk.DEFAULT_QUERIES_PER_BLOCK, b)
+    got_d, got_p, got_n = cdfk.cdf_query_pallas(
+        c_ord, d_ord, tot, t, max_items=16, queries_per_block=qb,
+        chunks=chunks, interpret=True)
+    want_d, want_p, want_n = ref.cdf_query_ref(c_ord, d_ord, tot, t, 16)
+    np.testing.assert_array_equal(np.asarray(got_n), np.asarray(want_n))
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+    np.testing.assert_allclose(np.asarray(got_p), np.asarray(want_p),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_cdf_query_empty_rows():
+    c_ord = jnp.zeros((4, 32), jnp.int32)
+    d_ord = jnp.zeros((4, 32), jnp.int32)
+    tot = jnp.zeros((4,), jnp.int32)
+    got_d, got_p, got_n = cdfk.cdf_query_pallas(
+        c_ord, d_ord, tot, 0.9, max_items=8, queries_per_block=4,
+        interpret=True)
+    assert np.all(np.asarray(got_n) == 0)
+    assert np.all(np.asarray(got_p) == 0)
+
+
+def test_cdf_query_complexity_matches_quantile():
+    """n_needed equals the quantile function of the edge distribution —
+    the paper's O(CDF^-1(t)) claim, checked exactly."""
+    # geometric-ish distribution: p_i ~ 2^-i  ->  CDF^-1(0.9) is ~4 items
+    c_ord = jnp.asarray([[512, 256, 128, 64, 32, 16, 8, 8]], jnp.int32)
+    d_ord = jnp.arange(8, dtype=jnp.int32)[None]
+    tot = jnp.asarray([1024], jnp.int32)
+    _, _, n = cdfk.cdf_query_pallas(
+        c_ord, d_ord, tot, 0.9, max_items=8, queries_per_block=1,
+        interpret=True)
+    # cumsum/1024: .5 .75 .875 .9375 -> 4 items needed
+    assert int(n[0]) == 4
+
+
+# ---------------------------------------------------------------------------
+# fused decay (composes the oddeven kernel; paper §II.C)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_decay_sort_matches_core_decay(impl):
+    from repro.core import slab as slab_mod
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(7)
+    n, c = 16, 32
+    dst, cnt, tot, order = _rand_slabs(rng, n, c)
+    got_cnt, got_dst, got_order, got_tot = ops.decay_sort(
+        cnt, dst, order, impl=impl)
+    slabs, _ = slab_mod.decay(slab_mod.Slabs(dst, cnt, tot, order))
+    np.testing.assert_array_equal(np.asarray(got_cnt), np.asarray(slabs.cnt))
+    np.testing.assert_array_equal(np.asarray(got_dst), np.asarray(slabs.dst))
+    np.testing.assert_array_equal(np.asarray(got_tot), np.asarray(slabs.tot))
+    # order: both must be fully sorted descending (ties may permute)
+    c_got = np.take_along_axis(np.asarray(got_cnt), np.asarray(got_order), 1)
+    assert np.all(c_got[:, :-1] >= c_got[:, 1:])
+    # permutation property
+    assert np.all(np.sort(np.asarray(got_order), 1) == np.arange(c))

@@ -1,0 +1,204 @@
+"""Behavioural tests for the core MCPrioQ structure vs a dict oracle."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import mcprioq as mc
+from repro.core import slab as sl
+from repro.core.hashtable import EMPTY
+
+
+class DictOracle:
+    """Exact Markov-chain counts (no capacity limits) for cross-checking."""
+
+    def __init__(self):
+        self.edges = {}   # src -> {dst: cnt}
+        self.tot = {}     # src -> total
+
+    def update(self, src, dst, w=1):
+        self.edges.setdefault(src, {})
+        self.edges[src][dst] = self.edges[src].get(dst, 0) + w
+        self.tot[src] = self.tot.get(src, 0) + w
+
+    def probs_desc(self, src):
+        if src not in self.edges:
+            return []
+        t = self.tot[src]
+        items = sorted(self.edges[src].items(), key=lambda kv: (-kv[1], kv[0]))
+        return [(d, c / t) for d, c in items]
+
+    def decay(self):
+        for s in list(self.edges):
+            new = {d: c // 2 for d, c in self.edges[s].items() if c // 2 > 0}
+            self.edges[s] = new
+            self.tot[s] = sum(new.values())
+
+
+CFGS = [
+    mc.MCConfig(num_rows=64, capacity=16, sort_passes=2),
+    mc.MCConfig(num_rows=64, capacity=16, sort_passes=2, use_dst_hash=True),
+]
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=["scan", "dst_hash"])
+def test_update_and_counts_match_oracle(cfg):
+    rng = np.random.default_rng(0)
+    state = mc.init(cfg)
+    oracle = DictOracle()
+    for _ in range(6):
+        src = rng.integers(0, 20, size=64).astype(np.int32)
+        dst = rng.integers(0, 12, size=64).astype(np.int32)
+        state = mc.update_batch(state, jnp.asarray(src), jnp.asarray(dst), cfg=cfg)
+        for s, d in zip(src.tolist(), dst.tolist()):
+            oracle.update(s, d)
+    inv = mc.check_invariants(state)
+    assert inv["order_is_permutation"]
+    assert inv["tot_matches_cnt_sum"]
+    assert inv["free_slots_consistent"]
+    # every oracle edge must be present with the exact count (capacity 16 > 12
+    # distinct dsts, so no Space-Saving approximation in this test)
+    rows, found = mc.lookup_rows(state, jnp.arange(20, dtype=jnp.int32), cfg=cfg)
+    rows, found = np.asarray(rows), np.asarray(found)
+    dstm, cntm = np.asarray(state.slabs.dst), np.asarray(state.slabs.cnt)
+    for s in oracle.edges:
+        assert found[s]
+        r = rows[s]
+        for d, c in oracle.edges[s].items():
+            slots = np.nonzero(dstm[r] == d)[0]
+            assert len(slots) == 1
+            assert cntm[r, slots[0]] == c
+        assert int(state.slabs.tot[r]) == oracle.tot[s]
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=["scan", "dst_hash"])
+def test_query_threshold_matches_oracle(cfg):
+    rng = np.random.default_rng(1)
+    state = mc.init(cfg)
+    oracle = DictOracle()
+    # Zipf-ish transitions from a handful of srcs
+    for _ in range(30):
+        src = rng.integers(0, 5, size=32).astype(np.int32)
+        dst = (rng.zipf(1.8, size=32) % 10).astype(np.int32)
+        state = mc.update_batch(state, jnp.asarray(src), jnp.asarray(dst), cfg=cfg)
+        for s, d in zip(src.tolist(), dst.tolist()):
+            oracle.update(s, d)
+    # settle ordering fully so the comparison is exact
+    slabs = state.slabs
+    order = sl.full_sort(slabs.cnt, slabs.order)
+    state = state._replace(slabs=sl.Slabs(slabs.dst, slabs.cnt, slabs.tot, order))
+
+    t = 0.9
+    srcs = jnp.arange(5, dtype=jnp.int32)
+    dsts, probs, n_needed = mc.query_threshold(state, srcs, t, cfg=cfg, max_items=16)
+    dsts, probs, n_needed = map(np.asarray, (dsts, probs, n_needed))
+    for s in range(5):
+        ref = oracle.probs_desc(s)
+        cum, n_ref = 0.0, 0
+        for _, p in ref:
+            if cum >= t:
+                break
+            cum += p
+            n_ref += 1
+        assert n_needed[s] == n_ref
+        # probabilities of the returned prefix match the oracle's sorted probs
+        ref_p = np.array([p for _, p in ref[: min(n_ref, 16)]])
+        got_p = probs[s][: len(ref_p)]
+        np.testing.assert_allclose(got_p, ref_p, rtol=1e-6)
+        # cumulative probability actually crosses the threshold
+        assert ref_p.sum() >= t or len(ref) <= 16
+
+
+def test_sort_convergence_and_approximate_order():
+    """One odd-even pass fixes a single small increment (paper's normal case);
+    C passes sort fully from any state."""
+    cfg = mc.MCConfig(num_rows=4, capacity=8, sort_passes=0)
+    state = mc.init(cfg)
+    # build a sorted row: counts 8,7,6,...,1
+    src = jnp.zeros((8,), jnp.int32)
+    for i in range(8):
+        w = jnp.full((1,), 8 - i, jnp.int32)
+        state = mc.update_batch(state, src[:1], jnp.asarray([i], jnp.int32),
+                                weights=w, cfg=cfg)
+    slabs = state.slabs
+    order = sl.full_sort(slabs.cnt, slabs.order)
+    assert int(sl.inversions(slabs.cnt, order)[0]) == 0
+    state = state._replace(slabs=sl.Slabs(slabs.dst, slabs.cnt, slabs.tot, order))
+
+    # bump item ranked 5 by +2: creates exactly one adjacent inversion
+    cfg1 = mc.MCConfig(num_rows=4, capacity=8, sort_passes=1)
+    d5 = int(np.asarray(jnp.take_along_axis(slabs.dst, order, 1))[0, 5])
+    state = mc.update_batch(state, src[:1], jnp.asarray([d5], jnp.int32),
+                            weights=jnp.asarray([2], jnp.int32), cfg=cfg1)
+    assert int(sl.inversions(state.slabs.cnt, state.slabs.order)[0]) == 0
+
+    # now scramble hard (big weights to random dsts) and show k=C passes sort
+    rng = np.random.default_rng(3)
+    dd = jnp.asarray(rng.integers(0, 8, size=16), jnp.int32)
+    ww = jnp.asarray(rng.integers(1, 100, size=16), jnp.int32)
+    state = mc.update_batch(state, jnp.zeros((16,), jnp.int32), dd,
+                            weights=ww, cfg=cfg)
+    order = sl.oddeven_passes(state.slabs.cnt, state.slabs.order, passes=8)
+    assert int(sl.inversions(state.slabs.cnt, order)[0]) == 0
+
+
+def test_decay_preserves_distribution_and_evicts():
+    cfg = mc.MCConfig(num_rows=8, capacity=8, sort_passes=2, use_dst_hash=True)
+    state = mc.init(cfg)
+    src = jnp.zeros((4,), jnp.int32)
+    dst = jnp.asarray([10, 11, 12, 13], jnp.int32)
+    w = jnp.asarray([8, 4, 2, 1], jnp.int32)
+    state = mc.update_batch(state, src, dst, weights=w, cfg=cfg)
+    state = mc.decay(state, cfg=cfg)
+    inv = mc.check_invariants(state)
+    assert all(v for k, v in inv.items() if isinstance(v, bool))
+    # counts halved: 4,2,1 and the w=1 edge evicted
+    dsts, probs = mc.query_topk(state, src[:1], cfg=cfg, k=8)
+    live = np.asarray(dsts[0])
+    assert set(live[live != EMPTY].tolist()) == {10, 11, 12}
+    # ratios preserved: p(10) = 4/7
+    np.testing.assert_allclose(float(probs[0, 0]), 4 / 7, rtol=1e-6)
+    # dst-hash still consistent after rebuild
+    rows, _ = mc.lookup_rows(state, src[:1], cfg=cfg)
+    slots, found = mc._find_slots(state, rows, jnp.asarray([11], jnp.int32), cfg)
+    assert bool(found[0])
+    assert int(state.slabs.dst[rows[0], slots[0]]) == 11
+
+
+def test_space_saving_replacement_when_full():
+    cfg = mc.MCConfig(num_rows=4, capacity=4, sort_passes=4)
+    state = mc.init(cfg)
+    src = jnp.zeros((4,), jnp.int32)
+    state = mc.update_batch(state, src, jnp.asarray([0, 1, 2, 3], jnp.int32),
+                            weights=jnp.asarray([10, 8, 6, 1], jnp.int32), cfg=cfg)
+    # new dst 99 must replace the tail (dst 3, cnt 1) and inherit its count
+    state = mc.update_batch(state, src[:1], jnp.asarray([99], jnp.int32), cfg=cfg)
+    d = np.asarray(state.slabs.dst[0])
+    c = np.asarray(state.slabs.cnt[0])
+    assert 99 in d.tolist() and 3 not in d.tolist()
+    assert c[d.tolist().index(99)] == 2  # inherited 1 + weight 1
+    assert int(state.evictions) == 1
+    # tot unchanged except +1
+    assert int(state.slabs.tot[0]) == 26
+
+
+def test_unknown_src_queries_are_empty():
+    cfg = mc.MCConfig(num_rows=4, capacity=4)
+    state = mc.init(cfg)
+    dsts, probs, n = mc.query_threshold(
+        state, jnp.asarray([7], jnp.int32), 0.9, cfg=cfg, max_items=4)
+    assert int(n[0]) == 0
+    assert np.all(np.asarray(dsts) == EMPTY)
+
+
+def test_maybe_decay_threshold():
+    cfg = mc.MCConfig(num_rows=4, capacity=4)
+    state = mc.init(cfg)
+    src = jnp.zeros((2,), jnp.int32)
+    state = mc.update_batch(state, src, jnp.asarray([1, 2], jnp.int32),
+                            weights=jnp.asarray([40, 20], jnp.int32), cfg=cfg)
+    out = mc.maybe_decay(state, cfg=cfg, total_threshold=50)
+    assert int(out.slabs.tot[0]) == 30  # decayed
+    out2 = mc.maybe_decay(out, cfg=cfg, total_threshold=50)
+    assert int(out2.slabs.tot[0]) == 30  # below threshold now, unchanged

@@ -1,0 +1,183 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashtable as ht
+from repro.core import mcprioq as mc
+from repro.core import slab as sl
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# hash table
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.integers(min_value=0, max_value=10_000),
+                min_size=1, max_size=60, unique=True))
+def test_hashtable_insert_then_lookup(keys):
+    tab = ht.make(256)
+    for i, k in enumerate(keys):
+        tab, _, ok = ht.insert(tab, jnp.int32(k), jnp.int32(i))
+        assert bool(ok)
+    for i, k in enumerate(keys):
+        val, found = ht.lookup(tab, jnp.int32(k))
+        assert bool(found) and int(val) == i
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.integers(min_value=0, max_value=500), min_size=2,
+                max_size=40, unique=True),
+       st.data())
+def test_hashtable_delete_preserves_others(keys, data):
+    tab = ht.make(128)
+    for i, k in enumerate(keys):
+        tab, _, _ = ht.insert(tab, jnp.int32(k), jnp.int32(i))
+    victim = data.draw(st.sampled_from(keys))
+    tab, deleted = ht.delete(tab, jnp.int32(victim))
+    assert bool(deleted)
+    for i, k in enumerate(keys):
+        val, found = ht.lookup(tab, jnp.int32(k))
+        if k == victim:
+            assert not bool(found)
+        else:
+            assert bool(found) and int(val) == i
+    # tombstone slot is reusable
+    tab, _, ok = ht.insert(tab, jnp.int32(victim), jnp.int32(999))
+    val, found = ht.lookup(tab, jnp.int32(victim))
+    assert bool(ok) and bool(found) and int(val) == 999
+
+
+# ---------------------------------------------------------------------------
+# odd-even transposition (the paper's lock-free bubble sort)
+# ---------------------------------------------------------------------------
+
+
+def _total_inversions(cnt, order):
+    """Global (not adjacent) inversions wrt descending order, per batch.
+    Compare-exchange networks never increase THIS count; the adjacent count
+    can transiently rise (hypothesis found the counterexample)."""
+    c = np.take_along_axis(np.asarray(cnt), np.asarray(order), axis=1)
+    return int(sum(np.sum(np.triu(row[:, None] < row[None, :], k=1))
+                   for row in c))
+
+
+@settings(**SETTINGS)
+@given(st.integers(min_value=2, max_value=32),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_oddeven_pass_properties(cap, seed):
+    rng = np.random.default_rng(seed)
+    cnt = jnp.asarray(rng.integers(0, 1000, (4, cap)).astype(np.int32))
+    order = jnp.asarray(
+        np.stack([rng.permutation(cap) for _ in range(4)]).astype(np.int32))
+    new_order = sl.oddeven_passes(cnt, order, 1)
+    # (1) permutation preserved
+    assert np.all(np.sort(np.asarray(new_order), 1) == np.arange(cap))
+    # (2) total inversions never increase (compare-exchange theorem)
+    assert _total_inversions(cnt, new_order) <= _total_inversions(cnt, order)
+    # (3) cap passes fully sort
+    done = sl.oddeven_passes(cnt, order, cap)
+    assert int(jnp.sum(sl.inversions(cnt, done))) == 0
+
+
+@settings(**SETTINGS)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_single_increment_fixed_by_one_pass(seed):
+    """The paper's normal case: a sorted queue plus one small increment needs
+    at most one pass (single adjacent swap)."""
+    rng = np.random.default_rng(seed)
+    cap = 16
+    base = np.sort(rng.integers(1, 1000, cap).astype(np.int32))[::-1].copy()
+    pos = rng.integers(0, cap)
+    inc = base.copy()
+    # small increment: at most up to the next-larger neighbour + 1
+    inc[pos] += rng.integers(1, 3)
+    cnt = jnp.asarray(inc[None])
+    order = jnp.arange(cap, dtype=jnp.int32)[None]
+    after = sl.oddeven_passes(cnt, order, 1)
+    inv = int(sl.inversions(cnt, after)[0])
+    # one pass fixes a single out-of-place element moving <= 1 slot; larger
+    # jumps may need one more pass, never more than 2 for a +2 bump
+    if inv:
+        after2 = sl.oddeven_passes(cnt, after, 1)
+        assert int(sl.inversions(cnt, after2)[0]) == 0
+
+
+# ---------------------------------------------------------------------------
+# MCPrioQ end-to-end invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.integers(min_value=1, max_value=4))
+def test_mcprioq_invariants_random_streams(seed, passes):
+    cfg = mc.MCConfig(num_rows=32, capacity=8, sort_passes=passes)
+    state = mc.init(cfg)
+    rng = np.random.default_rng(seed)
+    for _ in range(4):
+        src = jnp.asarray(rng.integers(0, 16, 32).astype(np.int32))
+        dst = jnp.asarray(rng.integers(0, 24, 32).astype(np.int32))
+        w = jnp.asarray(rng.integers(1, 5, 32).astype(np.int32))
+        state = mc.update_batch(state, src, dst, weights=w, cfg=cfg)
+        inv = mc.check_invariants(state)
+        assert inv["order_is_permutation"]
+        assert inv["tot_matches_cnt_sum"]
+        assert inv["free_slots_consistent"]
+        assert inv["counts_nonnegative"]
+    # decay keeps every invariant too
+    state = mc.decay(state, cfg=cfg)
+    inv = mc.check_invariants(state)
+    assert all(v for k, v in inv.items() if isinstance(v, bool))
+    # after decay the order is exactly sorted (compaction contract)
+    assert inv["sorted_fraction"] == 1.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_query_threshold_monotone_in_t(seed):
+    """CDF^-1(t) is monotone: higher threshold never needs fewer items."""
+    cfg = mc.MCConfig(num_rows=16, capacity=16, sort_passes=16)
+    state = mc.init(cfg)
+    rng = np.random.default_rng(seed)
+    src = jnp.zeros(64, jnp.int32)
+    dst = jnp.asarray((rng.zipf(1.6, 64) % 12).astype(np.int32))
+    state = mc.update_batch(state, src, dst, cfg=cfg)
+    prev = 0
+    for t in (0.1, 0.3, 0.5, 0.7, 0.9, 0.99):
+        _, _, n = mc.query_threshold(state, src[:1], t, cfg=cfg, max_items=16)
+        assert int(n[0]) >= prev
+        prev = int(n[0])
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_update_batch_order_independence_for_existing_edges(seed):
+    """Fast-path updates are a commutative scatter-add: permuting the batch
+    gives the identical counts (the determinism analogue of atomics)."""
+    cfg = mc.MCConfig(num_rows=8, capacity=8, sort_passes=0)
+    base = mc.init(cfg)
+    # seed all edges first so everything takes the fast path
+    src0 = jnp.asarray(np.repeat(np.arange(4), 4).astype(np.int32))
+    dst0 = jnp.asarray(np.tile(np.arange(4), 4).astype(np.int32))
+    base = mc.update_batch(base, src0, dst0, cfg=cfg)
+
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, 4, 32).astype(np.int32)
+    dst = rng.integers(0, 4, 32).astype(np.int32)
+    w = rng.integers(1, 9, 32).astype(np.int32)
+    perm = rng.permutation(32)
+    s1 = mc.update_batch(base, jnp.asarray(src), jnp.asarray(dst),
+                         weights=jnp.asarray(w), cfg=cfg)
+    s2 = mc.update_batch(base, jnp.asarray(src[perm]), jnp.asarray(dst[perm]),
+                         weights=jnp.asarray(w[perm]), cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(s1.slabs.cnt),
+                                  np.asarray(s2.slabs.cnt))
+    np.testing.assert_array_equal(np.asarray(s1.slabs.tot),
+                                  np.asarray(s2.slabs.tot))

@@ -1,0 +1,137 @@
+"""Sharded MCPrioQ: routing correctness on a multi-device (fake) mesh.
+
+Runs the real shard_map path in a subprocess with 8 host devices so the rest
+of the suite keeps seeing a single device (see dryrun.py note in the brief).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mcprioq as mc
+from repro.core import sharded as sh
+from repro.core.epoch import EpochStore
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import mcprioq as mc, sharded as sh
+
+    mesh = jax.make_mesh((8,), ("shard",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    scfg = sh.ShardedConfig(
+        base=mc.MCConfig(num_rows=256, capacity=32, sort_passes=2),
+        num_shards=8, axis="shard", bucket_factor=4.0)
+    state = sh.init_sharded(scfg, mesh)
+    upd = sh.make_update_fn(scfg, mesh)
+    qry = sh.make_query_fn(scfg, mesh, threshold=0.9, max_items=8)
+
+    rng = np.random.default_rng(0)
+    oracle = {}
+    for _ in range(4):
+        src = rng.integers(0, 40, size=256).astype(np.int32)
+        dst = rng.integers(0, 10, size=256).astype(np.int32)
+        w = np.ones(256, np.int32)
+        state = upd(state, jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w))
+        for s, d in zip(src.tolist(), dst.tolist()):
+            oracle.setdefault(s, {})
+            oracle[s][d] = oracle[s].get(d, 0) + 1
+
+    # no drops allowed at this bucket factor
+    assert int(jnp.sum(state.dropped_probes)) == 0, "router dropped items"
+    assert int(jnp.sum(state.dropped_rows)) == 0
+
+    # query every src node once; batch padded to a multiple of 8
+    srcs = np.arange(40, dtype=np.int32)
+    srcs = np.concatenate([srcs, np.full(8 - len(srcs) % 8, -1, np.int32)])
+    d, p, n = qry(state, jnp.asarray(srcs))
+    d, p, n = map(np.asarray, (d, p, n))
+    for s in range(40):
+        tot = sum(oracle[s].values())
+        ref = sorted(oracle[s].items(), key=lambda kv: (-kv[1], kv[0]))
+        cum, n_ref = 0.0, 0
+        for _, c in ref:
+            if cum >= 0.9:
+                break
+            cum += c / tot
+            n_ref += 1
+        assert n[s] == n_ref, (s, n[s], n_ref)
+        got = p[s][p[s] > 0]
+        want = np.array([c / tot for _, c in ref[: len(got)]])
+        np.testing.assert_allclose(np.sort(got)[::-1], want, rtol=1e-5)
+    print("SHARDED-OK")
+    """
+)
+
+
+def test_sharded_update_query_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARDED-OK" in out.stdout
+
+
+def test_owner_assignment_balanced():
+    owners = sh.owner_of(jnp.arange(4096, dtype=jnp.int32), 16)
+    counts = np.bincount(np.asarray(owners), minlength=16)
+    assert counts.min() > 0.6 * 4096 / 16
+    assert counts.max() < 1.4 * 4096 / 16
+
+
+def test_single_shard_matches_local():
+    """num_shards=1 sharded path == plain local update/query."""
+    mesh = jax.make_mesh((1,), ("shard",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    base = mc.MCConfig(num_rows=64, capacity=16, sort_passes=2)
+    scfg = sh.ShardedConfig(base=base, num_shards=1, axis="shard",
+                            bucket_factor=1.0)
+    state = sh.init_sharded(scfg, mesh)
+    upd = sh.make_update_fn(scfg, mesh)
+    rng = np.random.default_rng(1)
+    src = jnp.asarray(rng.integers(0, 8, 64).astype(np.int32))
+    dst = jnp.asarray(rng.integers(0, 8, 64).astype(np.int32))
+    w = jnp.ones((64,), jnp.int32)
+    state = upd(state, src, dst, w)
+
+    local = mc.init(base)
+    local = mc.update_batch(local, src, dst, cfg=base)
+    # same multiset of (dst, cnt) per row for every src
+    for s in range(8):
+        r_sh, f_sh = mc.lookup_rows(
+            jax.tree_util.tree_map(lambda x: x[0], state),
+            jnp.asarray([s], jnp.int32), cfg=base)
+        r_lo, f_lo = mc.lookup_rows(local, jnp.asarray([s], jnp.int32), cfg=base)
+        assert bool(f_sh[0]) == bool(f_lo[0])
+        if not bool(f_lo[0]):
+            continue
+        def row_multiset(st, r):
+            d = np.asarray(st.slabs.dst[int(r)])
+            c = np.asarray(st.slabs.cnt[int(r)])
+            return sorted((int(a), int(b)) for a, b in zip(d, c) if b > 0)
+        st0 = jax.tree_util.tree_map(lambda x: x[0], state)
+        assert row_multiset(st0, r_sh[0]) == row_multiset(local, r_lo[0])
+
+
+def test_epoch_store_rcu_semantics():
+    store = EpochStore({"v": 0})
+    s0 = store.acquire()
+    store.publish({"v": 1})
+    s1 = store.acquire()
+    assert s0.state["v"] == 0 and s1.state["v"] == 1  # old reader unaffected
+    store.release(s0)
+    store.release(s1)
+    store.synchronize()
+    assert 0 in store.retired_versions  # grace period elapsed -> reclaimed
+    assert store.version == 1
