@@ -14,11 +14,16 @@ has no numbered tables, so each benchmark validates one stated claim:
   B6 drafter             serving feature: n-gram drafter acceptance rate
   B7 sharded_routing     all_to_all node-sharded scaling (8 fake devices)
 
-Prints ``name,us_per_call,derived`` CSV lines (harness contract).
+Prints ``name,us_per_call,derived`` CSV lines (harness contract) and writes
+``BENCH_<bench>.json`` next to this file with the same rows in machine-
+readable form, so successive PRs can diff perf runs.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import json
+import os
 import time
 
 import numpy as np
@@ -30,19 +35,50 @@ from repro.core import mcprioq as mc
 from repro.core import speculative as spec
 from repro.data.synthetic import MarkovGraphSampler
 
+_HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+class Recorder:
+    """Collects (name, us_per_call, derived, extras) rows per benchmark and
+    mirrors every CSV line into ``BENCH_<bench>.json``."""
+
+    def __init__(self):
+        self.rows = {}
+
+    def emit(self, bench: str, name: str, us: float, derived: str, **extra):
+        # small values (per-query latencies, ratios) keep their decimals
+        print(f"{name},{us:.2f},{derived}" if us < 100 else
+              f"{name},{us:.1f},{derived}")
+        self.rows.setdefault(bench, []).append(
+            {"name": name, "us_per_call": round(us, 3), "derived": derived,
+             **extra})
+
+    def write(self, bench: str):
+        path = os.path.join(_HERE, f"BENCH_{bench}.json")
+        with open(path, "w") as f:
+            json.dump({"bench": bench, "rows": self.rows.get(bench, [])},
+                      f, indent=1)
+        return path
+
+
+REC = Recorder()
+
 
 def _time(fn, *args, n=10, warmup=2):
+    """Median per-call latency in us (robust to CPU scheduling noise)."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    samples = []
     for _ in range(n):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / n * 1e6  # us
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples)) * 1e6  # us
 
 
 def bench_update_throughput():
-    """B1: edges/sec for batched updates; flat across graph sizes = O(1)."""
+    """B1: edges/sec for batched updates; flat across graph sizes = O(1),
+    plus a new-edge-fraction sweep of the fused pipeline vs the seed path."""
     batch = 1024
     rows = []
     for num_nodes in (256, 1024, 4096):
@@ -59,12 +95,53 @@ def bench_update_throughput():
         us = _time(lambda: mc.update_batch(state, s, d, cfg=cfg), n=5)
         eps = batch / (us / 1e6)
         rows.append((num_nodes, us, eps))
-        print(f"B1_update_throughput[nodes={num_nodes}],{us:.1f},"
-              f"{eps:.0f} edges/s")
+        REC.emit("update", f"B1_update_throughput[nodes={num_nodes}]", us,
+                 f"{eps:.0f} edges/s", nodes=num_nodes,
+                 edges_per_s=round(eps))
     # O(1) check: us/edge varies < 3x across 16x graph growth
     per_edge = [r[1] / batch for r in rows]
-    print(f"B1_o1_ratio,{max(per_edge)/min(per_edge):.2f},"
-          f"us/edge ratio across 16x graph sizes")
+    REC.emit("update", "B1_o1_ratio", max(per_edge) / min(per_edge),
+             "us/edge ratio across 16x graph sizes")
+
+    # new-edge-fraction sweep: fused pipeline (bounded slow path, kernel
+    # dispatch) vs the seed implementation (O(B) sequential scan per batch).
+    # Injected new edges reuse warmed srcs, so num_rows stays at graph scale.
+    num_nodes = 1024
+    cfg = mc.MCConfig(num_rows=num_nodes, capacity=64, sort_passes=1,
+                      max_new_per_batch=128)
+    graph = MarkovGraphSampler(num_nodes=num_nodes, out_degree=32, seed=0)
+    state = mc.init(cfg)
+    # warm with the FULL edge list, uncapped, so every graph edge is live
+    # and frac exactly controls the new-edge count (paper's steady state);
+    # warming through the capped config would silently defer most edges
+    warm_cfg = dataclasses.replace(cfg, max_new_per_batch=0)
+    all_src = np.repeat(np.arange(num_nodes, dtype=np.int32),
+                        graph.out_degree)
+    all_dst = graph.dsts.reshape(-1).astype(np.int32)
+    for i in range(0, all_src.size, batch):
+        state = mc.update_batch(state, jnp.asarray(all_src[i:i + batch]),
+                                jnp.asarray(all_dst[i:i + batch]),
+                                cfg=warm_cfg)
+    for frac in (0.0, 0.01, 0.1, 0.5):
+        s, d = graph.sample_transitions_mixed(batch, frac)
+        s, d = jnp.asarray(s), jnp.asarray(d)
+        us_new = _time(lambda: mc.update_batch(state, s, d, cfg=cfg), n=15)
+        us_ref = _time(
+            lambda: mc.update_batch_reference(state, s, d, cfg=cfg), n=15)
+        speedup = us_ref / us_new
+        # work parity check: edges the capped path defers but the seed
+        # path applies (0 while round(frac * batch) <= max_new_per_batch)
+        deferred = int(mc.update_batch(state, s, d, cfg=cfg).deferred_new
+                       - state.deferred_new)
+        REC.emit("update", f"B1_new_edge_sweep[frac={frac}]", us_new,
+                 f"{speedup:.1f}x vs seed path ({us_ref:.0f} us, "
+                 f"deferred={deferred})",
+                 new_edge_fraction=frac, batch=batch,
+                 us_per_call_seed=round(us_ref, 3),
+                 speedup_vs_seed=round(speedup, 2),
+                 deferred_new=deferred,
+                 max_new_per_batch=cfg.max_new_per_batch)
+    REC.write("update")
 
 
 def bench_query_cdf():
@@ -85,8 +162,11 @@ def bench_query_cdf():
             _, _, n_needed = mc.query_threshold(state, srcs, t, cfg=cfg,
                                                 max_items=48)
             mean_items = float(jnp.mean(n_needed.astype(jnp.float32)))
-            print(f"B2_query_cdf[s={zipf_s};t={t}],{us/512:.2f},"
-                  f"{mean_items:.2f} items touched (CDF^-1)")
+            REC.emit("query_cdf", f"B2_query_cdf[s={zipf_s};t={t}]", us / 512,
+                     f"{mean_items:.2f} items touched (CDF^-1)",
+                     zipf_s=zipf_s, threshold=t,
+                     mean_items=round(mean_items, 3))
+    REC.write("query_cdf")
 
 
 def bench_sortedness():
@@ -103,8 +183,10 @@ def bench_sortedness():
                                     cfg=cfg)
             fracs.append(float(sl.sorted_fraction(state.slabs.cnt,
                                                   state.slabs.order)))
-        print(f"B3_sortedness[passes={passes}],0,"
-              f"{np.mean(fracs[5:]):.4f} sorted fraction steady state")
+        REC.emit("sortedness", f"B3_sortedness[passes={passes}]", 0.0,
+                 f"{np.mean(fracs[5:]):.4f} sorted fraction steady state",
+                 passes=passes, sorted_fraction=round(float(np.mean(fracs[5:])), 5))
+    REC.write("sortedness")
 
 
 def bench_decay():
@@ -120,8 +202,10 @@ def bench_decay():
     us = _time(lambda: mc.decay(state, cfg=cfg), n=5)
     state2 = mc.decay(state, cfg=cfg)
     live_after = int(jnp.sum(state2.slabs.cnt > 0))
-    print(f"B4_decay,{us:.1f},evicted {live_before - live_after} of "
-          f"{live_before} edges")
+    REC.emit("decay", "B4_decay", us,
+             f"evicted {live_before - live_after} of {live_before} edges",
+             evicted=live_before - live_after, live_before=live_before)
+    REC.write("decay")
 
 
 def bench_hash_vs_scan():
@@ -138,7 +222,9 @@ def bench_hash_vs_scan():
         s, d = graph.sample_transitions(1024)
         s, d = jnp.asarray(s), jnp.asarray(d)
         us = _time(lambda: mc.update_batch(state, s, d, cfg=cfg), n=5)
-        print(f"B5_dst_lookup[{label}],{us:.1f},update batch 1024")
+        REC.emit("hash_vs_scan", f"B5_dst_lookup[{label}]", us,
+                 "update batch 1024", lookup=label)
+    REC.write("hash_vs_scan")
 
 
 def bench_drafter():
@@ -166,8 +252,10 @@ def bench_drafter():
     okm = np.asarray(ok)[:, 0]
     want = succ[np.asarray(ctx)[:, -1]]
     acc = float(np.mean((np.asarray(draft)[:, 0] == want)[okm])) if okm.any() else 0.0
-    print(f"B6_drafter,{us:.0f},top-1 draft matches true successor "
-          f"{acc:.0%} of ok-drafts")
+    REC.emit("drafter", "B6_drafter", us,
+             f"top-1 draft matches true successor {acc:.0%} of ok-drafts",
+             acceptance=round(acc, 4))
+    REC.write("drafter")
 
 
 def bench_sharded_routing():
@@ -180,9 +268,9 @@ def bench_sharded_routing():
         import os, time
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
         from repro.core import mcprioq as mc, sharded as sh
-        mesh = jax.make_mesh((8,), ("shard",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((8,), ("shard",))
         scfg = sh.ShardedConfig(base=mc.MCConfig(num_rows=2048, capacity=32,
                                                  sort_passes=1),
                                 num_shards=8, bucket_factor=2.0)
@@ -207,7 +295,16 @@ def bench_sharded_routing():
          env.get("PYTHONPATH", "")])
     out = subprocess.run([sys.executable, "-c", script], env=env,
                          capture_output=True, text=True, timeout=900)
-    print(out.stdout.strip() or f"B7_sharded_routing,FAILED,{out.stderr[-200:]}")
+    # stdout may carry stray warnings: keep the last well-formed B7_ line
+    lines = [ln for ln in out.stdout.splitlines()
+             if ln.startswith("B7_") and ln.count(",") >= 2]
+    if lines:
+        name, us, derived = lines[-1].split(",", 2)
+        REC.emit("sharded_routing", name, float(us), derived)
+    else:  # keep the grep-able FAILED sentinel in CSV and JSON
+        REC.emit("sharded_routing", "B7_sharded_routing", -1.0,
+                 f"FAILED {out.stderr[-200:]}", failed=True)
+    REC.write("sharded_routing")
 
 
 def main() -> None:

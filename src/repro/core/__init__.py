@@ -16,4 +16,5 @@ from repro.core.mcprioq import (  # noqa: F401
     query_threshold,
     query_topk,
     update_batch,
+    update_batch_reference,
 )

@@ -14,20 +14,36 @@ Data layout
 
 Update semantics (paper §II.A, TPU-batched)
 -------------------------------------------
-A batch of transitions is split into the paper's two cases:
-  * **update of edge** (normal case): the edge already exists — a pure
-    conflict-free scatter-add on (row, slot), exactly the paper's "O(1) lookup
-    + atomic increment".  In-batch duplicates aggregate in the scatter.
-  * **new edge** (rare case): handled by a deterministic sequential pass
-    (lax.scan) that allocates rows/slots and applies Space-Saving tail
-    replacement when a row is full (DESIGN.md assumption log).
-Afterwards ``sort_passes`` odd-even passes restore approximate order — the
-paper's lock-free bubble sort.
+A batch of B transitions runs through a three-stage pipeline:
+  * **pre-aggregation**: the batch is sorted by (src, dst) and duplicate
+    edges are segment-summed into one item each, so B raw transitions
+    collapse to U unique edges before either path runs — the batched
+    analogue of contended atomics coalescing on one cache line (and the
+    relaxed-batching insight of the MultiQueues line of work).
+  * **update of edge** (normal case): the edge already exists — a fused
+    batched increment via :func:`repro.kernels.ops.slab_update` (the
+    paper's "O(1) lookup + atomic increment" as one kernel dispatch).
+  * **new edge** (rare case): new-edge items are stable-partitioned to a
+    static ``max_new_per_batch`` prefix and handled by a deterministic
+    sequential pass (lax.scan) that allocates rows/slots and applies
+    Space-Saving tail replacement when a row is full (DESIGN.md assumption
+    log).  The scan is wrapped in ``lax.cond`` so a batch with zero new
+    edges skips it entirely: slow-path cost is O(new edges), not O(B).
+    Edges past the prefix are counted in ``deferred_new`` (the caller may
+    resubmit; DESIGN.md §2 observability).
+Afterwards ``sort_passes`` odd-even passes (``ops.oddeven_sort``) restore
+approximate order — the paper's lock-free bubble sort.
+
+Kernel dispatch is selected by ``MCConfig.impl`` (``auto``/``ref``/
+``pallas``); ``core``, ``sharded`` and ``serve`` all inherit the fused paths
+through this module.  ``update_batch_reference`` keeps the pre-kernel
+O(B)-scan semantics as an oracle for equivalence tests and benchmarks.
 
 Inference (paper §II.B)
 -----------------------
 ``query_threshold`` walks the order permutation accumulating probability until
 the cumulative sum crosses ``t``: complexity O(CDF^-1(t)) items touched.
+Both queries run through :func:`repro.kernels.ops.cdf_query`.
 """
 
 from __future__ import annotations
@@ -43,6 +59,7 @@ from repro.core import hashtable as ht
 from repro.core import slab as sl
 from repro.core.hashtable import EMPTY, HashTable
 from repro.core.slab import Slabs
+from repro.kernels import ops
 
 
 def _next_pow2(x: int) -> int:
@@ -63,12 +80,19 @@ class MCConfig:
     sort_passes: int = 1          # odd-even passes per update batch
     use_dst_hash: bool = False    # paper's optional dst->slot hash table
     dst_table_size: int = 0       # per-row; 0 -> 4 * capacity pow2
+    max_new_per_batch: int = 0    # slow-path prefix; 0 = unbounded (batch)
+    impl: str = "auto"            # kernel dispatch: auto | ref | pallas
 
     def resolved_table_size(self) -> int:
         return self.table_size or _next_pow2(4 * self.num_rows)
 
     def resolved_dst_table_size(self) -> int:
         return self.dst_table_size or _next_pow2(4 * self.capacity)
+
+    def resolved_max_new(self, batch: int) -> int:
+        if self.max_new_per_batch <= 0:
+            return batch
+        return min(self.max_new_per_batch, batch)
 
 
 class MCState(NamedTuple):
@@ -82,6 +106,7 @@ class MCState(NamedTuple):
     dropped_rows: jax.Array    # srcs dropped because num_rows exhausted
     dropped_probes: jax.Array  # items dropped on probe-window overflow
     evictions: jax.Array       # Space-Saving tail replacements
+    deferred_new: jax.Array    # new edges past the max_new_per_batch prefix
 
 
 def init(cfg: MCConfig) -> MCState:
@@ -96,6 +121,7 @@ def init(cfg: MCConfig) -> MCState:
         dropped_rows=jnp.int32(0),
         dropped_probes=jnp.int32(0),
         evictions=jnp.int32(0),
+        deferred_new=jnp.int32(0),
     )
 
 
@@ -181,6 +207,59 @@ def _find_slots(state: MCState, rows: jax.Array, dst: jax.Array, cfg: MCConfig):
 # ---------------------------------------------------------------------------
 
 
+def _aggregate_batch(src, dst, w, active):
+    """Collapse in-batch duplicates: B items -> U unique (src, dst) edges.
+
+    Sorts the batch by (inactive, src, dst) — inactive items sink to the
+    tail — and segment-sums weights into the first occurrence (*head*) of
+    each unique edge.  Returns ``(src, dst, w, head, pos)`` in sorted order
+    where ``head`` marks the unique-edge representatives, ``pos`` is each
+    head edge's first-occurrence position in the original batch (for
+    arrival-order tie-breaks downstream); non-head slots carry
+    ``src = dst = -1`` and ``w = 0``.
+    """
+    b = src.shape[0]
+    inactive = (~active).astype(jnp.int32)
+    idx = jnp.arange(b, dtype=jnp.int32)
+    inact_s, src_s, dst_s, w_s, idx_s = jax.lax.sort(
+        (inactive, src, dst, w, idx), num_keys=3, is_stable=True)
+    act_s = inact_s == 0
+    first = jnp.concatenate([
+        jnp.ones((1,), bool),
+        (src_s[1:] != src_s[:-1]) | (dst_s[1:] != dst_s[:-1])])
+    head = act_s & first
+    # segment id of each item = index of its head; heads are in ascending
+    # order so the cumsum is sorted (segment_sum fast path)
+    seg = jnp.clip(jnp.cumsum(head.astype(jnp.int32)) - 1, 0, b - 1)
+    sums = jax.ops.segment_sum(jnp.where(act_s, w_s, 0), seg,
+                               num_segments=b, indices_are_sorted=True)
+    mins = jax.ops.segment_min(jnp.where(act_s, idx_s, b), seg,
+                               num_segments=b, indices_are_sorted=True)
+    u_w = jnp.where(head, sums[seg], 0).astype(w.dtype)
+    u_src = jnp.where(head, src_s, -1)
+    u_dst = jnp.where(head, dst_s, -1)
+    u_pos = jnp.where(head, mins[seg], b).astype(jnp.int32)
+    return u_src, u_dst, u_w, head, u_pos
+
+
+def _take_new_prefix(src, dst, w, pos, new_mask, limit: int):
+    """Stable-partition new-edge items to the front, truncated to ``limit``.
+
+    Ties inside the partition break by ``pos`` (original arrival order), so
+    a tight ``max_new_per_batch`` admits the earliest-arriving new edges
+    instead of starving high node-ids (the seed's "batch order wins" rule).
+    Returns ``(src[limit], dst[limit], w[limit], mask[limit], overflow)``
+    where ``overflow`` counts new edges that did not fit in the prefix.
+    """
+    key = (~new_mask).astype(jnp.int32)
+    key_s, _, p_src, p_dst, p_w = jax.lax.sort(
+        (key, pos, src, dst, w), num_keys=2, is_stable=True)
+    p_mask = key_s[:limit] == 0
+    overflow = jnp.sum(new_mask.astype(jnp.int32)) - \
+        jnp.sum(p_mask.astype(jnp.int32))
+    return p_src[:limit], p_dst[:limit], p_w[:limit], p_mask, overflow
+
+
 def _slow_path(state: MCState, src, dst, w, active, cfg: MCConfig) -> MCState:
     """Sequential insert pass for new edges / new rows (the paper's rare case).
 
@@ -247,9 +326,85 @@ def update_batch(
 ) -> MCState:
     """Apply a batch of transitions ``src[i] -> dst[i]`` (paper §II.A).
 
-    Fast path (existing edges): one conflict-free scatter-add — the batched
-    equivalent of the paper's atomic fetch-add.  Slow path (new edges): the
-    sequential pass above.  Then ``cfg.sort_passes`` odd-even passes.
+    Pipeline: pre-aggregate duplicates, fused fast-path increment
+    (``ops.slab_update``), bounded sequential slow path for new edges
+    (skipped via ``lax.cond`` when the batch has none), then
+    ``cfg.sort_passes`` odd-even passes (``ops.oddeven_sort``).
+    """
+    b = src.shape[0]
+    w = jnp.ones((b,), jnp.int32) if weights is None else weights.astype(jnp.int32)
+    m = jnp.ones((b,), bool) if mask is None else mask
+    m = m & (src >= 0) & (dst >= 0)
+
+    # (1) pre-aggregate: B items -> U unique edges (duplicates never pay a
+    # slow-path step again)
+    u_src, u_dst, u_w, u_act, u_pos = _aggregate_batch(src, dst, w, m)
+
+    # (2) classify against the pre-state: edge exists <=> fast
+    rows0, found_src0 = lookup_rows(state, u_src, cfg)
+    _, found_d0 = _find_slots(state, rows0, u_dst, cfg)
+    fast = u_act & found_src0 & found_d0
+
+    # (3) fast path: fused batched increment through the kernel layer (the
+    # batched equivalent of the paper's atomic fetch-add)
+    slabs = state.slabs
+    cnt, tot = ops.slab_update(
+        jnp.where(fast, rows0, -1), u_dst, u_w,
+        slabs.dst, slabs.cnt, slabs.tot, impl=cfg.impl)
+    state = state._replace(slabs=Slabs(slabs.dst, cnt, tot, slabs.order))
+
+    # (4) slow path: new edges only, partitioned to a static prefix so the
+    # sequential scan is O(max_new), and skipped entirely when empty.  A
+    # second, 4x-shorter scan tier handles the common "a few new edges"
+    # case so the cost tracks the actual new-edge count, not the bound.
+    new_mask = u_act & ~fast
+    limit = cfg.resolved_max_new(b)
+    p_src, p_dst, p_w, p_mask, overflow = _take_new_prefix(
+        u_src, u_dst, u_w, u_pos, new_mask, limit)
+    state = state._replace(deferred_new=state.deferred_new + overflow)
+    n_new = jnp.sum(p_mask.astype(jnp.int32))
+    small = max(limit // 4, 1)
+
+    def run_prefix(n):
+        return lambda st: _slow_path(
+            st, p_src[:n], p_dst[:n], p_w[:n], p_mask[:n], cfg)
+
+    if small < limit:
+        state = jax.lax.cond(
+            n_new == 0, lambda st: st,
+            lambda st: jax.lax.cond(
+                n_new <= small, run_prefix(small), run_prefix(limit), st),
+            state)
+    else:
+        state = jax.lax.cond(
+            n_new == 0, lambda st: st, run_prefix(limit), state)
+
+    # (5) lock-free bubble sort, through the kernel layer
+    if cfg.sort_passes:
+        slabs = state.slabs
+        order = ops.oddeven_sort(slabs.cnt, slabs.order,
+                                 passes=cfg.sort_passes, impl=cfg.impl)
+        state = state._replace(
+            slabs=Slabs(slabs.dst, slabs.cnt, slabs.tot, order))
+    return state
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def update_batch_reference(
+    state: MCState,
+    src: jax.Array,
+    dst: jax.Array,
+    weights: Optional[jax.Array] = None,
+    mask: Optional[jax.Array] = None,
+    *,
+    cfg: MCConfig,
+) -> MCState:
+    """Pre-kernel oracle for :func:`update_batch` (the seed implementation).
+
+    Inline scatter-add fast path + an O(B) sequential slow path that walks
+    every batch item.  Kept as the semantic ground truth for equivalence
+    tests and as the benchmark baseline; ``max_new_per_batch``/``impl`` are
+    deliberately ignored here.
     """
     b = src.shape[0]
     w = jnp.ones((b,), jnp.int32) if weights is None else weights.astype(jnp.int32)
@@ -282,6 +437,21 @@ def update_batch(
 # ---------------------------------------------------------------------------
 
 
+def _ordered_rows(state: MCState, src: jax.Array, cfg: MCConfig):
+    """Gather counts/dsts of each queried row in priority order.
+
+    The kernel-side layout transform shared by both queries: counts of
+    unknown srcs are zeroed so downstream liveness tests (``c > 0``) subsume
+    the ``found`` mask.
+    """
+    rows, found = lookup_rows(state, src, cfg)
+    order = state.slabs.order[rows]                       # [B, C]
+    c = jnp.take_along_axis(state.slabs.cnt[rows], order, axis=1)
+    d = jnp.take_along_axis(state.slabs.dst[rows], order, axis=1)
+    c = jnp.where(found[:, None], c, 0)
+    return c, d, state.slabs.tot[rows], found
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "max_items"))
 def query_threshold(
     state: MCState,
@@ -296,36 +466,23 @@ def query_threshold(
     Returns ``(dsts[B, max_items], probs[B, max_items], n_needed[B])`` where
     entries past ``n_needed`` are EMPTY/0.  ``n_needed`` is the paper's
     CDF^-1(t): how many items a reader must touch.  Unknown srcs yield 0.
+    Runs through the kernel layer (``ops.cdf_query``).
     """
-    rows, found = lookup_rows(state, src, cfg)
-    order = state.slabs.order[rows]                       # [B, C]
-    c = jnp.take_along_axis(state.slabs.cnt[rows], order, axis=1)
-    d = jnp.take_along_axis(state.slabs.dst[rows], order, axis=1)
-    tot = jnp.maximum(state.slabs.tot[rows], 1).astype(jnp.float32)
-    p = c.astype(jnp.float32) / tot[:, None]
-    cum = jnp.cumsum(p, axis=1)
-    # item i is needed if the cumulative sum *before* it is < t and it is live
-    before = cum - p
-    needed = (before < threshold) & (c > 0) & found[:, None]
-    n_needed = jnp.sum(needed.astype(jnp.int32), axis=1)
-    k = max_items
-    dk, pk, nk = d[:, :k], p[:, :k], needed[:, :k]
-    dk = jnp.where(nk, dk, EMPTY)
-    pk = jnp.where(nk, pk, 0.0)
-    return dk, pk, n_needed
+    c, d, tot, _ = _ordered_rows(state, src, cfg)
+    return ops.cdf_query(c, d, tot, threshold, max_items=max_items,
+                         impl=cfg.impl)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "k"))
 def query_topk(state: MCState, src: jax.Array, *, cfg: MCConfig, k: int = 8):
-    """Top-k edges by (approximate) probability. ``(dsts[B,k], probs[B,k])``."""
-    rows, found = lookup_rows(state, src, cfg)
-    order = state.slabs.order[rows][:, :k]
-    c = jnp.take_along_axis(state.slabs.cnt[rows], order, axis=1)
-    d = jnp.take_along_axis(state.slabs.dst[rows], order, axis=1)
-    tot = jnp.maximum(state.slabs.tot[rows], 1).astype(jnp.float32)
-    p = c.astype(jnp.float32) / tot[:, None]
-    live = (c > 0) & found[:, None]
-    return jnp.where(live, d, EMPTY), jnp.where(live, p, 0.0)
+    """Top-k edges by (approximate) probability. ``(dsts[B,k], probs[B,k])``.
+
+    A threshold query that can never be satisfied (t > 1) keeps every live
+    item, so top-k shares the fused CDF kernel.
+    """
+    c, d, tot, _ = _ordered_rows(state, src, cfg)
+    dk, pk, _ = ops.cdf_query(c, d, tot, 2.0, max_items=k, impl=cfg.impl)
+    return dk, pk
 
 
 # ---------------------------------------------------------------------------

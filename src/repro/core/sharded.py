@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import mcprioq as mc
 from repro.core.hashtable import EMPTY, hash_u32
 
@@ -142,9 +143,8 @@ def make_update_fn(scfg: ShardedConfig, mesh: jax.sharding.Mesh):
     state_spec = jax.tree_util.tree_map(lambda _: P(a), mc.init(scfg.base))
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
-        in_specs=(state_spec, P(a), P(a), P(a)), out_specs=state_spec,
-        check_vma=False)
+        compat.shard_map, mesh=mesh,
+        in_specs=(state_spec, P(a), P(a), P(a)), out_specs=state_spec)
     def fn(state, src, dst, w):
         return _update_local(state, src, dst, w, scfg)
 
@@ -157,9 +157,8 @@ def make_query_fn(scfg: ShardedConfig, mesh: jax.sharding.Mesh,
     state_spec = jax.tree_util.tree_map(lambda _: P(a), mc.init(scfg.base))
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
-        in_specs=(state_spec, P(a)), out_specs=(P(a), P(a), P(a)),
-        check_vma=False)
+        compat.shard_map, mesh=mesh,
+        in_specs=(state_spec, P(a)), out_specs=(P(a), P(a), P(a)))
     def fn(state, src):
         return _query_local(state, src, threshold, max_items, scfg)
 

@@ -54,6 +54,25 @@ class MarkovGraphSampler:
         dst = self.dsts[src, choice].astype(np.int32)
         return src, dst
 
+    def sample_transitions_mixed(self, batch: int, new_frac: float,
+                                 new_offset: int = 0
+                                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """Batch with a controlled fraction of guaranteed-new edges.
+
+        ``round(new_frac * batch)`` items get dst ids beyond ``num_nodes``
+        (so the edge cannot exist in any state warmed on this graph), each
+        unique within the batch; the rest are ordinary graph transitions.
+        ``new_offset`` shifts the injected id range so successive calls can
+        produce disjoint new edges.  Used by the B1 new-edge-fraction sweep.
+        """
+        src, dst = self.sample_transitions(batch)
+        n_new = int(round(new_frac * batch))
+        if n_new:
+            idx = self._rng.choice(batch, size=n_new, replace=False)
+            dst[idx] = (self.num_nodes + new_offset
+                        + np.arange(n_new)).astype(np.int32)
+        return src, dst
+
     def sample_walks(self, batch: int, length: int) -> np.ndarray:
         """Random walks [batch, length] — session streams for the
         recommender example / token streams for the drafter."""

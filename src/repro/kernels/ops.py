@@ -24,6 +24,16 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+_IMPLS = ("auto", "ref", "pallas")
+
+
+def _use_ref(impl: str) -> bool:
+    """Validate ``impl`` and decide the dispatch (trace time, static arg)."""
+    if impl not in _IMPLS:
+        raise ValueError(f"impl must be one of {_IMPLS}, got {impl!r}")
+    return impl == "ref" or (impl == "auto" and not _on_tpu())
+
+
 def _pad_rows(x: jax.Array, mult: int, fill) -> Tuple[jax.Array, int]:
     n = x.shape[0]
     pad = (-n) % mult
@@ -41,9 +51,13 @@ def oddeven_sort(cnt: jax.Array, order: jax.Array, *, passes: int = 1,
                  impl: str = "auto") -> jax.Array:
     """k odd-even passes over every slab row; returns the new order
     permutation (slabs themselves never move — DESIGN.md §2)."""
-    if impl == "ref" or (impl == "auto" and not _on_tpu()):
-        return _ref.oddeven_on_slabs_ref(cnt, order, passes)
+    # kernel layout: gather counts into order position ONCE and carry them
+    # through the swaps, instead of re-gathering every half-pass (same
+    # semantics; see test_oddeven_ref_equals_slab_semantics)
     c_ord = jnp.take_along_axis(cnt, order, axis=1)
+    if _use_ref(impl):
+        _, new_order = _ref.oddeven_ref(c_ord, order, passes)
+        return new_order
     rb = min(_oe.DEFAULT_ROWS_PER_BLOCK, cnt.shape[0])
     c_ord, n = _pad_rows(c_ord, rb, 0)
     order_p, _ = _pad_rows(order, rb, 0)
@@ -59,7 +73,7 @@ def slab_update(rows: jax.Array, dsts: jax.Array, w: jax.Array,
                 *, impl: str = "auto"):
     """Fast-path batched increments; returns (cnt', tot').
     rows < 0 = padding/inactive items."""
-    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+    if _use_ref(impl):
         _, cnt2, tot2, _ = _ref.slab_update_ref(rows, dsts, w, dst_slab, cnt, tot)
         return cnt2, tot2
     rb = min(_su.DEFAULT_ROWS_PER_BLOCK, cnt.shape[0])
@@ -95,7 +109,7 @@ def cdf_query(c_ord: jax.Array, d_ord: jax.Array, tot: jax.Array,
               threshold, *, max_items: int = 16, chunks: int = 1,
               impl: str = "auto"):
     """Threshold inference over pre-ordered rows; see cdf_query.py."""
-    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+    if _use_ref(impl):
         t = threshold if isinstance(threshold, float) else jnp.asarray(threshold)
         return _ref.cdf_query_ref(c_ord, d_ord, tot, t, max_items)
     qb = min(_cdf.DEFAULT_QUERIES_PER_BLOCK, c_ord.shape[0])

@@ -22,6 +22,7 @@ from typing import Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.models.common import dense_init, pdtype_of
 from repro.sharding.specs import BATCH, MODEL, constrain
@@ -296,15 +297,14 @@ def sp_insert_attend(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
         out = out.reshape(bq, sq, qc.shape[2], qc.shape[3]).astype(qc.dtype)
         return out, kc, vc, pc
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(dp, None, None, None), P(dp, None, None, None),
                   P(dp, None, None, None), P(dp, "model", None, None),
                   P(dp, "model", None, None), P(dp, "model"), P(),
                   P(dp, None)),
         out_specs=(P(dp, None, None, None), P(dp, "model", None, None),
-                   P(dp, "model", None, None), P(dp, "model")),
-        check_vma=False)
+                   P(dp, "model", None, None), P(dp, "model")))
     out, k2, v2, p2 = fn(q, k_new, v_new, cache.k, cache.v, cache.positions,
                          cache.ring, q_positions)
     return out, KVCache(k2, v2, p2, cache.ring)

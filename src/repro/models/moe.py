@@ -25,6 +25,7 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.models.common import activation, dense_init, pdtype_of
 from repro.models.mlp import apply_mlp, make_mlp
@@ -156,12 +157,11 @@ def apply_moe_ep(p: Dict, x: jax.Array, cfg: ModelConfig
             jnp.zeros((e,), jnp.int32).at[flat_e].add(1), red)
         return out.reshape(bl, sl, d).astype(xc.dtype), lb, z, drop_tot, cnt
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local_fn, mesh=mesh,
         in_specs=(x_spec, P(None, None), P("model", None, None),
                   P("model", None, None), P("model", None, None)),
-        out_specs=(x_spec, P(), P(), P(), P()),
-        check_vma=False)
+        out_specs=(x_spec, P(), P(), P(), P()))
     weg = p.get("weg", p["we1"])  # placeholder when ungated (unused)
     out, lb, z, drop_tot, cnt = fn(x, p["router"], p["we1"], weg, p["we2"])
     if cfg.num_shared_experts:

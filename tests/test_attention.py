@@ -7,6 +7,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.models import attention as at
 
 
@@ -120,8 +121,7 @@ def test_rope_relative_property():
 def test_sp_insert_attend_matches_plain_on_host_mesh():
     """shard_map SP path == plain insert+attend (1-device mesh degenerate)."""
     from repro.launch.mesh import make_host_mesh
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     rng = np.random.default_rng(3)
     b, t, kvh, h, d = 2, 16, 2, 4, 8
     cache = at.init_cache(b, t, kvh, d, jnp.float32)

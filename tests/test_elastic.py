@@ -13,6 +13,7 @@ SCRIPT = textwrap.dedent("""
     import numpy as np
     import jax, jax.numpy as jnp
     from jax.sharding import NamedSharding
+    from repro import compat
     from repro.checkpoint import ckpt
     from repro.configs import smoke_config
     from repro.models import Model
@@ -31,8 +32,7 @@ SCRIPT = textwrap.dedent("""
     ckdir = tempfile.mkdtemp()
 
     def mesh_of(data, model_ax):
-        return jax.make_mesh((data, model_ax), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return compat.make_mesh((data, model_ax), ("data", "model"))
 
     stream = token_stream(cfg.vocab_size, 8, 32, seed=7)
     batches = [{k: jnp.asarray(v) for k, v in next(stream).items()}

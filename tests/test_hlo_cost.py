@@ -6,6 +6,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.launch import hlo_cost
 
 
@@ -59,7 +60,7 @@ def test_scan_matches_unrolled_xla_cost():
     co_s = _compile(scanned, ws, xs)
     co_u = _compile(unrolled, ws, xs)
     ours = hlo_cost.analyze(co_s.as_text()).flops
-    xla_unrolled = co_u.cost_analysis()["flops"]
+    xla_unrolled = compat.cost_analysis(co_u)["flops"]
     assert ours == pytest.approx(xla_unrolled, rel=0.01)
 
 
@@ -105,9 +106,9 @@ def test_collectives_inside_loops_are_multiplied():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import compat
         from repro.launch import hlo_cost
-        mesh = jax.make_mesh((8,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((8,), ("model",))
         L, m, d = 5, 32, 64
         def f(ws, x):
             def body(x, w):

@@ -10,6 +10,7 @@ SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import dataclasses
     import jax, jax.numpy as jnp, numpy as np
+    from repro import compat
     from repro.configs import smoke_config
     from repro.models import moe as moe_mod
 
@@ -25,8 +26,7 @@ SCRIPT = textwrap.dedent("""
 
     ref, aux_ref = moe_mod.apply_moe(p, x, cfg)  # dense path, no mesh
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
     cfg_ep = dataclasses.replace(cfg, moe_impl="ep")
     with mesh:
         got, aux = jax.jit(

@@ -9,6 +9,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.checkpoint import ckpt
 from repro.data.pipeline import ShardedIterator, shard_batch
 from repro.data.synthetic import MarkovGraphSampler, token_stream
@@ -211,9 +212,9 @@ def test_concretize_strict_vs_lenient():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax
+        from repro import compat
         from repro.sharding.specs import MODEL, concretize
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((2, 4), ("data", "model"))
         P = jax.sharding.PartitionSpec
         # 3 % 4 != 0: strict drops; lenient pads to 4 (25% waste, kept)
         assert concretize((MODEL,), mesh, (3,), strict=True) == P(None)

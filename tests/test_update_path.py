@@ -1,0 +1,215 @@
+"""Equivalence tests for the kernel-routed update/query pipeline.
+
+The fused pipeline (pre-aggregation + ops.slab_update + bounded slow path +
+ops.oddeven_sort) must agree with ``update_batch_reference`` (the pre-kernel
+O(B)-scan oracle) on edge counts, and ``impl='ref'`` must agree bit-exactly
+with ``impl='pallas'`` (interpret mode off-TPU) on the same seeds.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import mcprioq as mc
+from repro.core.hashtable import EMPTY
+
+
+def edge_counts(state, n_srcs, cfg):
+    """Logical view {src: ({dst: cnt}, tot)} — slot-assignment independent."""
+    rows, found = mc.lookup_rows(state, jnp.arange(n_srcs, dtype=jnp.int32),
+                                 cfg=cfg)
+    rows, found = np.asarray(rows), np.asarray(found)
+    dstm, cntm = np.asarray(state.slabs.dst), np.asarray(state.slabs.cnt)
+    totm = np.asarray(state.slabs.tot)
+    out = {}
+    for s in range(n_srcs):
+        if not found[s]:
+            continue
+        r = rows[s]
+        live = dstm[r] != EMPTY
+        out[s] = ({int(d): int(c) for d, c in zip(dstm[r][live], cntm[r][live])},
+                  int(totm[r]))
+    return out
+
+
+def assert_invariants(state):
+    inv = mc.check_invariants(state)
+    assert inv["order_is_permutation"]
+    assert inv["tot_matches_cnt_sum"]
+    assert inv["free_slots_consistent"]
+    assert inv["counts_nonnegative"]
+
+
+@pytest.mark.parametrize("dup_srcs,dup_dsts", [(4, 3), (16, 12)],
+                         ids=["dup_heavy", "dup_light"])
+def test_duplicate_heavy_batches_match_reference(dup_srcs, dup_dsts):
+    """Many duplicates per batch: aggregation must not change the counts."""
+    cfg = mc.MCConfig(num_rows=64, capacity=16, sort_passes=2)
+    rng = np.random.default_rng(0)
+    s_new, s_ref = mc.init(cfg), mc.init(cfg)
+    for _ in range(5):
+        src = jnp.asarray(rng.integers(0, dup_srcs, 128).astype(np.int32))
+        dst = jnp.asarray(rng.integers(0, dup_dsts, 128).astype(np.int32))
+        w = jnp.asarray(rng.integers(1, 4, 128).astype(np.int32))
+        s_new = mc.update_batch(s_new, src, dst, weights=w, cfg=cfg)
+        s_ref = mc.update_batch_reference(s_ref, src, dst, weights=w, cfg=cfg)
+    assert_invariants(s_new)
+    assert edge_counts(s_new, dup_srcs, cfg) == edge_counts(s_ref, dup_srcs, cfg)
+    assert int(s_new.n_rows) == int(s_ref.n_rows)
+    assert int(s_new.deferred_new) == 0
+
+
+def test_all_new_batches_match_reference():
+    """Every item is a new edge: the whole batch goes down the slow path."""
+    cfg = mc.MCConfig(num_rows=64, capacity=32, sort_passes=1)
+    s_new, s_ref = mc.init(cfg), mc.init(cfg)
+    src = jnp.asarray(np.repeat(np.arange(8), 4).astype(np.int32))
+    dst = jnp.asarray(np.tile(np.arange(4), 8).astype(np.int32))
+    s_new = mc.update_batch(s_new, src, dst, cfg=cfg)
+    s_ref = mc.update_batch_reference(s_ref, src, dst, cfg=cfg)
+    assert_invariants(s_new)
+    assert edge_counts(s_new, 8, cfg) == edge_counts(s_ref, 8, cfg)
+    assert int(s_new.deferred_new) == 0
+
+
+def test_fast_only_batches_are_bit_identical():
+    """With no new edges the pipelines share slot assignment, so the states
+    must agree bit-for-bit (and the lax.cond must skip the scan cleanly)."""
+    cfg = mc.MCConfig(num_rows=32, capacity=8, sort_passes=1)
+    rng = np.random.default_rng(1)
+    base = mc.init(cfg)
+    src0 = jnp.asarray(np.repeat(np.arange(4), 4).astype(np.int32))
+    dst0 = jnp.asarray(np.tile(np.arange(4), 4).astype(np.int32))
+    base = mc.update_batch(base, src0, dst0, cfg=cfg)  # shared seeding
+    src = jnp.asarray(rng.integers(0, 4, 64).astype(np.int32))
+    dst = jnp.asarray(rng.integers(0, 4, 64).astype(np.int32))
+    w = jnp.asarray(rng.integers(1, 5, 64).astype(np.int32))
+    s_new = mc.update_batch(base, src, dst, weights=w, cfg=cfg)
+    s_ref = mc.update_batch_reference(base, src, dst, weights=w, cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(s_new.slabs.cnt),
+                                  np.asarray(s_ref.slabs.cnt))
+    np.testing.assert_array_equal(np.asarray(s_new.slabs.tot),
+                                  np.asarray(s_ref.slabs.tot))
+    np.testing.assert_array_equal(np.asarray(s_new.slabs.order),
+                                  np.asarray(s_ref.slabs.order))
+
+
+def test_slow_path_overflow_defers_and_counts():
+    """More new edges than max_new_per_batch: the prefix is applied, the
+    rest is counted in deferred_new, and invariants still hold."""
+    cfg = mc.MCConfig(num_rows=64, capacity=8, sort_passes=1,
+                      max_new_per_batch=4)
+    state = mc.init(cfg)
+    # 10 unique new edges, batch of 20 (each edge duplicated once)
+    src = jnp.asarray(np.repeat(np.arange(10), 2).astype(np.int32))
+    dst = jnp.asarray(np.repeat(np.arange(10) + 100, 2).astype(np.int32))
+    state = mc.update_batch(state, src, dst, cfg=cfg)
+    assert_invariants(state)
+    assert int(state.deferred_new) == 6          # 10 unique - 4 prefix
+    assert int(state.n_rows) == 4
+    # resubmitting the batch drains 4 more (now-existing edges go fast path)
+    state = mc.update_batch(state, src, dst, cfg=cfg)
+    assert int(state.n_rows) == 8
+    assert int(state.deferred_new) == 6 + 2
+    assert_invariants(state)
+
+
+@pytest.mark.parametrize("use_dst_hash", [False, True], ids=["scan", "hash"])
+def test_impl_ref_vs_pallas_agree(use_dst_hash):
+    """impl='ref' and impl='pallas' (interpret) produce identical states and
+    identical query outputs on the same seeds."""
+    mk = lambda impl: mc.MCConfig(num_rows=32, capacity=16, sort_passes=2,
+                                  use_dst_hash=use_dst_hash, impl=impl)
+    cfg_r, cfg_p = mk("ref"), mk("pallas")
+    s_r, s_p = mc.init(cfg_r), mc.init(cfg_p)
+    rng = np.random.default_rng(2)
+    for _ in range(3):
+        src = jnp.asarray(rng.integers(0, 12, 64).astype(np.int32))
+        dst = jnp.asarray(rng.integers(0, 10, 64).astype(np.int32))
+        s_r = mc.update_batch(s_r, src, dst, cfg=cfg_r)
+        s_p = mc.update_batch(s_p, src, dst, cfg=cfg_p)
+    for a, b in zip(s_r.slabs, s_p.slabs):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    srcs = jnp.arange(12, dtype=jnp.int32)
+    d_r, p_r, n_r = mc.query_threshold(s_r, srcs, 0.9, cfg=cfg_r, max_items=8)
+    d_p, p_p, n_p = mc.query_threshold(s_p, srcs, 0.9, cfg=cfg_p, max_items=8)
+    np.testing.assert_array_equal(np.asarray(d_r), np.asarray(d_p))
+    np.testing.assert_array_equal(np.asarray(n_r), np.asarray(n_p))
+    np.testing.assert_allclose(np.asarray(p_r), np.asarray(p_p),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_query_threshold_bit_identical_to_inline_seed_path():
+    """ops.cdf_query routing reproduces the seed's inline computation
+    bit-for-bit on the same state (acceptance criterion)."""
+    cfg = mc.MCConfig(num_rows=32, capacity=16, sort_passes=4)
+    state = mc.init(cfg)
+    rng = np.random.default_rng(3)
+    for _ in range(10):
+        src = jnp.asarray(rng.integers(0, 8, 64).astype(np.int32))
+        dst = jnp.asarray((rng.zipf(1.7, 64) % 12).astype(np.int32))
+        state = mc.update_batch(state, src, dst, cfg=cfg)
+    srcs = jnp.asarray(np.r_[np.arange(8), [99]].astype(np.int32))  # 99 unknown
+    t, k = 0.9, 8
+    got_d, got_p, got_n = mc.query_threshold(state, srcs, t, cfg=cfg,
+                                             max_items=k)
+
+    # the seed's inline computation, verbatim
+    rows, found = mc.lookup_rows(state, srcs, cfg=cfg)
+    order = state.slabs.order[rows]
+    c = jnp.take_along_axis(state.slabs.cnt[rows], order, axis=1)
+    d = jnp.take_along_axis(state.slabs.dst[rows], order, axis=1)
+    tot = jnp.maximum(state.slabs.tot[rows], 1).astype(jnp.float32)
+    p = c.astype(jnp.float32) / tot[:, None]
+    cum = jnp.cumsum(p, axis=1)
+    before = cum - p
+    needed = (before < t) & (c > 0) & found[:, None]
+    n_needed = jnp.sum(needed.astype(jnp.int32), axis=1)
+    dk = jnp.where(needed[:, :k], d[:, :k], EMPTY)
+    pk = jnp.where(needed[:, :k], p[:, :k], 0.0)
+
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(dk))
+    np.testing.assert_array_equal(np.asarray(got_n), np.asarray(n_needed))
+    # bit-identical: same float ops in the same order
+    assert np.asarray(got_p).tobytes() == np.asarray(pk).tobytes()
+
+
+def test_query_topk_matches_inline_seed_path():
+    cfg = mc.MCConfig(num_rows=32, capacity=16, sort_passes=4)
+    state = mc.init(cfg)
+    rng = np.random.default_rng(4)
+    for _ in range(6):
+        src = jnp.asarray(rng.integers(0, 6, 64).astype(np.int32))
+        dst = jnp.asarray(rng.integers(0, 10, 64).astype(np.int32))
+        state = mc.update_batch(state, src, dst, cfg=cfg)
+    srcs = jnp.asarray(np.r_[np.arange(6), [77]].astype(np.int32))
+    k = 8
+    got_d, got_p = mc.query_topk(state, srcs, cfg=cfg, k=k)
+
+    rows, found = mc.lookup_rows(state, srcs, cfg=cfg)
+    order = state.slabs.order[rows][:, :k]
+    c = jnp.take_along_axis(state.slabs.cnt[rows], order, axis=1)
+    d = jnp.take_along_axis(state.slabs.dst[rows], order, axis=1)
+    tot = jnp.maximum(state.slabs.tot[rows], 1).astype(jnp.float32)
+    p = c.astype(jnp.float32) / tot[:, None]
+    live = (c > 0) & found[:, None]
+    np.testing.assert_array_equal(np.asarray(got_d),
+                                  np.asarray(jnp.where(live, d, EMPTY)))
+    assert np.asarray(got_p).tobytes() == \
+        np.asarray(jnp.where(live, p, 0.0)).tobytes()
+
+
+def test_zero_new_edge_batch_skips_slow_path_state_effects():
+    """A batch with zero new edges must leave allocator state untouched."""
+    cfg = mc.MCConfig(num_rows=16, capacity=8, sort_passes=1)
+    state = mc.init(cfg)
+    src = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    dst = jnp.asarray([5, 5, 5, 5], jnp.int32)
+    state = mc.update_batch(state, src, dst, cfg=cfg)
+    n_rows0 = int(state.n_rows)
+    state2 = mc.update_batch(state, src, dst, cfg=cfg)
+    assert int(state2.n_rows) == n_rows0
+    assert int(state2.evictions) == int(state.evictions)
+    assert int(state2.deferred_new) == 0
+    assert_invariants(state2)
