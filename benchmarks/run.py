@@ -8,7 +8,9 @@ has no numbered tables, so each benchmark validates one stated claim:
   B2 query_cdf           O(CDF^-1(t)) inference (§II.B) — items touched vs
                          threshold, per Zipf exponent
   B3 sortedness          approximate order under continuous updates (§II.2)
-  B4 decay               §II.C decay cost + eviction behaviour
+  B4 decay               §II.C maintenance: stop-the-world vs rolling decay
+                         (per-call cost must scale with decay_block_rows,
+                         not num_rows), dst-hash repair on/off
   B5 hash_vs_scan        dst hash-table vs slab scan (§II.2 "may not be that
                          obvious")
   B6 drafter             serving feature: n-gram drafter acceptance rate
@@ -17,13 +19,20 @@ has no numbered tables, so each benchmark validates one stated claim:
 Prints ``name,us_per_call,derived`` CSV lines (harness contract) and writes
 ``BENCH_<bench>.json`` next to this file with the same rows in machine-
 readable form, so successive PRs can diff perf runs.
+
+``--smoke`` shrinks every benchmark to CI scale (same recorders, same JSON
+schema, minutes not hours); ``--validate`` checks every ``BENCH_*.json`` on
+disk against the recorder schema and exits non-zero on stale files.
 """
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import glob
 import json
 import os
+import sys
 import time
 
 import numpy as np
@@ -36,6 +45,8 @@ from repro.core import speculative as spec
 from repro.data.synthetic import MarkovGraphSampler
 
 _HERE = os.path.dirname(os.path.abspath(__file__))
+
+SMOKE = False  # set by --smoke: CI-scale sizes, full recorder coverage
 
 
 class Recorder:
@@ -79,9 +90,9 @@ def _time(fn, *args, n=10, warmup=2):
 def bench_update_throughput():
     """B1: edges/sec for batched updates; flat across graph sizes = O(1),
     plus a new-edge-fraction sweep of the fused pipeline vs the seed path."""
-    batch = 1024
+    batch = 256 if SMOKE else 1024
     rows = []
-    for num_nodes in (256, 1024, 4096):
+    for num_nodes in (256, 1024) if SMOKE else (256, 1024, 4096):
         cfg = mc.MCConfig(num_rows=num_nodes, capacity=64, sort_passes=1)
         graph = MarkovGraphSampler(num_nodes=num_nodes, out_degree=32, seed=0)
         state = mc.init(cfg)
@@ -106,7 +117,7 @@ def bench_update_throughput():
     # new-edge-fraction sweep: fused pipeline (bounded slow path, kernel
     # dispatch) vs the seed implementation (O(B) sequential scan per batch).
     # Injected new edges reuse warmed srcs, so num_rows stays at graph scale.
-    num_nodes = 1024
+    num_nodes = 512 if SMOKE else 1024
     cfg = mc.MCConfig(num_rows=num_nodes, capacity=64, sort_passes=1,
                       max_new_per_batch=128)
     graph = MarkovGraphSampler(num_nodes=num_nodes, out_degree=32, seed=0)
@@ -122,7 +133,7 @@ def bench_update_throughput():
         state = mc.update_batch(state, jnp.asarray(all_src[i:i + batch]),
                                 jnp.asarray(all_dst[i:i + batch]),
                                 cfg=warm_cfg)
-    for frac in (0.0, 0.01, 0.1, 0.5):
+    for frac in (0.0, 0.1) if SMOKE else (0.0, 0.01, 0.1, 0.5):
         s, d = graph.sample_transitions_mixed(batch, frac)
         s, d = jnp.asarray(s), jnp.asarray(d)
         us_new = _time(lambda: mc.update_batch(state, s, d, cfg=cfg), n=15)
@@ -146,13 +157,14 @@ def bench_update_throughput():
 
 def bench_query_cdf():
     """B2: items touched (CDF^-1) and latency vs threshold and Zipf s."""
-    cfg = mc.MCConfig(num_rows=2048, capacity=64, sort_passes=2)
-    for zipf_s in (1.2, 1.5, 2.0):
-        graph = MarkovGraphSampler(num_nodes=2048, out_degree=48,
+    n = 512 if SMOKE else 2048
+    cfg = mc.MCConfig(num_rows=n, capacity=64, sort_passes=2)
+    for zipf_s in (1.5,) if SMOKE else (1.2, 1.5, 2.0):
+        graph = MarkovGraphSampler(num_nodes=n, out_degree=48,
                                    zipf_s=zipf_s, seed=1)
         state = mc.init(cfg)
-        for _ in range(30):
-            s, d = graph.sample_transitions(2048)
+        for _ in range(10 if SMOKE else 30):
+            s, d = graph.sample_transitions(n)
             state = mc.update_batch(state, jnp.asarray(s), jnp.asarray(d),
                                     cfg=cfg)
         srcs = jnp.arange(512, dtype=jnp.int32)
@@ -172,12 +184,12 @@ def bench_query_cdf():
 def bench_sortedness():
     """B3: order quality after each update batch, by sort passes."""
     from repro.core import slab as sl
-    for passes in (0, 1, 2, 4):
+    for passes in (0, 2) if SMOKE else (0, 1, 2, 4):
         cfg = mc.MCConfig(num_rows=512, capacity=64, sort_passes=passes)
         graph = MarkovGraphSampler(num_nodes=512, out_degree=48, seed=2)
         state = mc.init(cfg)
         fracs = []
-        for _ in range(20):
+        for _ in range(10 if SMOKE else 20):
             s, d = graph.sample_transitions(1024)
             state = mc.update_batch(state, jnp.asarray(s), jnp.asarray(d),
                                     cfg=cfg)
@@ -190,40 +202,85 @@ def bench_sortedness():
 
 
 def bench_decay():
-    """B4: decay latency and eviction count on a loaded graph."""
-    cfg = mc.MCConfig(num_rows=4096, capacity=64, sort_passes=1)
-    graph = MarkovGraphSampler(num_nodes=4096, out_degree=32, seed=3)
-    state = mc.init(cfg)
-    for _ in range(20):
-        s, d = graph.sample_transitions(4096)
-        state = mc.update_batch(state, jnp.asarray(s), jnp.asarray(d),
-                                cfg=cfg)
-    live_before = int(jnp.sum(state.slabs.cnt > 0))
-    us = _time(lambda: mc.decay(state, cfg=cfg), n=5)
-    state2 = mc.decay(state, cfg=cfg)
-    live_after = int(jnp.sum(state2.slabs.cnt > 0))
-    REC.emit("decay", "B4_decay", us,
-             f"evicted {live_before - live_after} of {live_before} edges",
-             evicted=live_before - live_after, live_before=live_before)
+    """B4: §II.C maintenance-mode sweep (stop-the-world vs rolling decay,
+    dst-hash repair on vs off).
+
+    Two claims recorded: rolling per-call cost is *bounded* — it scales with
+    ``decay_block_rows``, not ``num_rows`` (``B4_bounded_check``) — and a
+    full rolling sweep costs about the same total work as one stop-the-world
+    call, just amortised across ``n_blocks`` calls.
+    """
+    sizes = (512, 1024) if SMOKE else (1024, 4096)
+    block = 128 if SMOKE else 256   # fixed block: per-call cost must be flat
+    warm_iters = 6 if SMOKE else 20
+    rolling_us = {}
+    stw_us = {}
+    for num_rows in sizes:
+        graph = MarkovGraphSampler(num_nodes=num_rows, out_degree=32, seed=3)
+        for use_hash in (False, True):
+            warm_cfg = mc.MCConfig(num_rows=num_rows, capacity=64,
+                                   sort_passes=1, use_dst_hash=use_hash)
+            state = mc.init(warm_cfg)
+            for _ in range(warm_iters):
+                s, d = graph.sample_transitions(num_rows)
+                state = mc.update_batch(state, jnp.asarray(s), jnp.asarray(d),
+                                        cfg=warm_cfg)
+            live_before = int(jnp.sum(state.slabs.cnt > 0))
+            for block_rows in (0, block):
+                cfg = dataclasses.replace(warm_cfg,
+                                          decay_block_rows=block_rows)
+                us = _time(lambda: mc.decay(state, cfg=cfg), n=5)
+                mode = "stw" if block_rows == 0 else "rolling"
+                hl = "hash" if use_hash else "scan"
+                if block_rows == 0:
+                    state2 = mc.decay(state, cfg=cfg)
+                    live_after = int(jnp.sum(state2.slabs.cnt > 0))
+                    derived = (f"evicted {live_before - live_after} of "
+                               f"{live_before} edges")
+                    stw_us[(num_rows, use_hash)] = us
+                else:
+                    n_blocks = -(-num_rows // block_rows)
+                    derived = (f"1/{n_blocks} of rows per call "
+                               f"(block={block_rows})")
+                    rolling_us[(num_rows, use_hash)] = us
+                REC.emit("decay",
+                         f"B4_decay[rows={num_rows};mode={mode};{hl}]", us,
+                         derived, num_rows=num_rows, mode=mode,
+                         use_dst_hash=use_hash, decay_block_rows=block_rows,
+                         live_edges=live_before)
+    # bounded-cost check: at a fixed block size, rolling per-call cost must
+    # stay ~flat while stop-the-world grows with num_rows
+    lo, hi = sizes[0], sizes[-1]
+    for use_hash in (False, True):
+        roll_ratio = rolling_us[(hi, use_hash)] / rolling_us[(lo, use_hash)]
+        stw_ratio = stw_us[(hi, use_hash)] / stw_us[(lo, use_hash)]
+        hl = "hash" if use_hash else "scan"
+        REC.emit("decay", f"B4_bounded_check[{hl}]", roll_ratio,
+                 f"rolling per-call ratio across {hi // lo}x rows "
+                 f"(stop-the-world ratio {stw_ratio:.2f})",
+                 rolling_ratio=round(roll_ratio, 3),
+                 stw_ratio=round(stw_ratio, 3),
+                 rows_factor=hi // lo, decay_block_rows=block)
     REC.write("decay")
 
 
 def bench_hash_vs_scan():
     """B5: dst lookup via per-row hash table vs C-lane slab scan."""
+    n = 512 if SMOKE else 1024
     for use_hash, label in ((False, "scan"), (True, "hash")):
-        cfg = mc.MCConfig(num_rows=1024, capacity=64, sort_passes=1,
+        cfg = mc.MCConfig(num_rows=n, capacity=64, sort_passes=1,
                           use_dst_hash=use_hash)
-        graph = MarkovGraphSampler(num_nodes=1024, out_degree=48, seed=4)
+        graph = MarkovGraphSampler(num_nodes=n, out_degree=48, seed=4)
         state = mc.init(cfg)
         for _ in range(4):
-            s, d = graph.sample_transitions(1024)
+            s, d = graph.sample_transitions(n)
             state = mc.update_batch(state, jnp.asarray(s), jnp.asarray(d),
                                     cfg=cfg)
-        s, d = graph.sample_transitions(1024)
+        s, d = graph.sample_transitions(n)
         s, d = jnp.asarray(s), jnp.asarray(d)
         us = _time(lambda: mc.update_batch(state, s, d, cfg=cfg), n=5)
         REC.emit("hash_vs_scan", f"B5_dst_lookup[{label}]", us,
-                 "update batch 1024", lookup=label)
+                 f"update batch {n}", lookup=label)
     REC.write("hash_vs_scan")
 
 
@@ -264,30 +321,33 @@ def bench_sharded_routing():
     import subprocess
     import sys
     import textwrap
-    script = textwrap.dedent("""
+    shards = 4 if SMOKE else 8
+    rows = 512 if SMOKE else 2048
+    batch = 1024 if SMOKE else 4096
+    script = textwrap.dedent(f"""
         import os, time
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={shards}"
         import jax, jax.numpy as jnp, numpy as np
         from repro import compat
         from repro.core import mcprioq as mc, sharded as sh
-        mesh = compat.make_mesh((8,), ("shard",))
-        scfg = sh.ShardedConfig(base=mc.MCConfig(num_rows=2048, capacity=32,
+        mesh = compat.make_mesh(({shards},), ("shard",))
+        scfg = sh.ShardedConfig(base=mc.MCConfig(num_rows={rows}, capacity=32,
                                                  sort_passes=1),
-                                num_shards=8, bucket_factor=2.0)
+                                num_shards={shards}, bucket_factor=2.0)
         state = sh.init_sharded(scfg, mesh)
         upd = sh.make_update_fn(scfg, mesh)
         rng = np.random.default_rng(0)
-        src = jnp.asarray(rng.integers(0, 8192, 4096).astype(np.int32))
-        dst = jnp.asarray(rng.integers(0, 512, 4096).astype(np.int32))
-        w = jnp.ones((4096,), jnp.int32)
+        src = jnp.asarray(rng.integers(0, 8192, {batch}).astype(np.int32))
+        dst = jnp.asarray(rng.integers(0, 512, {batch}).astype(np.int32))
+        w = jnp.ones(({batch},), jnp.int32)
         state = upd(state, src, dst, w)  # compile
         t0 = time.perf_counter()
         for _ in range(5):
             state = upd(state, src, dst, w)
         jax.block_until_ready(state.slabs.cnt)
         us = (time.perf_counter() - t0) / 5 * 1e6
-        print(f"B7_sharded_routing,{us:.0f},4096 edges over 8 shards "
-              f"(dropped={int(jnp.sum(state.dropped_probes))})")
+        print(f"B7_sharded_routing,{{us:.0f}},{batch} edges over {shards} shards "
+              f"(dropped={{int(jnp.sum(state.dropped_probes))}})")
     """)
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
@@ -307,7 +367,62 @@ def bench_sharded_routing():
     REC.write("sharded_routing")
 
 
+# ---------------------------------------------------------------------------
+# schema validation (CI: BENCH_*.json must stay generatable + well-formed)
+# ---------------------------------------------------------------------------
+
+REQUIRED_ROW_KEYS = ("name", "us_per_call", "derived")
+
+
+def validate_bench_files() -> int:
+    """Check every BENCH_*.json against the Recorder schema.
+
+    Returns the number of problems found (0 = all good); prints one line per
+    problem so CI logs point at the stale file directly.
+    """
+    problems = []
+    paths = sorted(glob.glob(os.path.join(_HERE, "BENCH_*.json")))
+    if not paths:
+        problems.append("no BENCH_*.json files found (run benchmarks first)")
+    for path in paths:
+        name = os.path.basename(path)
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            problems.append(f"{name}: unreadable ({e})")
+            continue
+        if not isinstance(data.get("bench"), str) or \
+                not isinstance(data.get("rows"), list):
+            problems.append(f"{name}: missing 'bench'/'rows' envelope")
+            continue
+        if not data["rows"]:
+            problems.append(f"{name}: empty rows")
+            continue
+        for i, row in enumerate(data["rows"]):
+            missing = [k for k in REQUIRED_ROW_KEYS if k not in row]
+            if missing:
+                problems.append(
+                    f"{name}: row {i} ({row.get('name', '?')}) "
+                    f"missing {missing}")
+    for p in problems:
+        print(f"SCHEMA: {p}")
+    if not problems:
+        print(f"validated {len(paths)} BENCH_*.json files")
+    return len(problems)
+
+
 def main() -> None:
+    global SMOKE
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-scale sizes; same recorders and JSON schema")
+    ap.add_argument("--validate", action="store_true",
+                    help="only validate existing BENCH_*.json schemas")
+    args = ap.parse_args()
+    if args.validate:
+        sys.exit(1 if validate_bench_files() else 0)
+    SMOKE = args.smoke
     print("name,us_per_call,derived")
     bench_update_throughput()
     bench_query_cdf()

@@ -20,6 +20,7 @@ lets the buffer be donated.
 from __future__ import annotations
 
 import threading
+import time
 from typing import Any, Callable, NamedTuple, Optional
 
 
@@ -64,15 +65,21 @@ class EpochStore:
             self._maybe_retire_locked()
         return new.version
 
-    def synchronize(self) -> None:
+    def synchronize(self, poll_interval: float = 1e-4) -> None:
         """Block until every reader of pre-current versions has released —
-        the literal ``synchronize_rcu()``. Busy-wait is fine: sections are
-        one inference step long."""
+        the literal ``synchronize_rcu()``.  Polls with a short exponential
+        backoff: a tight loop re-acquiring ``self._lock`` would starve the
+        very readers it waits on under the GIL (they need the lock to
+        release), turning a one-inference-step grace period into a livelock.
+        """
         cur = self._snap.version
+        delay = poll_interval
         while True:
             with self._lock:
                 if all(n == 0 for v, n in self._readers.items() if v < cur):
                     return
+            time.sleep(delay)
+            delay = min(delay * 2, 0.01)
 
     # -- reclamation -----------------------------------------------------
     def _maybe_retire_locked(self) -> None:

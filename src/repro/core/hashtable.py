@@ -111,9 +111,14 @@ def insert(
     slot, tomb_slot, done = jax.lax.fori_loop(
         0, max_probes, body, (jnp.int32(-1), jnp.int32(-1), jnp.bool_(False))
     )
-    # if we stopped at EMPTY but passed a TOMB, prefer the TOMB slot
+    # Prefer a reusable TOMB slot when (a) we stopped at EMPTY without the
+    # key, or (b) the probe window exhausted without the key or an EMPTY —
+    # a tombstone-saturated chain.  In both cases the key is provably absent
+    # (it could only live inside the window), so reuse keeps the chain
+    # invariant intact.  Case (b) previously dropped the key (slot -1,
+    # ok False) even though tomb_slot was reusable.
     landed_key = jnp.where(slot >= 0, table.keys[jnp.maximum(slot, 0)], EMPTY)
-    use_tomb = (slot >= 0) & (landed_key == EMPTY) & (tomb_slot >= 0)
+    use_tomb = (tomb_slot >= 0) & ((slot < 0) | (landed_key == EMPTY))
     slot = jnp.where(use_tomb, tomb_slot, slot)
     ok = slot >= 0
     widx = jnp.maximum(slot, 0)

@@ -44,6 +44,15 @@ Inference (paper §II.B)
 ``query_threshold`` walks the order permutation accumulating probability until
 the cumulative sum crosses ``t``: complexity O(CDF^-1(t)) items touched.
 Both queries run through :func:`repro.kernels.ops.cdf_query`.
+
+Maintenance (paper §II.C, DESIGN.md §6)
+---------------------------------------
+``decay`` dispatches through :func:`repro.kernels.ops.decay_sort` (halve,
+evict, odd-even compaction).  ``MCConfig.decay_block_rows`` selects rolling
+mode: each call halves one row block and repairs that block's dst hashes
+incrementally (tombstones, not rebuilds), so per-call maintenance cost is
+bounded by the block size; a full rebuild runs only when accumulated
+tombstones cross ``dh_rebuild_fraction`` of the hash capacity.
 """
 
 from __future__ import annotations
@@ -57,7 +66,7 @@ import jax.numpy as jnp
 
 from repro.core import hashtable as ht
 from repro.core import slab as sl
-from repro.core.hashtable import EMPTY, HashTable
+from repro.core.hashtable import EMPTY, TOMB, HashTable
 from repro.core.slab import Slabs
 from repro.kernels import ops
 
@@ -82,6 +91,12 @@ class MCConfig:
     dst_table_size: int = 0       # per-row; 0 -> 4 * capacity pow2
     max_new_per_batch: int = 0    # slow-path prefix; 0 = unbounded (batch)
     impl: str = "auto"            # kernel dispatch: auto | ref | pallas
+    # maintenance (DESIGN.md §6): 0 = stop-the-world decay; R > 0 = rolling
+    # decay that halves one R-row block per call (bounded per-call work)
+    decay_block_rows: int = 0
+    # full dst-hash rebuild once decay tombstones exceed this fraction of
+    # the total dst-hash capacity (num_rows * dst_table_size)
+    dh_rebuild_fraction: float = 0.25
 
     def resolved_table_size(self) -> int:
         return self.table_size or _next_pow2(4 * self.num_rows)
@@ -93,6 +108,12 @@ class MCConfig:
         if self.max_new_per_batch <= 0:
             return batch
         return min(self.max_new_per_batch, batch)
+
+    def resolved_decay_rows(self) -> int:
+        """Rows decayed per call: the block size, clamped to the table."""
+        if self.decay_block_rows <= 0:
+            return self.num_rows
+        return min(self.decay_block_rows, self.num_rows)
 
 
 class MCState(NamedTuple):
@@ -107,6 +128,11 @@ class MCState(NamedTuple):
     dropped_probes: jax.Array  # items dropped on probe-window overflow
     evictions: jax.Array       # Space-Saving tail replacements
     deferred_new: jax.Array    # new edges past the max_new_per_batch prefix
+    # maintenance state + observability (DESIGN.md §6)
+    decay_cursor: jax.Array    # next row block for rolling decay
+    decay_steps: jax.Array     # decay calls applied (blocks, not full sweeps)
+    dh_rebuilds: jax.Array     # full dst-hash rebuilds triggered
+    dh_tombstones: jax.Array   # live decay tombstones across all row hashes
 
 
 def init(cfg: MCConfig) -> MCState:
@@ -122,17 +148,16 @@ def init(cfg: MCConfig) -> MCState:
         dropped_probes=jnp.int32(0),
         evictions=jnp.int32(0),
         deferred_new=jnp.int32(0),
+        decay_cursor=jnp.int32(0),
+        decay_steps=jnp.int32(0),
+        dh_rebuilds=jnp.int32(0),
+        dh_tombstones=jnp.int32(0),
     )
 
 
 # ---------------------------------------------------------------------------
 # per-row dst hash helpers (optional optimisation path)
 # ---------------------------------------------------------------------------
-
-
-def _dh_lookup(state: MCState, row: jax.Array, key: jax.Array, cfg: MCConfig):
-    tab = HashTable(state.dh_keys[row], state.dh_vals[row])
-    return ht.lookup(tab, key, cfg.max_probes)
 
 
 def _dh_set(state: MCState, row: jax.Array, key: jax.Array, slot: jax.Array,
@@ -192,10 +217,14 @@ def lookup_rows(state: MCState, src: jax.Array, cfg: MCConfig):
 
 
 def _find_slots(state: MCState, rows: jax.Array, dst: jax.Array, cfg: MCConfig):
-    """Batched (row, dst) -> slot via dst-hash or row scan (paper §II.2)."""
+    """Batched (row, dst) -> slot via dst-hash or row scan (paper §II.2).
+
+    The hash path is a fused kernel dispatch (``ops.dh_find``): one grid
+    over row-blocks instead of a vmapped scalar probe loop per item.
+    """
     if cfg.use_dst_hash:
-        slots, found = jax.vmap(
-            lambda r, d: _dh_lookup(state, r, d, cfg))(rows, dst)
+        slots, found = ops.dh_find(rows, dst, state.dh_keys, state.dh_vals,
+                                   max_probes=cfg.max_probes, impl=cfg.impl)
         return jnp.where(found, slots, 0), found
     slots, found = jax.vmap(
         lambda r, d: sl.find_slot(state.slabs, r, d))(rows, dst)
@@ -486,22 +515,100 @@ def query_topk(state: MCState, src: jax.Array, *, cfg: MCConfig, k: int = 8):
 
 
 # ---------------------------------------------------------------------------
-# decay (paper §II.C)
+# decay (paper §II.C) — incremental maintenance subsystem (DESIGN.md §6)
 # ---------------------------------------------------------------------------
+
+
+def _dh_repair_rows(state: MCState, row0: jax.Array, block_rows: int,
+                    cfg: MCConfig) -> MCState:
+    """Incremental dst-hash repair after a block decay.
+
+    Every dst-hash entry stores the slot it points at, so repair is one
+    vectorised gather over the touched block: tombstone each occupied lane
+    whose slot died (cnt == 0).  No probe loops, no per-row rebuild —
+    O(block_rows * H) VPU work.  Tombstones accumulate in ``dh_tombstones``
+    (decay-side only; probes walk through TOMB so lookups stay correct, just
+    gradually slower) and a full rebuild runs once they cross
+    ``dh_rebuild_fraction`` of the total hash capacity.
+    """
+    if not cfg.use_dst_hash:
+        return state
+    h = cfg.resolved_dst_table_size()
+    keys_b = jax.lax.dynamic_slice(state.dh_keys, (row0, 0), (block_rows, h))
+    vals_b = jax.lax.dynamic_slice(state.dh_vals, (row0, 0), (block_rows, h))
+    cnt_b = jax.lax.dynamic_slice(state.slabs.cnt, (row0, 0),
+                                  (block_rows, cfg.capacity))
+    occupied = keys_b >= 0
+    pointed_cnt = jnp.take_along_axis(
+        cnt_b, jnp.clip(vals_b, 0, cfg.capacity - 1), axis=1)
+    dead = occupied & (pointed_cnt == 0)
+    keys_b = jnp.where(dead, TOMB, keys_b)
+    state = state._replace(
+        dh_keys=jax.lax.dynamic_update_slice(state.dh_keys, keys_b, (row0, 0)),
+        dh_tombstones=state.dh_tombstones + jnp.sum(dead.astype(jnp.int32)))
+
+    threshold = jnp.int32(cfg.dh_rebuild_fraction * cfg.num_rows * h)
+
+    def rebuild(s):
+        s = _dh_rebuild_all(s, cfg)
+        return s._replace(dh_tombstones=jnp.int32(0),
+                          dh_rebuilds=s.dh_rebuilds + 1)
+
+    return jax.lax.cond(state.dh_tombstones > threshold,
+                        rebuild, lambda s: s, state)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def decay(state: MCState, *, cfg: MCConfig) -> MCState:
-    """Halve all counters, evict dead edges, compact, rebuild dst hashes."""
-    slabs, _ = sl.decay(state.slabs)
-    state = state._replace(slabs=slabs)
-    return _dh_rebuild_all(state, cfg)
+    """§II.C decay through the kernel layer (``ops.decay_sort``).
+
+    Stop-the-world (``decay_block_rows == 0``): halve every counter, evict
+    dead edges and compact in one fused dispatch.  Rolling mode
+    (``decay_block_rows == R``): halve only the cursor's R-row block and
+    advance the cursor, so a serving system amortises maintenance across
+    steps — per-call cost scales with R, not ``num_rows``, and readers see
+    the paper's approximately-correct mid-maintenance state (some rows
+    decayed, some not) instead of a stop-the-world stall.  The dst hash is
+    repaired incrementally for the touched block only (``_dh_repair_rows``).
+    """
+    n, c = cfg.num_rows, cfg.capacity
+    r = cfg.resolved_decay_rows()
+    slabs = state.slabs
+    if r >= n:  # stop-the-world: one fused full-table dispatch
+        cnt, dst, order, tot = ops.decay_sort(
+            slabs.cnt, slabs.dst, slabs.order, impl=cfg.impl)
+        state = state._replace(
+            slabs=Slabs(dst, cnt, tot, order),
+            decay_steps=state.decay_steps + 1)
+        return _dh_repair_rows(state, jnp.int32(0), n, cfg)
+
+    n_blocks = -(-n // r)
+    cur = jnp.remainder(state.decay_cursor, n_blocks)
+    # last block is clamped so slices stay static-shaped (it overlaps the
+    # previous block when r does not divide n; halving is not idempotent per
+    # row but each call still touches exactly r rows — bounded work wins)
+    row0 = jnp.minimum(cur * r, n - r).astype(jnp.int32)
+    cnt_b = jax.lax.dynamic_slice(slabs.cnt, (row0, 0), (r, c))
+    dst_b = jax.lax.dynamic_slice(slabs.dst, (row0, 0), (r, c))
+    ord_b = jax.lax.dynamic_slice(slabs.order, (row0, 0), (r, c))
+    cnt2, dst2, ord2, tot2 = ops.decay_sort(cnt_b, dst_b, ord_b, impl=cfg.impl)
+    state = state._replace(
+        slabs=Slabs(
+            dst=jax.lax.dynamic_update_slice(slabs.dst, dst2, (row0, 0)),
+            cnt=jax.lax.dynamic_update_slice(slabs.cnt, cnt2, (row0, 0)),
+            tot=jax.lax.dynamic_update_slice(slabs.tot, tot2, (row0,)),
+            order=jax.lax.dynamic_update_slice(slabs.order, ord2, (row0, 0))),
+        decay_cursor=cur + 1,
+        decay_steps=state.decay_steps + 1)
+    return _dh_repair_rows(state, row0, r, cfg)
 
 
 def maybe_decay(state: MCState, *, cfg: MCConfig, total_threshold: int) -> MCState:
     """Decay when any row total exceeds ``total_threshold`` (paper §II.C
     suggests decaying "at some threshold over the number of total
-    transitions")."""
+    transitions").  In rolling mode each trigger halves one block; the
+    threshold keeps firing until the offending row's block comes around, so
+    pressure drains over a few calls instead of one stall."""
     should = jnp.any(state.slabs.tot > total_threshold)
     return jax.lax.cond(
         should, lambda s: decay(s, cfg=cfg), lambda s: s, state)
@@ -512,7 +619,30 @@ def maybe_decay(state: MCState, *, cfg: MCConfig, total_threshold: int) -> MCSta
 # ---------------------------------------------------------------------------
 
 
-def check_invariants(state: MCState) -> dict:
+def _dh_consistent(state: MCState, cfg: MCConfig) -> jax.Array:
+    """Dst-hash invariant: every live slot is reachable through the hash and
+    every occupied hash lane points at a live slot holding its key (no stale
+    entries after decay/repair)."""
+    n, c = state.slabs.dst.shape
+    rows = jnp.repeat(jnp.arange(n, dtype=jnp.int32), c)
+    dsts = state.slabs.dst.reshape(-1)
+    live = state.slabs.cnt.reshape(-1) > 0
+    slots, found = ops.dh_find(
+        jnp.where(live, rows, -1), jnp.maximum(dsts, 0),
+        state.dh_keys, state.dh_vals,
+        max_probes=cfg.max_probes, impl=cfg.impl)
+    expect = jnp.tile(jnp.arange(c, dtype=jnp.int32), n)
+    live_ok = jnp.all(jnp.where(live, found & (slots == expect), True))
+    occupied = state.dh_keys >= 0
+    v = jnp.clip(state.dh_vals, 0, c - 1)
+    pointed_dst = jnp.take_along_axis(state.slabs.dst, v, axis=1)
+    pointed_cnt = jnp.take_along_axis(state.slabs.cnt, v, axis=1)
+    stale_ok = jnp.all(jnp.where(
+        occupied, (pointed_dst == state.dh_keys) & (pointed_cnt > 0), True))
+    return live_ok & stale_ok
+
+
+def check_invariants(state: MCState, cfg: Optional[MCConfig] = None) -> dict:
     slabs = state.slabs
     order_ok = jnp.all(
         jnp.sort(slabs.order, axis=1)
@@ -520,10 +650,23 @@ def check_invariants(state: MCState) -> dict:
     tot_ok = jnp.all(slabs.tot == jnp.sum(slabs.cnt, axis=1))
     free_ok = jnp.all((slabs.cnt == 0) == (slabs.dst == EMPTY))
     nonneg = jnp.all(slabs.cnt >= 0)
-    return {
+    out = {
         "order_is_permutation": bool(order_ok),
         "tot_matches_cnt_sum": bool(tot_ok),
         "free_slots_consistent": bool(free_ok),
         "counts_nonnegative": bool(nonneg),
         "sorted_fraction": float(sl.sorted_fraction(slabs.cnt, slabs.order)),
+    }
+    if cfg is not None and cfg.use_dst_hash:
+        out["dst_hash_consistent"] = bool(_dh_consistent(state, cfg))
+    return out
+
+
+def maintenance_stats(state: MCState) -> dict:
+    """Maintenance observability counters (DESIGN.md §6), host-side ints."""
+    return {
+        "decay_steps": int(state.decay_steps),
+        "decay_cursor": int(state.decay_cursor),
+        "dh_rebuilds": int(state.dh_rebuilds),
+        "dh_tombstones": int(state.dh_tombstones),
     }

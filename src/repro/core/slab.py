@@ -146,6 +146,11 @@ def tail_slot(slabs: Slabs, row: jax.Array) -> jax.Array:
 def decay(slabs: Slabs) -> Tuple[Slabs, jax.Array]:
     """Multiply every counter by 0.5 (integer shift), evict cnt==0 edges.
 
+    Semantic oracle for the fused kernel path (``ops.decay_sort``), which the
+    hot path (``mcprioq.decay``) dispatches through — stop-the-world over the
+    whole table or rolling over one ``decay_block_rows`` block per call
+    (DESIGN.md §6).  Kept as the ground truth for equivalence tests.
+
     Returns ``(slabs, n_evicted)``.  ``tot`` is recomputed as the exact row sum
     so the two-counter probability stays consistent (the paper keeps the ratio
     invariant; integer halving of both sides does too, up to rounding — we

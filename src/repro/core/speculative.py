@@ -62,12 +62,27 @@ def context_ids(tokens: jax.Array, order: int) -> jax.Array:
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def observe(state: DrafterState, tokens: jax.Array, *, cfg: NGramConfig) -> DrafterState:
-    """Learn from a batch of token sequences. tokens: int32[B, S]."""
+    """Learn from a batch of token sequences. tokens: int32[B, S].
+
+    Pure learning — §II.C maintenance lives in :func:`maintain` so the
+    serving learner (``Engine._learn``) can trigger it explicitly behind the
+    epoch store and surface the maintenance counters.
+    """
     ctx = context_ids(tokens, cfg.order)        # [B, S]
     src = ctx[:, :-1].reshape(-1)
     dst = tokens[:, 1:].reshape(-1)
     chain = mc.update_batch(state.chain, src, dst, cfg=cfg.mc)
-    chain = mc.maybe_decay(chain, cfg=cfg.mc, total_threshold=cfg.decay_threshold)
+    return DrafterState(chain=chain)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def maintain(state: DrafterState, *, cfg: NGramConfig) -> DrafterState:
+    """Learner-side §II.C maintenance: decay once any row total crosses
+    ``cfg.decay_threshold``.  With ``cfg.mc.decay_block_rows`` set this is a
+    rolling block halve (bounded per-call work) plus incremental dst-hash
+    repair; stop-the-world otherwise."""
+    chain = mc.maybe_decay(state.chain, cfg=cfg.mc,
+                           total_threshold=cfg.decay_threshold)
     return DrafterState(chain=chain)
 
 

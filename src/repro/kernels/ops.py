@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import cdf_query as _cdf
+from repro.kernels import dh_find as _dh
 from repro.kernels import oddeven as _oe
 from repro.kernels import ref as _ref
 from repro.kernels import slab_update as _su
@@ -102,6 +103,28 @@ def decay_sort(cnt: jax.Array, dst: jax.Array, order: jax.Array,
     passes = cnt.shape[1] // 2 + 1
     new_order = oddeven_sort(new_cnt, order, passes=passes, impl=impl)
     return new_cnt, new_dst, new_order, new_tot
+
+
+@functools.partial(jax.jit, static_argnames=("max_probes", "impl"))
+def dh_find(rows: jax.Array, dsts: jax.Array,
+            dh_keys: jax.Array, dh_vals: jax.Array,
+            *, max_probes: int = 64, impl: str = "auto"):
+    """Batched per-row dst-hash lookup: ``(slots[B], found[B] bool)``.
+
+    The paper's §II.2 dst -> slot tables as one fused dispatch; rows < 0 are
+    padding.  Semantics are the core linear probe (``hashtable.lookup``).
+    """
+    if _use_ref(impl):
+        slots, found = _ref.dh_find_ref(rows, dsts, dh_keys, dh_vals,
+                                        max_probes)
+        return slots, found
+    rb = min(_dh.DEFAULT_ROWS_PER_BLOCK, dh_keys.shape[0])
+    keys_p, _ = _pad_rows(dh_keys, rb, -1)
+    vals_p, _ = _pad_rows(dh_vals, rb, -1)
+    slots, found = _dh.dh_find_pallas(
+        rows, dsts, keys_p, vals_p, max_probes=max_probes,
+        rows_per_block=rb, interpret=not _on_tpu())
+    return slots, found.astype(bool)
 
 
 @functools.partial(jax.jit, static_argnames=("max_items", "chunks", "impl"))

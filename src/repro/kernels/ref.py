@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import hashtable as ht
 from repro.core import slab as sl
 from repro.core.hashtable import EMPTY
 
@@ -63,6 +64,24 @@ def slab_update_ref(rows: jax.Array, dsts: jax.Array, w: jax.Array,
     cnt = cnt.at[safe_rows, slot].add(addw)
     tot = tot.at[safe_rows].add(addw)
     return dst, cnt, tot, found
+
+
+def dh_find_ref(rows: jax.Array, dsts: jax.Array,
+                keys: jax.Array, vals: jax.Array, max_probes: int):
+    """Batched per-row dst-hash lookup (paper §II.2 optional optimisation).
+
+    rows[B] select a per-row table out of keys/vals[N, H]; each item runs the
+    core linear probe (:func:`repro.core.hashtable.lookup`).  rows < 0 marks
+    padding.  Returns ``(slots[B], found[B])`` with slot EMPTY when missing.
+    """
+    safe_rows = jnp.maximum(rows, 0)
+
+    def one(r, d):
+        return ht.lookup(ht.HashTable(keys[r], vals[r]), d, max_probes)
+
+    slots, found = jax.vmap(one)(safe_rows, dsts)
+    found = found & (rows >= 0)
+    return jnp.where(found, slots, EMPTY), found
 
 
 def cdf_query_ref(c_ord: jax.Array, d_ord: jax.Array, tot: jax.Array,

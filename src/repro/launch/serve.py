@@ -15,23 +15,30 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke_config
+from repro.core import mcprioq as mc
 from repro.core import speculative as spec
 from repro.models.model import Model
 from repro.serve.engine import Engine, ServeConfig
 
 
 def run(arch: str, smoke: bool, requests: int, prompt_len: int,
-        new_tokens: int, draft_len: int, seed: int = 0):
+        new_tokens: int, draft_len: int, seed: int = 0,
+        decay_threshold: int = 1 << 18, decay_block_rows: int = 1024):
     cfg = smoke_config(arch) if smoke else get_config(arch)
     if cfg.encoder_layers or cfg.frontend == "patch":
         raise SystemExit("text-LM serving driver; see examples/ for encdec")
     model = Model(cfg)
     params = model.init(jax.random.key(seed))
+    # rolling decay keeps learner-side maintenance bounded per request
+    # (DESIGN.md §6) instead of stalling serving on a full-table sweep
+    mc_cfg = mc.MCConfig(num_rows=8192, capacity=64, sort_passes=1,
+                         decay_block_rows=decay_block_rows)
     scfg = ServeConfig(
         max_new_tokens=new_tokens,
         max_cache_len=prompt_len + new_tokens + 8,
         draft_len=draft_len,
-        ngram=spec.NGramConfig(order=2),
+        ngram=spec.NGramConfig(order=2, mc=mc_cfg,
+                               decay_threshold=decay_threshold),
     )
     engine = Engine(model, params, scfg)
     rng = np.random.default_rng(seed)
@@ -50,6 +57,9 @@ def run(arch: str, smoke: bool, requests: int, prompt_len: int,
     print(f"model calls {engine.stats['model_calls']} "
           f"(plain greedy would use {plain_calls}), "
           f"draft acceptance {engine.acceptance_rate:.2%}")
+    print(f"maintenance: decay_steps={engine.stats['decay_steps']} "
+          f"dh_rebuilds={engine.stats['dh_rebuilds']} "
+          f"dh_tombstones={engine.stats['dh_tombstones']}")
     return outs, engine
 
 
@@ -61,9 +71,15 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--draft-len", type=int, default=4)
+    ap.add_argument("--decay-threshold", type=int, default=1 << 18,
+                    help="row-total threshold that triggers §II.C decay")
+    ap.add_argument("--decay-block-rows", type=int, default=1024,
+                    help="rolling decay block size; 0 = stop-the-world")
     args = ap.parse_args()
     run(args.arch, args.smoke, args.requests, args.prompt_len,
-        args.new_tokens, args.draft_len)
+        args.new_tokens, args.draft_len,
+        decay_threshold=args.decay_threshold,
+        decay_block_rows=args.decay_block_rows)
 
 
 if __name__ == "__main__":

@@ -21,12 +21,15 @@ shapes static; greedy outputs are bit-identical to plain decoding.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import threading
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import mcprioq as mc
 from repro.core import speculative as spec
 from repro.core.epoch import EpochStore
 from repro.models.model import Model
@@ -59,13 +62,21 @@ class Engine:
         self._extend = jax.jit(model.extend_step)
         self._observe = jax.jit(
             lambda st, toks: spec.observe(st, toks, cfg=cfg.ngram))
+        self._maintain = functools.partial(spec.maintain, cfg=cfg.ngram)
         self._draft = jax.jit(
             lambda st, ctx: spec.draft(st, ctx, cfg=cfg.ngram,
                                        k=max(cfg.draft_len, 1)))
+        # The learner side is a read-modify-write on the EpochStore
+        # (acquire -> observe -> publish): without serialisation two
+        # overlapping generate() calls publish from the same base and the
+        # second silently discards the first's counts.  Readers (drafting)
+        # stay lock-free; only the single-writer invariant is enforced.
+        self._learn_lock = threading.Lock()
         # model_calls counts decode+extend forwards (the latency metric);
         # plain greedy needs exactly max_new_tokens-1 of them
         self.stats = {"model_calls": 0, "accepted": 0, "drafted": 0,
-                      "rounds": 0}
+                      "rounds": 0, "decay_steps": 0, "dh_rebuilds": 0,
+                      "dh_tombstones": 0}
 
     # ------------------------------------------------------------------
     def generate(self, batch: Dict[str, jax.Array], rng: jax.Array
@@ -110,13 +121,28 @@ class Engine:
 
         # online learning: feed emitted tokens back into the chain and
         # publish a new RCU snapshot for subsequent requests
-        snap = self.drafter_store.acquire()
-        try:
-            new_state = self._observe(snap.state, jnp.asarray(history))
-        finally:
-            self.drafter_store.release(snap)
-        self.drafter_store.publish(new_state)
+        self._learn(history)
         return out
+
+    # ------------------------------------------------------------------
+    def _learn(self, history) -> None:
+        """Serialised learner step: observe emitted tokens, run §II.C
+        maintenance (rolling decay + dst-hash repair behind the snapshot),
+        publish, and surface the maintenance counters in ``stats``."""
+        toks = jnp.asarray(history)
+        with self._learn_lock:
+            snap = self.drafter_store.acquire()
+            try:
+                new_state = self._observe(snap.state, toks)
+                new_state = self._maintain(new_state)
+            finally:
+                self.drafter_store.release(snap)
+            self.drafter_store.publish(new_state)
+            # inside the lock: a stale snapshot's counters must not
+            # overwrite a newer learner's in stats
+            self.stats.update(
+                {k: v for k, v in mc.maintenance_stats(new_state.chain).items()
+                 if k in self.stats})
 
     # ------------------------------------------------------------------
     def _speculative_round(self, caches, cur, pos, history, k, rng

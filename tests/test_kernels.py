@@ -6,8 +6,10 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from repro.core import hashtable as ht
 from repro.core import slab as sl
 from repro.kernels import cdf_query as cdfk
+from repro.kernels import dh_find as dhk
 from repro.kernels import oddeven as oek
 from repro.kernels import ref
 from repro.kernels import slab_update as suk
@@ -186,6 +188,101 @@ def test_cdf_query_complexity_matches_quantile():
         interpret=True)
     # cumsum/1024: .5 .75 .875 .9375 -> 4 items needed
     assert int(n[0]) == 4
+
+
+# ---------------------------------------------------------------------------
+# dh_find (paper §II.2 per-row dst hash as a batched kernel)
+# ---------------------------------------------------------------------------
+
+
+def _rand_row_tables(rng, n, h, fill=0.4, tomb=0.2, max_probes=64):
+    """Per-row tables built through real core inserts/deletes so the probe
+    chains (including tombstones) are exactly what production produces."""
+    keys = np.full((n, h), ht.EMPTY, np.int32)
+    vals = np.full((n, h), ht.EMPTY, np.int32)
+    live = {}
+    for r in range(n):
+        tab = ht.make(h)
+        inserted = []
+        for i in range(int(fill * h)):
+            k = int(rng.integers(0, 100_000))
+            tab, _, ok = ht.insert(tab, jnp.int32(k), jnp.int32(i),
+                                   max_probes=max_probes)
+            if bool(ok):
+                inserted.append((k, i))
+        rng.shuffle(inserted)
+        n_del = int(tomb * len(inserted))
+        for k, _ in inserted[:n_del]:
+            tab, _ = ht.delete(tab, jnp.int32(k), max_probes=max_probes)
+        live[r] = dict(inserted[n_del:])
+        keys[r] = np.asarray(tab.keys)
+        vals[r] = np.asarray(tab.vals)
+    return jnp.asarray(keys), jnp.asarray(vals), live
+
+
+@pytest.mark.parametrize("n,h", [(4, 32), (16, 128), (7, 64)])
+def test_dh_find_kernel_matches_ref(n, h):
+    rng = np.random.default_rng(n * 100 + h)
+    keys, vals, live = _rand_row_tables(rng, n, h)
+    batch = 64
+    rows = rng.integers(0, n, batch).astype(np.int32)
+    rows[rng.random(batch) < 0.15] = -1          # padding
+    dsts = np.empty(batch, np.int32)
+    for i, r in enumerate(rows):
+        pool = list(live.get(int(max(r, 0)), {}))
+        if r >= 0 and pool and rng.random() < 0.7:
+            dsts[i] = pool[int(rng.integers(0, len(pool)))]
+        else:
+            dsts[i] = 900_000 + i                # guaranteed miss
+    rows_j, dsts_j = jnp.asarray(rows), jnp.asarray(dsts)
+    rb = min(dhk.DEFAULT_ROWS_PER_BLOCK, n)
+    pad = (-n) % rb
+    keys_p = jnp.pad(keys, ((0, pad), (0, 0)), constant_values=ht.EMPTY)
+    vals_p = jnp.pad(vals, ((0, pad), (0, 0)), constant_values=ht.EMPTY)
+    got_s, got_f = dhk.dh_find_pallas(
+        rows_j, dsts_j, keys_p, vals_p, max_probes=64, rows_per_block=rb,
+        interpret=True)
+    want_s, want_f = ref.dh_find_ref(rows_j, dsts_j, keys, vals, 64)
+    np.testing.assert_array_equal(np.asarray(got_f).astype(bool),
+                                  np.asarray(want_f))
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+    # oracle of the oracle: ref agrees with the per-row core probe + the
+    # ground-truth live dict
+    for i, (r, d) in enumerate(zip(rows, dsts)):
+        if r < 0:
+            assert not bool(want_f[i])
+            continue
+        expect = live[int(r)].get(int(d))
+        assert bool(want_f[i]) == (expect is not None)
+        if expect is not None:
+            assert int(want_s[i]) == expect
+
+
+def test_dh_find_tombstone_chains_probe_through():
+    """Probes must walk through TOMB lanes (deleted keys) to later entries."""
+    h = 32
+    tab = ht.make(h)
+    # three keys colliding into one chain
+    base = jnp.int32(11)
+    h0 = int(ht._slot0(base, h))
+    chain = [k for k in range(2000)
+             if int(ht._slot0(jnp.int32(k), h)) == h0][:3]
+    assert len(chain) == 3
+    for i, k in enumerate(chain):
+        tab, _, _ = ht.insert(tab, jnp.int32(k), jnp.int32(i))
+    tab, _ = ht.delete(tab, jnp.int32(chain[0]))   # TOMB at chain head
+    keys, vals = tab.keys[None], tab.vals[None]
+    rows = jnp.zeros((3,), jnp.int32)
+    dsts = jnp.asarray(chain, jnp.int32)
+    got_s, got_f = dhk.dh_find_pallas(rows, dsts, keys, vals,
+                                      max_probes=16, rows_per_block=1,
+                                      interpret=True)
+    want_s, want_f = ref.dh_find_ref(rows, dsts, keys, vals, 16)
+    np.testing.assert_array_equal(np.asarray(got_f).astype(bool),
+                                  np.asarray(want_f))
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+    assert not bool(got_f[0])                      # deleted
+    assert bool(got_f[1]) and bool(got_f[2])       # found through the TOMB
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,318 @@
+"""Incremental maintenance subsystem (DESIGN.md §6) + the PR's bugfixes.
+
+Covers: rolling decay through ``ops.decay_sort`` (coverage, bounded per-call
+touch set, cursor wrap, ref/pallas equivalence), incremental dst-hash repair
+(tombstones, rebuild threshold, consistency), the tombstone-saturated-chain
+insert fix, the EpochStore synchronize backoff, and the serialised serving
+learner (no lost updates under concurrent requests).
+"""
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import hashtable as ht
+from repro.core import mcprioq as mc
+from repro.core import speculative as spec
+from repro.core.epoch import EpochStore
+from repro.core.hashtable import EMPTY, TOMB
+
+
+def _churned_state(cfg, iters=6, seed=0, srcs=12, dsts=10, batch=64):
+    rng = np.random.default_rng(seed)
+    state = mc.init(cfg)
+    for _ in range(iters):
+        s = jnp.asarray(rng.integers(0, srcs, batch).astype(np.int32))
+        d = jnp.asarray(rng.integers(0, dsts, batch).astype(np.int32))
+        w = jnp.asarray(rng.integers(1, 4, batch).astype(np.int32))
+        state = mc.update_batch(state, s, d, weights=w, cfg=cfg)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# satellite: hashtable.insert must reuse TOMB when the window saturates
+# ---------------------------------------------------------------------------
+
+
+def test_insert_reuses_tomb_on_saturated_window():
+    """Probe window full of tombstones: insert must land on the first TOMB
+    instead of dropping the key (the seed returned slot=-1, ok=False)."""
+    tab = ht.HashTable(keys=jnp.full((8,), TOMB, jnp.int32),
+                       vals=jnp.full((8,), EMPTY, jnp.int32))
+    tab, slot, ok = ht.insert(tab, jnp.int32(5), jnp.int32(42), max_probes=4)
+    assert bool(ok) and int(slot) >= 0
+    val, found = ht.lookup(tab, jnp.int32(5), max_probes=4)
+    assert bool(found) and int(val) == 42
+
+
+def test_insert_tombstone_chain_regression():
+    """Build a real tombstone-saturated chain: fill a window, delete all,
+    then insert a fresh key through the tombs."""
+    size, probes = 16, 4
+    tab = ht.make(size)
+    # occupy the new key's entire probe window with colliding inserts
+    key = jnp.int32(7)
+    h0 = int(ht._slot0(key, size))
+    victims = []
+    filler = 1000
+    while len(victims) < probes:
+        if int(ht._slot0(jnp.int32(filler), size)) == h0:
+            victims.append(filler)
+            tab, _, ok = ht.insert(tab, jnp.int32(filler), jnp.int32(0),
+                                   max_probes=size)
+            assert bool(ok)
+        filler += 1
+    for v in victims:
+        tab, deleted = ht.delete(tab, jnp.int32(v), max_probes=size)
+        assert bool(deleted)
+    # window now TOMB-saturated for `key`
+    window = [int(tab.keys[(h0 + i) % size]) for i in range(probes)]
+    assert all(k == TOMB for k in window), window
+    tab, slot, ok = ht.insert(tab, key, jnp.int32(99), max_probes=probes)
+    assert bool(ok), "insert dropped a key despite reusable tombstones"
+    val, found = ht.lookup(tab, key, max_probes=probes)
+    assert bool(found) and int(val) == 99
+
+
+# ---------------------------------------------------------------------------
+# satellite: EpochStore.synchronize must not starve its readers
+# ---------------------------------------------------------------------------
+
+
+def test_synchronize_yields_to_releasing_reader():
+    store = EpochStore({"v": 0})
+    snap = store.acquire()
+    store.publish({"v": 1})
+
+    def release_later():
+        time.sleep(0.05)
+        store.release(snap)
+
+    t = threading.Thread(target=release_later)
+    t0 = time.perf_counter()
+    t.start()
+    store.synchronize()          # must return once the reader releases
+    dt = time.perf_counter() - t0
+    t.join()
+    assert 0.04 <= dt < 2.0
+    assert snap.version in store.retired_versions
+
+
+def test_synchronize_no_readers_returns_immediately():
+    store = EpochStore(0)
+    store.publish(1)
+    t0 = time.perf_counter()
+    store.synchronize()
+    assert time.perf_counter() - t0 < 0.05
+
+
+# ---------------------------------------------------------------------------
+# tentpole: rolling decay
+# ---------------------------------------------------------------------------
+
+
+def test_rolling_decay_full_cycle_equals_stop_the_world_counts():
+    cfg_roll = mc.MCConfig(num_rows=16, capacity=8, sort_passes=1,
+                           decay_block_rows=4)
+    cfg_stw = dataclasses.replace(cfg_roll, decay_block_rows=0)
+    base = _churned_state(cfg_stw, srcs=14)
+    stw = mc.decay(base, cfg=cfg_stw)
+    roll = base
+    for _ in range(4):                      # 16 rows / 4-row blocks
+        roll = mc.decay(roll, cfg=cfg_roll)
+    np.testing.assert_array_equal(np.asarray(roll.slabs.cnt),
+                                  np.asarray(stw.slabs.cnt))
+    np.testing.assert_array_equal(np.asarray(roll.slabs.tot),
+                                  np.asarray(stw.slabs.tot))
+    np.testing.assert_array_equal(np.asarray(roll.slabs.dst),
+                                  np.asarray(stw.slabs.dst))
+    assert int(roll.decay_steps) == 4 and int(stw.decay_steps) == 1
+    assert int(roll.decay_cursor) == 4      # wraps via remainder on next call
+
+
+def test_rolling_decay_touches_only_the_cursor_block():
+    cfg = mc.MCConfig(num_rows=16, capacity=8, sort_passes=1,
+                      decay_block_rows=4)
+    state = _churned_state(cfg, srcs=14)
+    before = np.asarray(state.slabs.cnt).copy()
+    after1 = mc.decay(state, cfg=cfg)
+    got = np.asarray(after1.slabs.cnt)
+    np.testing.assert_array_equal(got[4:], before[4:])       # untouched rows
+    np.testing.assert_array_equal(got[:4], before[:4] >> 1)  # halved block
+    inv = mc.check_invariants(after1)
+    assert inv["tot_matches_cnt_sum"] and inv["free_slots_consistent"]
+
+
+def test_rolling_decay_cursor_wraps():
+    cfg = mc.MCConfig(num_rows=8, capacity=4, sort_passes=1,
+                      decay_block_rows=4)
+    state = _churned_state(cfg, srcs=8, dsts=4, batch=32)
+    for i in range(5):                       # 2 blocks -> wraps twice + one
+        state = mc.decay(state, cfg=cfg)
+    # 5 calls over 2 blocks: block 0 decayed 3x, block 1 decayed 2x
+    assert int(state.decay_steps) == 5
+    assert int(state.decay_cursor) % 2 == 1
+
+
+@pytest.mark.parametrize("block", [0, 4], ids=["stw", "rolling"])
+def test_decay_ref_pallas_equivalent(block):
+    """Acceptance: decay dispatches through ops.decay_sort identically for
+    impl='ref' and impl='pallas' (interpret off-TPU)."""
+    mk = lambda impl: mc.MCConfig(num_rows=16, capacity=16, sort_passes=1,
+                                  use_dst_hash=True, decay_block_rows=block,
+                                  impl=impl)
+    cfg_r, cfg_p = mk("ref"), mk("pallas")
+    s_r = _churned_state(cfg_r, seed=3)
+    s_p = _churned_state(cfg_p, seed=3)
+    for _ in range(2):
+        s_r = mc.decay(s_r, cfg=cfg_r)
+        s_p = mc.decay(s_p, cfg=cfg_p)
+    import jax
+    for a, b in zip(jax.tree_util.tree_leaves(s_r),
+                    jax.tree_util.tree_leaves(s_p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_maybe_decay_rolling_drains_pressure_over_calls():
+    cfg = mc.MCConfig(num_rows=8, capacity=4, sort_passes=1,
+                      decay_block_rows=4)
+    state = mc.init(cfg)
+    src = jnp.asarray([0, 5], jnp.int32)     # rows 0 and 1 (alloc order)
+    state = mc.update_batch(state, src, jnp.asarray([1, 2], jnp.int32),
+                            weights=jnp.asarray([60, 60], jnp.int32), cfg=cfg)
+    # both rows over threshold: each call halves one block until drained
+    out = mc.maybe_decay(state, cfg=cfg, total_threshold=50)
+    assert int(out.decay_steps) == 1
+    out = mc.maybe_decay(out, cfg=cfg, total_threshold=50)
+    assert int(out.decay_steps) in (1, 2)    # drained iff both rows in block 0
+    for _ in range(3):
+        out = mc.maybe_decay(out, cfg=cfg, total_threshold=50)
+    assert not bool(jnp.any(out.slabs.tot > 50))
+    steps_done = int(out.decay_steps)
+    out2 = mc.maybe_decay(out, cfg=cfg, total_threshold=50)
+    assert int(out2.decay_steps) == steps_done   # below threshold: no-op
+
+
+# ---------------------------------------------------------------------------
+# tentpole: incremental dst-hash repair + rebuild threshold
+# ---------------------------------------------------------------------------
+
+
+def test_decay_repair_tombstones_dead_entries_only():
+    cfg = mc.MCConfig(num_rows=8, capacity=8, sort_passes=1,
+                      use_dst_hash=True)
+    state = mc.init(cfg)
+    src = jnp.zeros((4,), jnp.int32)
+    dst = jnp.asarray([10, 11, 12, 13], jnp.int32)
+    w = jnp.asarray([8, 4, 2, 1], jnp.int32)
+    state = mc.update_batch(state, src, dst, weights=w, cfg=cfg)
+    state = mc.decay(state, cfg=cfg)         # w=1 edge dies
+    assert int(state.dh_tombstones) == 1
+    assert int(state.dh_rebuilds) == 0       # repair, not rebuild
+    assert int(np.sum(np.asarray(state.dh_keys) == TOMB)) == 1
+    inv = mc.check_invariants(state, cfg)
+    assert inv["dst_hash_consistent"]
+    # the dead dst is gone from the hash, live ones still resolve
+    rows, _ = mc.lookup_rows(state, src[:1], cfg=cfg)
+    _, found = mc._find_slots(state, rows, jnp.asarray([13], jnp.int32), cfg)
+    assert not bool(found[0])
+    _, found = mc._find_slots(state, rows, jnp.asarray([10], jnp.int32), cfg)
+    assert bool(found[0])
+
+
+def test_dh_rebuild_triggers_on_tombstone_load():
+    # threshold ~0: the first dead entry forces a full rebuild
+    cfg = mc.MCConfig(num_rows=8, capacity=8, sort_passes=1,
+                      use_dst_hash=True, dh_rebuild_fraction=0.0)
+    state = mc.init(cfg)
+    src = jnp.zeros((4,), jnp.int32)
+    dst = jnp.asarray([10, 11, 12, 13], jnp.int32)
+    w = jnp.asarray([8, 4, 2, 1], jnp.int32)
+    state = mc.update_batch(state, src, dst, weights=w, cfg=cfg)
+    state = mc.decay(state, cfg=cfg)
+    assert int(state.dh_rebuilds) == 1
+    assert int(state.dh_tombstones) == 0     # reset by the rebuild
+    assert int(np.sum(np.asarray(state.dh_keys) == TOMB)) == 0
+    assert mc.check_invariants(state, cfg)["dst_hash_consistent"]
+
+
+def test_repeated_decay_keeps_dst_hash_consistent():
+    cfg = mc.MCConfig(num_rows=16, capacity=8, sort_passes=1,
+                      use_dst_hash=True, decay_block_rows=4,
+                      dh_rebuild_fraction=0.02)
+    rng = np.random.default_rng(5)
+    state = mc.init(cfg)
+    for i in range(12):
+        s = jnp.asarray(rng.integers(0, 12, 64).astype(np.int32))
+        d = jnp.asarray(rng.integers(0, 12, 64).astype(np.int32))
+        state = mc.update_batch(state, s, d, cfg=cfg)
+        state = mc.decay(state, cfg=cfg)
+        inv = mc.check_invariants(state, cfg)
+        assert inv["dst_hash_consistent"], f"iteration {i}"
+        assert inv["tot_matches_cnt_sum"] and inv["free_slots_consistent"]
+    assert int(state.dh_rebuilds) >= 1       # tight threshold must trip
+    stats = mc.maintenance_stats(state)
+    assert stats["decay_steps"] == 12
+
+
+# ---------------------------------------------------------------------------
+# satellite: serialised serving learner (no lost updates)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_learn_conserves_transitions_under_threads():
+    """acquire -> observe -> publish is a read-modify-write; concurrent
+    requests must not publish from the same base (lost update).  The learner
+    path never traces the model, so the Engine gets a stub."""
+    from types import SimpleNamespace
+
+    from repro.serve.engine import Engine, ServeConfig
+
+    stub_model = SimpleNamespace(prefill=lambda *a: None,
+                                 decode_step=lambda *a: None,
+                                 extend_step=lambda *a: None)
+
+    # num_rows comfortably above the number of distinct contexts so no
+    # row-drops occur: conservation is then exact and order-independent
+    ncfg = spec.NGramConfig(
+        order=2, mc=mc.MCConfig(num_rows=2048, capacity=16, sort_passes=1))
+    rng = np.random.default_rng(6)
+    histories = [rng.integers(0, 50, (2, 18)).astype(np.int32)
+                 for _ in range(12)]
+
+    def total_mass(store):
+        return int(jnp.sum(store._snap.state.chain.slabs.tot))
+
+    # sequential oracle
+    eng_seq = Engine(stub_model, None, ServeConfig(ngram=ncfg))
+    for h in histories:
+        eng_seq._learn(h)
+    expected = total_mass(eng_seq.drafter_store)
+    assert expected > 0
+
+    # concurrent learners over the same histories
+    eng = Engine(stub_model, None, ServeConfig(ngram=ncfg))
+    errs = []
+
+    def worker(chunk):
+        try:
+            for h in chunk:
+                eng._learn(h)
+        except Exception as e:  # pragma: no cover - surfaced via errs
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(histories[i::4],))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert total_mass(eng.drafter_store) == expected
+    assert eng.drafter_store.version == len(histories)
+    assert "decay_steps" in eng.stats and "dh_tombstones" in eng.stats

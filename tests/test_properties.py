@@ -159,6 +159,44 @@ def test_query_threshold_monotone_in_t(seed):
         prev = int(n[0])
 
 
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.sampled_from([0, 4]))
+def test_dst_hash_on_off_bit_identical_under_churn(seed, decay_block):
+    """The dst hash is an *optimisation*: with it on or off, the structure
+    must evolve bit-identically (slabs, src table, allocator, Space-Saving
+    evictions) through interleaved update/decay/eviction churn — and the
+    hash itself must stay consistent (every live slot reachable, no stale
+    entries after decay repair)."""
+    import dataclasses
+    cfg_h = mc.MCConfig(num_rows=16, capacity=4, sort_passes=1,
+                        use_dst_hash=True, decay_block_rows=decay_block,
+                        dh_rebuild_fraction=0.1)
+    cfg_s = dataclasses.replace(cfg_h, use_dst_hash=False)
+    s_h, s_s = mc.init(cfg_h), mc.init(cfg_s)
+    rng = np.random.default_rng(seed)
+    for i in range(6):
+        # capacity 4 with 8 dsts per src: constant Space-Saving eviction
+        src = jnp.asarray(rng.integers(0, 12, 48).astype(np.int32))
+        dst = jnp.asarray(rng.integers(0, 8, 48).astype(np.int32))
+        w = jnp.asarray(rng.integers(1, 5, 48).astype(np.int32))
+        s_h = mc.update_batch(s_h, src, dst, weights=w, cfg=cfg_h)
+        s_s = mc.update_batch(s_s, src, dst, weights=w, cfg=cfg_s)
+        if i % 2 == 1:
+            s_h = mc.decay(s_h, cfg=cfg_h)
+            s_s = mc.decay(s_s, cfg=cfg_s)
+        for name in ("slabs", "src_table"):
+            for a, b in zip(getattr(s_h, name), getattr(s_s, name)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for name in ("n_rows", "dropped_rows", "dropped_probes",
+                     "evictions", "deferred_new", "decay_cursor",
+                     "decay_steps"):
+            assert int(getattr(s_h, name)) == int(getattr(s_s, name)), name
+        inv = mc.check_invariants(s_h, cfg_h)
+        assert inv["dst_hash_consistent"]
+        assert inv["tot_matches_cnt_sum"] and inv["free_slots_consistent"]
+
+
 @settings(max_examples=8, deadline=None)
 @given(st.integers(min_value=0, max_value=2**31 - 1))
 def test_update_batch_order_independence_for_existing_edges(seed):
