@@ -87,6 +87,23 @@ def _time(fn, *args, n=10, warmup=2):
     return float(np.median(samples)) * 1e6  # us
 
 
+def _time_paired(fns, n=20, warmup=2):
+    """Min per-call latency in us for several candidates, sampled in
+    alternation so slow drift (thermal, background load) hits every
+    candidate equally — the right design for A-vs-B sweeps where the
+    quantity of interest is the ratio."""
+    for fn in fns:
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+    samples = [[] for _ in fns]
+    for _ in range(n):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            samples[i].append(time.perf_counter() - t0)
+    return [float(np.min(s)) * 1e6 for s in samples]
+
+
 def bench_update_throughput():
     """B1: edges/sec for batched updates; flat across graph sizes = O(1),
     plus a new-edge-fraction sweep of the fused pipeline vs the seed path."""
@@ -156,9 +173,13 @@ def bench_update_throughput():
 
 
 def bench_query_cdf():
-    """B2: items touched (CDF^-1) and latency vs threshold and Zipf s."""
+    """B2: items touched (CDF^-1) and latency vs threshold and Zipf s, plus
+    the DESIGN.md §8 read-side sweeps: fused vs unfused gather by batch
+    size, and chunked early-exit cost vs mean_items (must track CDF^-1(t),
+    not C)."""
     n = 512 if SMOKE else 2048
     cfg = mc.MCConfig(num_rows=n, capacity=64, sort_passes=2)
+    fused_speedups = []   # (B >= 1024 rows) -> B2_fused_check aggregate
     for zipf_s in (1.5,) if SMOKE else (1.2, 1.5, 2.0):
         graph = MarkovGraphSampler(num_nodes=n, out_degree=48,
                                    zipf_s=zipf_s, seed=1)
@@ -177,6 +198,70 @@ def bench_query_cdf():
             REC.emit("query_cdf", f"B2_query_cdf[s={zipf_s};t={t}]", us / 512,
                      f"{mean_items:.2f} items touched (CDF^-1)",
                      zipf_s=zipf_s, threshold=t,
+                     mean_items=round(mean_items, 3))
+
+        # fused vs unfused gather: the in-kernel row gather must beat the
+        # host-side O(B*C) _ordered_rows pipeline as B grows
+        for batch in (128, 256) if SMOKE else (256, 1024, 4096):
+            srcs_b = jnp.asarray(
+                np.arange(batch, dtype=np.int32) % n)
+
+            def q(fused):
+                cfg_f = dataclasses.replace(cfg, fused_query=fused)
+                return lambda: mc.query_threshold(
+                    state, srcs_b, 0.9, cfg=cfg_f, max_items=16)
+
+            us_unf, us_fus = _time_paired([q(False), q(True)],
+                                          n=8 if SMOKE else 30)
+            res = {False: us_unf, True: us_fus}
+            speedup = res[False] / res[True]
+            if batch >= (256 if SMOKE else 1024):
+                fused_speedups.append(speedup)
+            for fused in (False, True):
+                REC.emit("query_cdf",
+                         f"B2_fused_sweep[s={zipf_s};B={batch};"
+                         f"fused={fused}]", res[fused],
+                         f"{speedup:.2f}x fused/unfused at B={batch}",
+                         zipf_s=zipf_s, batch=batch, fused=fused,
+                         threshold=0.9,
+                         speedup_fused=round(speedup, 3))
+    if fused_speedups:
+        # single-row CPU timings are noisy; the aggregate is the claim
+        geo = float(np.exp(np.mean(np.log(fused_speedups))))
+        REC.emit("query_cdf", "B2_fused_check", geo,
+                 f"geomean fused speedup over {len(fused_speedups)} "
+                 f"B>=1024 rows",
+                 geomean_speedup=round(geo, 3),
+                 rows_aggregated=len(fused_speedups))
+    # chunked early-exit sweep (pallas kernel, big C): per-call cost must
+    # grow with mean_items (CDF^-1(t)), not capacity — later chunks of
+    # satisfied blocks are predicated off with @pl.when.  Rows carry a
+    # near-uniform live prefix so CDF^-1(t) ~ t * live actually spans the
+    # chunks (a steep zipf row saturates inside chunk 0 at every t), and
+    # the kernel is timed directly on pre-ordered rows so the probe/gather
+    # stages don't mask the walk.
+    from repro.kernels import ops as kops
+    cap = 256
+    bq = 128 if SMOKE else 512
+    rng = np.random.default_rng(2)
+    live = cap - 32
+    c_np = np.zeros((bq, cap), np.int32)
+    c_np[:, :live] = rng.integers(90, 110, (bq, live))
+    c_np = np.sort(c_np, axis=1)[:, ::-1].copy()
+    c_ord = jnp.asarray(c_np)
+    d_ord = jnp.asarray(rng.integers(0, 10_000, (bq, cap)).astype(np.int32))
+    tot = jnp.asarray(c_np.sum(1).astype(np.int32))
+    for t in (0.25, 0.5, 0.97):
+        _, _, n_needed = kops.cdf_query(c_ord, d_ord, tot, t, max_items=16)
+        mean_items = float(jnp.mean(n_needed.astype(jnp.float32)))
+        for chunks in (1, 2) if SMOKE else (1, 2, 4):
+            us = _time(lambda: kops.cdf_query(
+                c_ord, d_ord, tot, t, max_items=16, chunks=chunks,
+                impl="pallas"), n=5 if SMOKE else 15)
+            REC.emit("query_cdf",
+                     f"B2_chunk_sweep[t={t};chunks={chunks}]", us,
+                     f"{mean_items:.1f} mean_items (CDF^-1), C={cap}",
+                     threshold=t, chunks=chunks, capacity=cap,
                      mean_items=round(mean_items, 3))
     REC.write("query_cdf")
 
@@ -299,10 +384,12 @@ def bench_drafter():
         follow = succ[toks[:, t - 1]]
         noise = rng.integers(0, 512, 8)
         toks[:, t] = np.where(rng.random(8) < 0.8, follow, noise)
-    t0 = time.perf_counter()
-    st = spec.observe(st, jnp.asarray(toks), cfg=ncfg)
-    jax.block_until_ready(st.chain.slabs.cnt)
-    us = (time.perf_counter() - t0) * 1e6
+    toks_j = jnp.asarray(toks)
+    st = spec.observe(st, toks_j, cfg=ncfg)   # learn once (and compile)
+    # steady-state observe cost, same warmup+median contract as every other
+    # recorder (one-shot timing was jit-compile-dominated and run-to-run
+    # noise published false regressions in the committed JSON)
+    us = _time(lambda: spec.observe(st, toks_j, cfg=ncfg), n=5)
     # drafts where the chain knows the successor
     ctx = jnp.asarray(toks[:, 100:102])
     draft, ok = spec.draft(st, ctx, cfg=ncfg, k=1)
@@ -312,6 +399,19 @@ def bench_drafter():
     REC.emit("drafter", "B6_drafter", us,
              f"top-1 draft matches true successor {acc:.0%} of ok-drafts",
              acceptance=round(acc, 4))
+
+    # us_per_draft: the one-dispatch walk kernel (DESIGN.md §8) vs the
+    # k-dispatch scan oracle, per draft() call at serving batch size
+    k = 4
+    ctx_b = jnp.asarray(toks[:, 200:202])
+    us_walk, us_scan = _time_paired(
+        [lambda: spec.draft(st, ctx_b, cfg=ncfg, k=k),
+         lambda: spec.draft_reference(st, ctx_b, cfg=ncfg, k=k)], n=20)
+    for name, us_d in (("walk", us_walk), ("scan", us_scan)):
+        REC.emit("drafter", f"B6_draft_us[{name}]", us_d,
+                 f"k={k} draft per call ({name} path)",
+                 us_per_draft=round(us_d, 3), k=k,
+                 batch=int(ctx_b.shape[0]), path=name)
     REC.write("drafter")
 
 
@@ -373,9 +473,26 @@ def bench_sharded_routing():
 
 REQUIRED_ROW_KEYS = ("name", "us_per_call", "derived")
 
+# per-bench schema: rows whose name starts with <prefix> must carry these
+# extra keys, and each bench must contain at least one row per prefix — so a
+# stale pre-sweep BENCH file fails --validate instead of passing vacuously
+BENCH_ROW_SCHEMAS = {
+    "query_cdf": {
+        "B2_query_cdf": ("zipf_s", "threshold", "mean_items"),
+        "B2_fused_sweep": ("batch", "fused", "speedup_fused"),
+        "B2_fused_check": ("geomean_speedup",),
+        "B2_chunk_sweep": ("threshold", "chunks", "capacity", "mean_items"),
+    },
+    "drafter": {
+        "B6_drafter": ("acceptance",),
+        "B6_draft_us": ("us_per_draft", "k", "path"),
+    },
+}
+
 
 def validate_bench_files() -> int:
-    """Check every BENCH_*.json against the Recorder schema.
+    """Check every BENCH_*.json against the Recorder schema (and the
+    per-bench row schemas in ``BENCH_ROW_SCHEMAS``).
 
     Returns the number of problems found (0 = all good); prints one line per
     problem so CI logs point at the stale file directly.
@@ -405,6 +522,19 @@ def validate_bench_files() -> int:
                 problems.append(
                     f"{name}: row {i} ({row.get('name', '?')}) "
                     f"missing {missing}")
+        row_schemas = BENCH_ROW_SCHEMAS.get(data["bench"], {})
+        for prefix, extra_keys in row_schemas.items():
+            rows = [r for r in data["rows"]
+                    if str(r.get("name", "")).startswith(prefix)]
+            if not rows:
+                problems.append(f"{name}: no '{prefix}*' rows (stale file — "
+                                f"re-run benchmarks)")
+                continue
+            for row in rows:
+                missing = [k for k in extra_keys if k not in row]
+                if missing:
+                    problems.append(f"{name}: row {row['name']} missing "
+                                    f"{missing}")
     for p in problems:
         print(f"SCHEMA: {p}")
     if not problems:

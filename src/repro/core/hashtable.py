@@ -48,6 +48,27 @@ def hash_u32(x: jax.Array) -> jax.Array:
     return x
 
 
+def ctx_hash_fold(h: jax.Array, tok: jax.Array) -> jax.Array:
+    """One step of the rolling n-gram context hash: ``h*M + hash_u32(tok)``.
+
+    The single definition of the recurrence shared by
+    ``speculative.context_ids``, the draft-walk kernel and its oracle — the
+    three must hash identically or drafts silently stop matching what
+    ``observe`` learned."""
+    return h * jnp.uint32(1000003) + hash_u32(tok)
+
+
+def ctx_window_hash(window: jax.Array) -> jax.Array:
+    """Context id of a ``[..., W]`` token window: fold the W tokens newest
+    first (the order ``context_ids`` produces at the last position) and
+    clear the top bit so the id is a valid table key."""
+    w = window.shape[-1]
+    h = jnp.zeros(window.shape[:-1], jnp.uint32)
+    for j in range(w):
+        h = ctx_hash_fold(h, window[..., w - 1 - j])
+    return (h & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
+
+
 def _slot0(key: jax.Array, size: int) -> jax.Array:
     return (hash_u32(key) & jnp.uint32(size - 1)).astype(jnp.int32)
 
@@ -76,9 +97,22 @@ def lookup(table: HashTable, key: jax.Array, max_probes: int = 64) -> Tuple[jax.
     return val, val != EMPTY
 
 
-def lookup_batch(table: HashTable, keys: jax.Array, max_probes: int = 64):
-    """vmapped read-only probe: ``(vals[B], found[B])``."""
-    return jax.vmap(lambda k: lookup(table, k, max_probes))(keys)
+def lookup_batch(table: HashTable, keys: jax.Array, max_probes: int = 64,
+                 impl: str = "vmap"):
+    """Batched read-only probe: ``(vals[B], found[B])``.
+
+    ``impl='vmap'`` (default) keeps the historical vmapped scalar probe.
+    Any kernel impl (``auto``/``ref``/``pallas``) routes through the shared
+    open-addressing probe kernel (``ops.ht_find`` — the flat table is the
+    N = 1 case of the per-row probe), so the src lookup at the head of every
+    query is one fused dispatch instead of B scalar probe loops.  Imported
+    lazily: this module is a leaf the kernel layer itself depends on.
+    """
+    if impl == "vmap":
+        return jax.vmap(lambda k: lookup(table, k, max_probes))(keys)
+    from repro.kernels import ops
+    return ops.ht_find(keys, table.keys, table.vals, max_probes=max_probes,
+                       impl=impl)
 
 
 @functools.partial(jax.jit, static_argnames=("max_probes",))

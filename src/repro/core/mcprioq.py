@@ -39,11 +39,17 @@ Kernel dispatch is selected by ``MCConfig.impl`` (``auto``/``ref``/
 through this module.  ``update_batch_reference`` keeps the pre-kernel
 O(B)-scan semantics as an oracle for equivalence tests and benchmarks.
 
-Inference (paper §II.B)
------------------------
+Inference (paper §II.B, DESIGN.md §8)
+-------------------------------------
 ``query_threshold`` walks the order permutation accumulating probability until
-the cumulative sum crosses ``t``: complexity O(CDF^-1(t)) items touched.
-Both queries run through :func:`repro.kernels.ops.cdf_query`.
+the cumulative sum crosses ``t``: complexity O(CDF^-1(t)) items touched.  By
+default (``MCConfig.fused_query``) the kernel layer owns the whole read:
+:func:`repro.kernels.ops.cdf_query_fused` gathers only the queried rows
+(scalar-prefetch DMA on TPU) and runs the chunked early-exit walk in-kernel;
+``fused_query=False`` keeps the unfused ``_ordered_rows`` +
+:func:`repro.kernels.ops.cdf_query` baseline, bit-identical by the
+integer-walk contract.  ``query_topk`` is the kernel's ``threshold=None``
+mode.
 
 Maintenance (paper §II.C, DESIGN.md §6)
 ---------------------------------------
@@ -91,6 +97,11 @@ class MCConfig:
     dst_table_size: int = 0       # per-row; 0 -> 4 * capacity pow2
     max_new_per_batch: int = 0    # slow-path prefix; 0 = unbounded (batch)
     impl: str = "auto"            # kernel dispatch: auto | ref | pallas
+    # inference path (DESIGN.md §8): fused in-kernel row gather vs the
+    # unfused _ordered_rows host-side gather; 0 = auto-pick early-exit
+    # chunks from capacity and the lane width
+    fused_query: bool = True
+    query_chunks: int = 0
     # maintenance (DESIGN.md §6): 0 = stop-the-world decay; R > 0 = rolling
     # decay that halves one R-row block per call (bounded per-call work)
     decay_block_rows: int = 0
@@ -211,8 +222,14 @@ def _dh_rebuild_all(state: MCState, cfg: MCConfig) -> MCState:
 
 
 def lookup_rows(state: MCState, src: jax.Array, cfg: MCConfig):
-    """Batched src -> row. Returns ``(rows[B], found[B])``; row 0 when missing."""
-    rows, found = ht.lookup_batch(state.src_table, src, cfg.max_probes)
+    """Batched src -> row. Returns ``(rows[B], found[B])``; row 0 when missing.
+
+    Routed through the shared open-addressing probe kernel (``ops.ht_find``
+    via ``lookup_batch``) so the src lookup at the head of every query and
+    update is one fused dispatch on the selected backend.
+    """
+    rows, found = ht.lookup_batch(state.src_table, src, cfg.max_probes,
+                                  impl=cfg.impl)
     return jnp.where(found, rows, 0), found
 
 
@@ -469,9 +486,11 @@ def update_batch_reference(
 def _ordered_rows(state: MCState, src: jax.Array, cfg: MCConfig):
     """Gather counts/dsts of each queried row in priority order.
 
-    The kernel-side layout transform shared by both queries: counts of
-    unknown srcs are zeroed so downstream liveness tests (``c > 0``) subsume
-    the ``found`` mask.
+    The **unfused** layout transform (three O(B*C) host-side gathers) kept
+    as the baseline the fused path must match bit-for-bit
+    (``cfg.fused_query=False``; DESIGN.md §8): counts of unknown srcs are
+    zeroed so downstream liveness tests (``c > 0``) subsume the ``found``
+    mask.
     """
     rows, found = lookup_rows(state, src, cfg)
     order = state.slabs.order[rows]                       # [B, C]
@@ -479,6 +498,22 @@ def _ordered_rows(state: MCState, src: jax.Array, cfg: MCConfig):
     d = jnp.take_along_axis(state.slabs.dst[rows], order, axis=1)
     c = jnp.where(found[:, None], c, 0)
     return c, d, state.slabs.tot[rows], found
+
+
+def _query(state: MCState, src: jax.Array, threshold, cfg: MCConfig,
+           max_items: int):
+    """Shared inference dispatch: fused in-kernel row gather by default,
+    the unfused ``_ordered_rows`` + ``cdf_query`` pipeline otherwise.
+    ``threshold=None`` is top-k mode (every live item)."""
+    if cfg.fused_query:
+        rows, found = lookup_rows(state, src, cfg)
+        return ops.cdf_query_fused(
+            rows, found, state.slabs.cnt, state.slabs.dst, state.slabs.order,
+            state.slabs.tot, threshold, max_items=max_items,
+            chunks=cfg.query_chunks, impl=cfg.impl)
+    c, d, tot, _ = _ordered_rows(state, src, cfg)
+    return ops.cdf_query(c, d, tot, threshold, max_items=max_items,
+                         chunks=cfg.query_chunks, impl=cfg.impl)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "max_items"))
@@ -495,22 +530,20 @@ def query_threshold(
     Returns ``(dsts[B, max_items], probs[B, max_items], n_needed[B])`` where
     entries past ``n_needed`` are EMPTY/0.  ``n_needed`` is the paper's
     CDF^-1(t): how many items a reader must touch.  Unknown srcs yield 0.
-    Runs through the kernel layer (``ops.cdf_query``).
+    Runs through the kernel layer (``ops.cdf_query_fused`` /
+    ``ops.cdf_query`` per ``cfg.fused_query``; DESIGN.md §8).
     """
-    c, d, tot, _ = _ordered_rows(state, src, cfg)
-    return ops.cdf_query(c, d, tot, threshold, max_items=max_items,
-                         impl=cfg.impl)
+    return _query(state, src, threshold, cfg, max_items)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "k"))
 def query_topk(state: MCState, src: jax.Array, *, cfg: MCConfig, k: int = 8):
     """Top-k edges by (approximate) probability. ``(dsts[B,k], probs[B,k])``.
 
-    A threshold query that can never be satisfied (t > 1) keeps every live
-    item, so top-k shares the fused CDF kernel.
+    Top-k is the kernel's explicit ``threshold=None`` mode (keep every live
+    item), sharing the fused CDF walk.
     """
-    c, d, tot, _ = _ordered_rows(state, src, cfg)
-    dk, pk, _ = ops.cdf_query(c, d, tot, 2.0, max_items=k, impl=cfg.impl)
+    dk, pk, _ = _query(state, src, None, cfg, k)
     return dk, pk
 
 

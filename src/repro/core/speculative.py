@@ -23,8 +23,10 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import hashtable as ht
 from repro.core import mcprioq as mc
-from repro.core.hashtable import EMPTY, hash_u32
+from repro.core.hashtable import EMPTY
+from repro.kernels import ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,9 +53,8 @@ def context_ids(tokens: jax.Array, order: int) -> jax.Array:
     """
     h = jnp.zeros_like(tokens, dtype=jnp.uint32)
     for k in range(order):
-        t = jnp.roll(tokens, k, axis=-1).astype(jnp.uint32)
         # positions before the context window see rolled garbage; mask below
-        h = h * jnp.uint32(1000003) + hash_u32(t.astype(jnp.int32))
+        h = ht.ctx_hash_fold(h, jnp.roll(tokens, k, axis=-1))
     idx = jnp.arange(tokens.shape[-1])
     valid = idx >= (order - 1)
     ctx = (h & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
@@ -89,28 +90,49 @@ def maintain(state: DrafterState, *, cfg: NGramConfig) -> DrafterState:
 @functools.partial(jax.jit, static_argnames=("cfg", "k"))
 def draft(state: DrafterState, context: jax.Array, *, cfg: NGramConfig,
           k: int = 4) -> Tuple[jax.Array, jax.Array]:
-    """Greedy draft of k tokens per sequence.
+    """Greedy draft of k tokens per sequence — one kernel dispatch.
 
     context: int32[B, >=order] recent tokens.  Returns (draft[B, k],
     ok[B, k]) — ok False where the chain had no transition (caller stops
-    speculation there).
+    speculation there).  The chain snapshot is immutable during a draft
+    (EpochStore contract), so the whole k-step walk of (rolling hash ->
+    src probe -> top-1 gather) runs as ONE fused dispatch
+    (:func:`repro.kernels.ops.draft_walk`) instead of k round trips through
+    lookup + gather + cdf_query; lanes whose walk dies stop doing work
+    (token 0 / ok False thereafter).  :func:`draft_reference` keeps the
+    k-dispatch scan as the semantic oracle.
     """
+    chain = state.chain
+    window = context[:, -cfg.order:]
+    return ops.draft_walk(
+        window, chain.src_table.keys, chain.src_table.vals,
+        chain.slabs.cnt, chain.slabs.dst, chain.slabs.order[:, 0],
+        k=k, max_probes=cfg.mc.max_probes, impl=cfg.mc.impl)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k"))
+def draft_reference(state: DrafterState, context: jax.Array, *,
+                    cfg: NGramConfig, k: int = 4
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for :func:`draft`: the k-dispatch lax.scan over ``query_topk``
+    (the pre-kernel shape of the walk), with the same dead-lane stop —
+    a lane that fails emits token 0 / ok False for every later step.  Must
+    match the walk kernel token-for-token."""
     order = cfg.order
 
-    def step(ctx_window, _):
-        # ctx_window: int32[B, order]
+    def step(carry, _):
+        ctx_window, alive = carry             # ctx_window: int32[B, order]
         src = context_ids(ctx_window, order)[:, -1]
         dsts, probs = mc.query_topk(state.chain, src, cfg=cfg.mc, k=1)
         nxt = dsts[:, 0]
-        ok = (nxt != EMPTY) & (probs[:, 0] > 0)
+        ok = alive & (nxt != EMPTY) & (probs[:, 0] > 0)
         nxt = jnp.where(ok, nxt, 0)
         new_window = jnp.concatenate([ctx_window[:, 1:], nxt[:, None]], axis=1)
-        return new_window, (nxt, ok)
+        return (new_window, ok), (nxt, ok)
 
     window = context[:, -order:]
-    _, (toks, oks) = jax.lax.scan(step, window, None, length=k)
-    # accumulate ok: once a step fails, the rest of the chain is invalid
-    oks = jnp.cumprod(oks.astype(jnp.int32), axis=0).astype(bool)
+    alive0 = jnp.ones((window.shape[0],), bool)
+    _, (toks, oks) = jax.lax.scan(step, (window, alive0), None, length=k)
     return toks.T, oks.T
 
 

@@ -2,7 +2,14 @@
 
   * :mod:`repro.kernels.slab_update` — fused batched edge increment (§II.A)
   * :mod:`repro.kernels.oddeven`     — lock-free bubble sort, vectorised (§II.2)
-  * :mod:`repro.kernels.cdf_query`   — threshold inference (§II.B)
+  * :mod:`repro.kernels.cdf_query`   — chunked early-exit threshold inference
+                                       (§II.B)
+  * :mod:`repro.kernels.cdf_gather`  — fused row-gather + CDF walk (scalar
+                                       prefetch; §II.B at the traffic level)
+  * :mod:`repro.kernels.probe`       — shared open-addressing probe: per-row
+                                       dst hash (§II.2) + flat src table (§II.1)
+  * :mod:`repro.kernels.walk`        — one-shot k-step greedy draft walk
+                                       (speculative decoding)
 
 Public API lives in :mod:`repro.kernels.ops` (padding + backend dispatch);
 ``ref.py`` holds the pure-jnp oracles each kernel is tested against.

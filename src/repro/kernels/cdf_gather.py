@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: fused row-gather + CDF threshold walk (paper §II.B).
+
+The unfused inference path materialises every queried row's counts/dsts in
+priority order on the host side (``mcprioq._ordered_rows``: three O(B*C)
+``take_along_axis`` gathers) before ``cdf_query`` ever launches — O(B*C)
+memory traffic regardless of the threshold.  This kernel makes the read side
+honor the paper's O(CDF^-1(t)) bound at the traffic level: the queried row
+indices arrive via **scalar prefetch** (``pltpu.PrefetchScalarGridSpec``), so
+each grid instance's BlockSpec index map points the DMA engine straight at
+``cnt/dst/order[rows[i]]`` in the slab arrays — only queried rows ever move,
+and the order-gather (slot permutation -> priority order) happens on the
+VMEM-resident row tile inside the kernel, chunk by chunk inside the
+predicated walk body, so skipped chunks do no gather work.
+
+The walk itself is ``cdf_query.walk_chunks`` — same integer-exact cumulative
+semantics, same ``@pl.when`` chunk predication, but with a **one-query
+block** the early exit is per-row exact, not block-granular: each query
+stops touching lanes the moment its own cumulative count crosses the
+threshold.
+
+Semantics oracle: ``ref.cdf_query_fused_ref`` (single fused advanced-index
+gather + the shared ref walk); bit-identical to the unfused path by the
+integer-walk contract.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.cdf_query import walk_chunks
+
+
+def _fused_kernel(rows_ref, cnt_ref, dst_ref, ord_ref, tot_ref, found_ref,
+                  t_ref, dst_out_ref, prob_out_ref, n_out_ref, carry_ref,
+                  *, max_items: int, chunks: int, topk: bool):
+    # cnt/dst/ord_ref are the (1, C) tiles of THIS query's row, DMA'd via
+    # the scalar-prefetched row index.  The priority-order gather runs
+    # chunk-by-chunk inside load(k) — i.e. inside the predicated walk body —
+    # so a chunk skipped by the early exit does no gather work either.
+    cap = cnt_ref.shape[-1]
+    chunk = cap // chunks
+    totf = jnp.maximum(tot_ref[...], 1).astype(jnp.float32)  # (1,)
+
+    def load(k):
+        ords = ord_ref[:, k * chunk:(k + 1) * chunk]       # (1, chunk)
+        ck = jnp.take_along_axis(cnt_ref[...], ords, axis=1)
+        ck = jnp.where(found_ref[...] > 0, ck, 0)          # unknown src -> 0
+        dk = jnp.take_along_axis(dst_ref[...], ords, axis=1)
+        return ck, dk
+
+    walk_chunks(load, totf, t_ref[0], dst_out_ref, prob_out_ref, n_out_ref,
+                carry_ref, cap=cap, max_items=max_items, chunks=chunks,
+                topk=topk)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_items", "chunks", "topk", "interpret"))
+def cdf_query_fused_pallas(rows: jax.Array, found: jax.Array,
+                           cnt: jax.Array, dst: jax.Array, order: jax.Array,
+                           tot: jax.Array, threshold=0.0, *,
+                           max_items: int = 16, chunks: int = 1,
+                           topk: bool = False, interpret: bool = True):
+    """rows[B] (pre-resolved, 0 where missing), found[B] int32 mask,
+    cnt/dst/order: [N, C] slab arrays, tot: [N].  Returns
+    (dsts[B, max_items], probs[B, max_items], n_needed[B]).
+    """
+    b = rows.shape[0]
+    n, cap = cnt.shape
+    assert cap % chunks == 0, (cap, chunks)
+    t_arr = jnp.asarray([threshold], jnp.float32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, cap), lambda i, rows_ref: (rows_ref[i], 0)),
+            pl.BlockSpec((1, cap), lambda i, rows_ref: (rows_ref[i], 0)),
+            pl.BlockSpec((1, cap), lambda i, rows_ref: (rows_ref[i], 0)),
+            pl.BlockSpec((1,), lambda i, rows_ref: (rows_ref[i],)),
+            pl.BlockSpec((1,), lambda i, rows_ref: (i,)),
+            pl.BlockSpec((1,), lambda i, rows_ref: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, max_items), lambda i, rows_ref: (i, 0)),
+            pl.BlockSpec((1, max_items), lambda i, rows_ref: (i, 0)),
+            pl.BlockSpec((1,), lambda i, rows_ref: (i,)),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.int32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, max_items=max_items, chunks=chunks,
+                          topk=topk),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, max_items), jnp.int32),
+            jax.ShapeDtypeStruct((b, max_items), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(rows, cnt, dst, order, tot, found.astype(jnp.int32), t_arr)

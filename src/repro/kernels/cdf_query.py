@@ -3,10 +3,28 @@
 Fuses the whole inference path — probability normalisation (two-counter
 scheme), prefix-sum, threshold test, and masked top-item emission — into one
 VPU kernel over a (QUERIES_PER_BLOCK, C) VMEM tile.  The paper's
-O(CDF^-1(t)) bound shows up as ``n_needed``; on real TPU the chunked variant
-(``chunks`` > 1) walks C in lane-width chunks carrying the running cumsum so
-late chunks of already-satisfied rows are predicated off — the block-granular
-analogue of the paper's early exit.
+O(CDF^-1(t)) bound shows up twice:
+
+  * ``n_needed`` reports CDF^-1(t) per query, and
+  * with ``chunks`` > 1 the walk over C runs in lane-width chunks whose
+    bodies are predicated off with ``@pl.when`` once **every** row of the
+    block has crossed the threshold — the block-granular analogue of the
+    paper's per-reader early exit.  Work done then tracks ``mean_items``
+    (CDF^-1), not C.
+
+Exactness contract (shared with ``ref.cdf_query_ref`` and the fused-gather
+variant in ``cdf_gather.py``): the cumulative walk runs in **integer count
+space** — ``needed[j] = (sum(cnt[<j]) < t * tot) & (cnt[j] > 0)`` with the
+prefix sums exact int32 — so any chunking of the walk is bit-identical to
+any other (float prefix sums would make the result depend on association
+order).  The only float ops, ``t * tot`` and ``p = cnt / tot``, are
+per-row/per-item and association-free.
+
+``threshold=None`` selects **top-k mode** (keep every live item, emit the
+first ``max_items``): the mode is a static kernel flag, not an unreachable
+sentinel threshold, so the contract never relies on a float that cannot be
+crossed.  The early-exit carry state lives in a scratch ref because values
+cannot thread through ``@pl.when`` bodies.
 """
 
 from __future__ import annotations
@@ -16,53 +34,112 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.hashtable import EMPTY
 
 DEFAULT_QUERIES_PER_BLOCK = 128
+LANE_WIDTH = 128  # VPU lane dim; auto-chunking targets one chunk per lane tile
+
+
+def auto_chunks(capacity: int, chunks: int) -> int:
+    """Resolve ``chunks=0`` (auto) from C and the lane width: one chunk per
+    128-lane tile when C is a lane multiple, else a single chunk.  Explicit
+    chunk counts are validated here — once, for every backend — so a bad
+    ``MCConfig.query_chunks`` fails identically on ref and pallas instead
+    of crashing only at TPU trace time."""
+    if chunks:
+        if capacity % chunks:
+            raise ValueError(
+                f"chunks={chunks} must divide capacity={capacity} "
+                f"(MCConfig.query_chunks)")
+        return chunks
+    if capacity % LANE_WIDTH == 0 and capacity > LANE_WIDTH:
+        return capacity // LANE_WIDTH
+    return 1
+
+
+def walk_chunks(load, totf, t, dst_out_ref, prob_out_ref, n_out_ref,
+                carry_ref, *, cap: int, max_items: int, chunks: int,
+                topk: bool):
+    """The chunked CDF walk shared by the pre-gathered and fused kernels.
+
+    ``load(k) -> (ck, dk)`` yields chunk ``k`` of the counts/dsts in
+    priority order (reads happen inside the predicated body, so a skipped
+    chunk costs nothing).  ``carry_ref`` is an int32 (Q, 1) scratch holding
+    each row's exact cumulative count; outputs are initialised here and
+    written per chunk.  ``topk=True`` keeps every live item and disables
+    the early exit (there is no threshold to cross).
+    """
+    chunk = cap // chunks
+    dst_out_ref[...] = jnp.full_like(dst_out_ref[...], EMPTY)
+    prob_out_ref[...] = jnp.zeros_like(prob_out_ref[...])
+    n_out_ref[...] = jnp.zeros_like(n_out_ref[...])
+    carry_ref[...] = jnp.zeros_like(carry_ref[...])
+    tcnt = t * totf                                   # (Q,) float32
+
+    for k in range(chunks):
+
+        def body(k=k):
+            ck, dk = load(k)                          # (Q, chunk) int32
+            carry = carry_ref[:, 0]                   # exact int32 prefix
+            cum = carry[:, None] + jnp.cumsum(ck, axis=1)
+            if topk:
+                needed = ck > 0
+            else:
+                before = (cum - ck).astype(jnp.float32)
+                needed = (before < tcnt[:, None]) & (ck > 0)
+            n_out_ref[...] = n_out_ref[...] + \
+                jnp.sum(needed.astype(jnp.int32), axis=1)
+            lo = k * chunk
+            if lo < max_items:
+                hi = min(lo + chunk, max_items)
+                w = hi - lo
+                p = ck.astype(jnp.float32) / totf[:, None]
+                keep = needed[:, :w]
+                dst_out_ref[:, lo:hi] = jnp.where(keep, dk[:, :w], EMPTY)
+                prob_out_ref[:, lo:hi] = jnp.where(keep, p[:, :w], 0.0)
+            carry_ref[:, 0] = cum[:, -1]
+
+        if topk or chunks == 1:
+            body()
+        else:
+            # real early exit: once every row's cumulative count crossed the
+            # threshold no later item can be needed (prefix counts are
+            # monotone), so the whole chunk is predicated off.  Skipping
+            # leaves carry stale, which keeps the block skipped — exact.
+            done = carry_ref[:, 0].astype(jnp.float32) >= tcnt
+            pl.when((k == 0) | ~jnp.all(done))(body)
 
 
 def _cdf_kernel(c_ref, d_ref, tot_ref, t_ref, dst_out_ref, prob_out_ref,
-                n_out_ref, *, max_items: int, chunks: int):
-    c = c_ref[...].astype(jnp.float32)          # (Qb, C)
-    d = d_ref[...]
-    tot = jnp.maximum(tot_ref[...], 1).astype(jnp.float32)  # (Qb,)
-    t = t_ref[0]
-    cap = c.shape[-1]
+                n_out_ref, carry_ref, *, max_items: int, chunks: int,
+                topk: bool):
+    cap = c_ref.shape[-1]
     chunk = cap // chunks
-    p = c / tot[:, None]
+    totf = jnp.maximum(tot_ref[...], 1).astype(jnp.float32)  # (Qb,)
 
-    n_acc = jnp.zeros((c.shape[0],), jnp.int32)
-    carry = jnp.zeros((c.shape[0],), jnp.float32)
-    for k in range(chunks):
-        pk = p[:, k * chunk : (k + 1) * chunk]
-        ck = c[:, k * chunk : (k + 1) * chunk]
-        # rows with carry >= t are done: their whole chunk is predicated off
-        # (on TPU this chunk's VPU work is skipped via @pl.when per block row
-        #  group; numerically the mask below is equivalent)
-        cum = carry[:, None] + jnp.cumsum(pk, axis=1)
-        before = cum - pk
-        needed = (before < t) & (ck > 0)
-        n_acc = n_acc + jnp.sum(needed.astype(jnp.int32), axis=1)
-        if k * chunk < max_items:
-            lo, hi = k * chunk, min((k + 1) * chunk, max_items)
-            width = hi - lo
-            keep = needed[:, :width]
-            dst_out_ref[:, lo:hi] = jnp.where(keep, d[:, lo:hi], EMPTY)
-            prob_out_ref[:, lo:hi] = jnp.where(keep, pk[:, :width], 0.0)
-        carry = cum[:, -1]
-    n_out_ref[...] = n_acc
+    def load(k):
+        return (c_ref[:, k * chunk:(k + 1) * chunk],
+                d_ref[:, k * chunk:(k + 1) * chunk])
+
+    walk_chunks(load, totf, t_ref[0], dst_out_ref, prob_out_ref, n_out_ref,
+                carry_ref, cap=cap, max_items=max_items, chunks=chunks,
+                topk=topk)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("max_items", "queries_per_block", "chunks", "interpret"))
+    static_argnames=("max_items", "queries_per_block", "chunks", "topk",
+                     "interpret"))
 def cdf_query_pallas(c_ord: jax.Array, d_ord: jax.Array, tot: jax.Array,
-                     threshold, *, max_items: int = 16,
+                     threshold=0.0, *, max_items: int = 16,
                      queries_per_block: int = DEFAULT_QUERIES_PER_BLOCK,
-                     chunks: int = 1, interpret: bool = True):
+                     chunks: int = 1, topk: bool = False,
+                     interpret: bool = True):
     """c_ord/d_ord: [B, C] counts/dsts in priority order (0 where missing),
     tot: [B]. Returns (dsts[B, max_items], probs[B, max_items], n_needed[B]).
+    ``topk=True`` ignores the threshold and keeps every live item.
     """
     b, cap = c_ord.shape
     qb = min(queries_per_block, b)
@@ -75,7 +152,8 @@ def cdf_query_pallas(c_ord: jax.Array, d_ord: jax.Array, tot: jax.Array,
     tscalar = pl.BlockSpec((1,), lambda i: (0,))
     tilek = pl.BlockSpec((qb, max_items), lambda i: (i, 0))
     return pl.pallas_call(
-        functools.partial(_cdf_kernel, max_items=max_items, chunks=chunks),
+        functools.partial(_cdf_kernel, max_items=max_items, chunks=chunks,
+                          topk=topk),
         grid=grid,
         in_specs=[tile2d, tile2d, tile1d, tscalar],
         out_specs=[tilek, tilek, tile1d],
@@ -84,5 +162,6 @@ def cdf_query_pallas(c_ord: jax.Array, d_ord: jax.Array, tot: jax.Array,
             jax.ShapeDtypeStruct((b, max_items), jnp.float32),
             jax.ShapeDtypeStruct((b,), jnp.int32),
         ],
+        scratch_shapes=[pltpu.VMEM((qb, 1), jnp.int32)],
         interpret=interpret,
     )(c_ord, d_ord, tot, t_arr)

@@ -14,11 +14,13 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import cdf_gather as _cg
 from repro.kernels import cdf_query as _cdf
-from repro.kernels import dh_find as _dh
 from repro.kernels import oddeven as _oe
+from repro.kernels import probe as _pr
 from repro.kernels import ref as _ref
 from repro.kernels import slab_update as _su
+from repro.kernels import walk as _wk
 
 
 def _on_tpu() -> bool:
@@ -111,35 +113,114 @@ def dh_find(rows: jax.Array, dsts: jax.Array,
             *, max_probes: int = 64, impl: str = "auto"):
     """Batched per-row dst-hash lookup: ``(slots[B], found[B] bool)``.
 
-    The paper's §II.2 dst -> slot tables as one fused dispatch; rows < 0 are
-    padding.  Semantics are the core linear probe (``hashtable.lookup``).
+    The paper's §II.2 dst -> slot tables as one fused dispatch through the
+    shared probe kernel (``kernels/probe.py``); rows < 0 are padding.
+    Semantics are the core linear probe (``hashtable.lookup``).
     """
     if _use_ref(impl):
         slots, found = _ref.dh_find_ref(rows, dsts, dh_keys, dh_vals,
                                         max_probes)
         return slots, found
-    rb = min(_dh.DEFAULT_ROWS_PER_BLOCK, dh_keys.shape[0])
+    rb = min(_pr.DEFAULT_ROWS_PER_BLOCK, dh_keys.shape[0])
     keys_p, _ = _pad_rows(dh_keys, rb, -1)
     vals_p, _ = _pad_rows(dh_vals, rb, -1)
-    slots, found = _dh.dh_find_pallas(
+    slots, found = _pr.probe_find_pallas(
         rows, dsts, keys_p, vals_p, max_probes=max_probes,
         rows_per_block=rb, interpret=not _on_tpu())
     return slots, found.astype(bool)
 
 
-@functools.partial(jax.jit, static_argnames=("max_items", "chunks", "impl"))
-def cdf_query(c_ord: jax.Array, d_ord: jax.Array, tot: jax.Array,
-              threshold, *, max_items: int = 16, chunks: int = 1,
-              impl: str = "auto"):
-    """Threshold inference over pre-ordered rows; see cdf_query.py."""
+@functools.partial(jax.jit, static_argnames=("max_probes", "impl"))
+def ht_find(keys_q: jax.Array, tab_keys: jax.Array, tab_vals: jax.Array,
+            *, max_probes: int = 64, impl: str = "auto"):
+    """Batched flat-table lookup: ``(vals[B], found[B] bool)``.
+
+    The src node-id -> row probe at the head of every query (paper §II.1),
+    kernelized: the flat table is the N = 1 case of the shared probe kernel.
+    ``hashtable.lookup_batch`` routes here when an impl is requested.
+    """
+    rows = jnp.zeros_like(keys_q)
     if _use_ref(impl):
-        t = threshold if isinstance(threshold, float) else jnp.asarray(threshold)
-        return _ref.cdf_query_ref(c_ord, d_ord, tot, t, max_items)
+        slots, found = _ref.probe_find_ref(
+            rows, keys_q, tab_keys[None], tab_vals[None], max_probes)
+        return slots, found
+    slots, found = _pr.probe_find_pallas(
+        rows, keys_q, tab_keys[None], tab_vals[None],
+        max_probes=max_probes, rows_per_block=1, interpret=not _on_tpu())
+    return slots, found.astype(bool)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_items", "chunks", "topk", "impl"))
+def cdf_query(c_ord: jax.Array, d_ord: jax.Array, tot: jax.Array,
+              threshold, *, max_items: int = 16, chunks: int = 0,
+              topk: bool = False, impl: str = "auto"):
+    """Threshold inference over pre-ordered rows; see cdf_query.py.
+
+    ``threshold`` is required; passing ``None`` explicitly selects top-k
+    mode (keep every live item — the explicit contract, not an unreachable
+    threshold).  ``chunks=0`` auto-picks the chunked early-exit walk from C
+    and the lane width.
+    """
+    topk = topk or threshold is None
+    chunks = _cdf.auto_chunks(c_ord.shape[1], chunks)
+    if _use_ref(impl):
+        return _ref.cdf_query_ref(c_ord, d_ord, tot,
+                                  None if topk else threshold, max_items)
     qb = min(_cdf.DEFAULT_QUERIES_PER_BLOCK, c_ord.shape[0])
     c_p, b = _pad_rows(c_ord, qb, 0)
     d_p, _ = _pad_rows(d_ord, qb, 0)
     t_p, _ = _pad_rows(tot, qb, 0)
     dk, pk, nn = _cdf.cdf_query_pallas(
-        c_p, d_p, t_p, threshold, max_items=max_items,
-        queries_per_block=qb, chunks=chunks, interpret=not _on_tpu())
+        c_p, d_p, t_p, 0.0 if topk else threshold, max_items=max_items,
+        queries_per_block=qb, chunks=chunks, topk=topk,
+        interpret=not _on_tpu())
     return dk[:b], pk[:b], nn[:b]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_items", "chunks", "topk", "impl"))
+def cdf_query_fused(rows: jax.Array, found: jax.Array,
+                    cnt: jax.Array, dst: jax.Array, order: jax.Array,
+                    tot: jax.Array, threshold, *, max_items: int = 16,
+                    chunks: int = 0, topk: bool = False, impl: str = "auto"):
+    """Fused inference: in-kernel row gather + CDF walk (cdf_gather.py).
+
+    Takes pre-resolved rows[B] (0 where missing) + found[B] and the raw slab
+    arrays; only queried rows are touched (scalar-prefetch DMA on TPU, one
+    combined gather in the ref path).  Bit-identical to ``cdf_query`` over
+    ``_ordered_rows`` output by the integer-walk contract.
+    """
+    topk = topk or threshold is None
+    chunks = _cdf.auto_chunks(cnt.shape[1], chunks)
+    if _use_ref(impl):
+        return _ref.cdf_query_fused_ref(rows, found, cnt, dst, order, tot,
+                                        None if topk else threshold,
+                                        max_items)
+    return _cg.cdf_query_fused_pallas(
+        rows, found, cnt, dst, order, tot, 0.0 if topk else threshold,
+        max_items=max_items, chunks=chunks, topk=topk,
+        interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "max_probes", "impl"))
+def draft_walk(window: jax.Array, ht_keys: jax.Array, ht_vals: jax.Array,
+               cnt: jax.Array, dst: jax.Array, ord0: jax.Array,
+               *, k: int = 4, max_probes: int = 64, impl: str = "auto"):
+    """One-shot k-step greedy draft walk (kernels/walk.py).
+
+    window[B, order] recent tokens; the chain snapshot (src table + slabs +
+    order heads) is immutable during a draft, so the whole k-step scan runs
+    as one dispatch.  Returns ``(toks[B, k], ok[B, k] bool)``.
+    """
+    if _use_ref(impl):
+        toks, oks = _ref.draft_walk_ref(window, ht_keys, ht_vals, cnt, dst,
+                                        ord0, k=k, max_probes=max_probes)
+        return toks, oks.astype(bool)
+    qb = min(_wk.DEFAULT_QUERIES_PER_BLOCK, window.shape[0])
+    win_p, b = _pad_rows(window, qb, 0)
+    toks, oks = _wk.draft_walk_pallas(
+        win_p, ht_keys, ht_vals, cnt, dst, ord0, k=k, max_probes=max_probes,
+        queries_per_block=qb, valid=b, interpret=not _on_tpu())
+    return toks[:b], oks[:b].astype(bool)

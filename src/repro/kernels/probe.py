@@ -1,10 +1,19 @@
-"""Pallas TPU kernel: fused batched per-row dst-hash lookup (paper §II.2).
+"""Pallas TPU kernel: shared open-addressing probe (paper §II.1-2).
 
-The paper's "optional optimization" — a per-row hash table dst -> slot — as a
-first-class batched kernel: each grid instance owns a (ROWS_PER_BLOCK, H)
-tile of the per-row tables in VMEM and resolves the (pre-row-resolved) query
-list against it; items landing outside the tile are predicated off, exactly
-like ``slab_update``.
+One lane-parallel linear-probe kernel serves every hash lookup in the
+system.  The table layout is always ``keys/vals[N, H]`` — a stack of N
+open-addressing tables probed independently:
+
+  * **per-row dst hash** (paper §II.2 "optional optimization"): N = slab
+    rows, H = per-row table size; ``rows[i]`` selects which table item i
+    probes (``ops.dh_find``).
+  * **flat src table** (paper §II.1, the node-id -> row lookup at the head
+    of every query): N = 1, H = the table size; all items probe table 0
+    (``ops.ht_find`` — the kernelized ``hashtable.lookup_batch``).
+
+Each grid instance owns a (ROWS_PER_BLOCK, H) tile of the tables in VMEM and
+resolves the query list against it; items landing outside the tile are
+predicated off, exactly like ``slab_update``.
 
 The linear-probe loop is vectorised across the H lanes instead of iterated:
 for a query key ``d`` with home slot ``h0``, lane ``j`` sits at probe
@@ -16,10 +25,10 @@ give up after ``max_probes`` — become three lane-parallel reductions:
   empty_p = min p over lanes holding EMPTY        (H if none in window)
   found   = key_p < empty_p                       (TOMB lanes just probe on)
 
-One row load + a handful of VPU ops per item; no scalar probe chains.  H is
-the lane dim (power of two by construction, multiple of 128 for real-TPU
-alignment at the capacities the configs use; smaller tables run in interpret
-mode off-TPU).
+One table load + a handful of VPU ops per item; no scalar probe chains.  H
+is the lane dim (power of two by construction, multiple of 128 for real-TPU
+alignment at the sizes the configs use; smaller tables run in interpret mode
+off-TPU).
 """
 
 from __future__ import annotations
@@ -35,9 +44,9 @@ from repro.core.hashtable import EMPTY, hash_u32
 DEFAULT_ROWS_PER_BLOCK = 256
 
 
-def _dh_find_kernel(rows_ref, dsts_ref, keys_ref, vals_ref,
-                    slot_out_ref, found_out_ref,
-                    *, rows_per_block: int, max_probes: int):
+def _probe_kernel(rows_ref, keys_q_ref, tab_keys_ref, tab_vals_ref,
+                  slot_out_ref, found_out_ref,
+                  *, rows_per_block: int, max_probes: int):
     @pl.when(pl.program_id(0) == 0)
     def _init():
         slot_out_ref[...] = jnp.full_like(slot_out_ref[...], EMPTY)
@@ -45,7 +54,7 @@ def _dh_find_kernel(rows_ref, dsts_ref, keys_ref, vals_ref,
 
     r0 = pl.program_id(0) * rows_per_block
     batch = rows_ref.shape[0]
-    h = keys_ref.shape[1]
+    h = tab_keys_ref.shape[1]
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, h), 1)
     big = jnp.int32(h)
 
@@ -53,9 +62,9 @@ def _dh_find_kernel(rows_ref, dsts_ref, keys_ref, vals_ref,
         r = rows_ref[i] - r0
         in_block = (r >= 0) & (r < rows_per_block)
         rr = jnp.clip(r, 0, rows_per_block - 1)
-        row_keys = keys_ref[pl.dslice(rr, 1), :]      # (1, H)
-        row_vals = vals_ref[pl.dslice(rr, 1), :]
-        d = dsts_ref[i]
+        row_keys = tab_keys_ref[pl.dslice(rr, 1), :]      # (1, H)
+        row_vals = tab_vals_ref[pl.dslice(rr, 1), :]
+        d = keys_q_ref[i]
         h0 = (hash_u32(d) & jnp.uint32(h - 1)).astype(jnp.int32)
         p = (lane - h0) & (h - 1)                     # probe position per lane
         in_win = p < max_probes
@@ -78,22 +87,23 @@ def _dh_find_kernel(rows_ref, dsts_ref, keys_ref, vals_ref,
 
 @functools.partial(
     jax.jit, static_argnames=("max_probes", "rows_per_block", "interpret"))
-def dh_find_pallas(rows: jax.Array, dsts: jax.Array,
-                   keys: jax.Array, vals: jax.Array,
-                   *, max_probes: int = 64,
-                   rows_per_block: int = DEFAULT_ROWS_PER_BLOCK,
-                   interpret: bool = True):
-    """Batched dst-hash probe. rows[B] (< 0 = padding), dsts[B];
-    keys/vals[N, H] per-row open-addressing tables.  Returns
-    ``(slots[B], found[B] int32)`` with slot EMPTY where not found."""
-    n, h = keys.shape
+def probe_find_pallas(rows: jax.Array, keys_q: jax.Array,
+                      tab_keys: jax.Array, tab_vals: jax.Array,
+                      *, max_probes: int = 64,
+                      rows_per_block: int = DEFAULT_ROWS_PER_BLOCK,
+                      interpret: bool = True):
+    """Batched open-addressing probe. rows[B] select a table out of
+    ``tab_keys/tab_vals[N, H]`` (rows < 0 = padding); keys_q[B] are the
+    probed keys.  Returns ``(slots[B], found[B] int32)`` with slot EMPTY
+    where not found."""
+    n, h = tab_keys.shape
     rb = min(rows_per_block, n)
     assert n % rb == 0, (n, rb)
     grid = (n // rb,)
     full = pl.BlockSpec(rows.shape, lambda i: (0,))
     tile = pl.BlockSpec((rb, h), lambda i: (i, 0))
     slots, found = pl.pallas_call(
-        functools.partial(_dh_find_kernel, rows_per_block=rb,
+        functools.partial(_probe_kernel, rows_per_block=rb,
                           max_probes=max_probes),
         grid=grid,
         in_specs=[full, full, tile, tile],
@@ -103,5 +113,5 @@ def dh_find_pallas(rows: jax.Array, dsts: jax.Array,
             jax.ShapeDtypeStruct(rows.shape, jnp.int32),
         ],
         interpret=interpret,
-    )(rows, dsts, keys, vals)
+    )(rows, keys_q, tab_keys, tab_vals)
     return slots, found

@@ -66,39 +66,148 @@ def slab_update_ref(rows: jax.Array, dsts: jax.Array, w: jax.Array,
     return dst, cnt, tot, found
 
 
-def dh_find_ref(rows: jax.Array, dsts: jax.Array,
-                keys: jax.Array, vals: jax.Array, max_probes: int):
-    """Batched per-row dst-hash lookup (paper §II.2 optional optimisation).
+def probe_find_ref(rows: jax.Array, keys_q: jax.Array,
+                   keys: jax.Array, vals: jax.Array, max_probes: int):
+    """Batched open-addressing probe (the shared lookup oracle).
 
-    rows[B] select a per-row table out of keys/vals[N, H]; each item runs the
-    core linear probe (:func:`repro.core.hashtable.lookup`).  rows < 0 marks
-    padding.  Returns ``(slots[B], found[B])`` with slot EMPTY when missing.
+    rows[B] select a table out of keys/vals[N, H]; rows < 0 marks padding.
+    Covers both the per-row dst hash (paper §II.2, N = slab rows) and the
+    flat src table (paper §II.1, N = 1).  Returns ``(slots[B], found[B])``
+    with slot EMPTY when missing.
+
+    Semantics are the core scalar probe (:func:`repro.core.hashtable.lookup`
+    — scan from the home slot, stop at the key or the first EMPTY, give up
+    after ``max_probes``) but vectorised the same way the Pallas kernel is:
+    one (B, max_probes) window gather + min-reductions over probe positions,
+    instead of a vmapped fori_loop (which XLA:CPU lowers to per-item scalar
+    chains — the old O(B) probe loop this PR's read path removes).  First-
+    occurrence equivalence holds even when the window wraps a small table:
+    a slot's first visit time IS its probe position mod H.
     """
+    h = keys.shape[1]
     safe_rows = jnp.maximum(rows, 0)
-
-    def one(r, d):
-        return ht.lookup(ht.HashTable(keys[r], vals[r]), d, max_probes)
-
-    slots, found = jax.vmap(one)(safe_rows, dsts)
-    found = found & (rows >= 0)
+    h0 = (ht.hash_u32(keys_q) & jnp.uint32(h - 1)).astype(jnp.int32)
+    p = jnp.arange(max_probes, dtype=jnp.int32)[None, :]       # (1, P)
+    idx = (h0[:, None] + p) & (h - 1)                          # (B, P)
+    win = keys[safe_rows[:, None], idx]                        # (B, P)
+    big = jnp.int32(max_probes)
+    key_p = jnp.min(jnp.where(win == keys_q[:, None], p, big), axis=1)
+    empty_p = jnp.min(jnp.where(win == EMPTY, p, big), axis=1)
+    found = (key_p < empty_p) & (rows >= 0)
+    slot_idx = (h0 + jnp.minimum(key_p, big - 1)) & (h - 1)
+    slots = vals[safe_rows, slot_idx]
     return jnp.where(found, slots, EMPTY), found
 
 
+# the dst-hash entry point is the same probe; kept under its §II.2 name
+dh_find_ref = probe_find_ref
+
+
+def _needed_walk(c_ord: jax.Array, totf: jax.Array, threshold):
+    """The A9 integer walk shared by every CDF oracle: which priority
+    positions a reader needs, and how many (CDF^-1).  ``threshold=None`` is
+    top-k mode (every live item)."""
+    if threshold is None:
+        needed = c_ord > 0
+    else:
+        cum = jnp.cumsum(c_ord, axis=1)
+        before = (cum - c_ord).astype(jnp.float32)
+        needed = (before < threshold * totf[:, None]) & (c_ord > 0)
+    return needed, jnp.sum(needed.astype(jnp.int32), axis=1)
+
+
+def _pad_items(dk: jax.Array, pk: jax.Array, max_items: int):
+    """Pad the emission window out to ``max_items`` when it exceeds C, so
+    the ref path returns the same (B, max_items) shape the kernels allocate
+    (entries past C are always EMPTY/0 — a row has at most C items)."""
+    pad = max_items - dk.shape[1]
+    if pad > 0:
+        dk = jnp.pad(dk, ((0, 0), (0, pad)), constant_values=EMPTY)
+        pk = jnp.pad(pk, ((0, 0), (0, pad)))
+    return dk, pk
+
+
 def cdf_query_ref(c_ord: jax.Array, d_ord: jax.Array, tot: jax.Array,
-                  threshold: float, max_items: int):
+                  threshold, max_items: int):
     """Cumulative-probability threshold query (paper §II.B).
 
     c_ord/d_ord[B, C]: counts/dsts gathered in descending-priority order
     (zeros for missing rows). Returns (dsts[B,k], probs[B,k], n_needed[B]).
+
+    ``threshold=None`` is top-k mode: keep every live item (no threshold
+    test).  The cumulative walk runs in exact integer count space —
+    ``needed[j] = (sum(cnt[<j]) < t * tot) & (cnt[j] > 0)`` — so the result
+    is independent of how a kernel chunks the walk (int prefix sums are
+    association-free; float ones are not).  The only float ops, ``t * tot``
+    and ``p = cnt / tot``, are per-row/per-item.
     """
     totf = jnp.maximum(tot, 1).astype(jnp.float32)
-    p = c_ord.astype(jnp.float32) / totf[:, None]
-    cum = jnp.cumsum(p, axis=1)
-    before = cum - p
-    needed = (before < threshold) & (c_ord > 0)
-    n_needed = jnp.sum(needed.astype(jnp.int32), axis=1)
-    k = max_items
+    needed, n_needed = _needed_walk(c_ord, totf, threshold)
+    k = min(max_items, c_ord.shape[1])
     keep = needed[:, :k]
+    pk_raw = c_ord[:, :k].astype(jnp.float32) / totf[:, None]
     dk = jnp.where(keep, d_ord[:, :k], EMPTY)
-    pk = jnp.where(keep, p[:, :k], 0.0)
+    pk = jnp.where(keep, pk_raw, 0.0)
+    dk, pk = _pad_items(dk, pk, max_items)
     return dk, pk, n_needed
+
+
+def cdf_query_fused_ref(rows: jax.Array, found: jax.Array,
+                        cnt: jax.Array, dst: jax.Array, order: jax.Array,
+                        tot: jax.Array, threshold, max_items: int):
+    """Fused row-gather + CDF walk (oracle of ``cdf_gather.py``).
+
+    rows[B] are pre-resolved row indices (0 where missing), found[B] the
+    src-lookup mask; cnt/dst/order[N, C], tot[N] are the raw slab arrays.
+    One combined linear-index gather pulls counts straight into priority
+    order (no intermediate ``cnt[rows]`` materialisation), and — because the
+    gather is fused into the query — dsts/probs are only gathered for the
+    ``max_items`` emission window instead of all C (``n_needed`` still walks
+    every count).  Bit-identical to ``_ordered_rows`` + ``cdf_query_ref``:
+    same integer walk, same per-item float ops.
+    """
+    r = jnp.maximum(rows, 0)
+    cap = cnt.shape[1]
+    flat = r[:, None] * cap + order[r]                 # [B, C] linear slots
+    c_ord = jnp.where(found[:, None], cnt.reshape(-1)[flat], 0)
+    totf = jnp.maximum(tot[r], 1).astype(jnp.float32)
+    needed, n_needed = _needed_walk(c_ord, totf, threshold)
+    k = min(max_items, cap)
+    keep = needed[:, :k]
+    d_k = dst.reshape(-1)[flat[:, :k]]                 # emission window only
+    p_k = c_ord[:, :k].astype(jnp.float32) / totf[:, None]
+    dk = jnp.where(keep, d_k, EMPTY)
+    pk = jnp.where(keep, p_k, 0.0)
+    dk, pk = _pad_items(dk, pk, max_items)
+    return dk, pk, n_needed
+
+
+def draft_walk_ref(window: jax.Array, ht_keys: jax.Array, ht_vals: jax.Array,
+                   cnt: jax.Array, dst: jax.Array, ord0: jax.Array,
+                   *, k: int, max_probes: int):
+    """k-step greedy draft walk (oracle of ``kernels/walk.py``).
+
+    A lax.scan of (rolling ctx hash -> src probe -> top-1 gather) with a
+    dead-lane stop: once a step finds no transition the lane emits token 0 /
+    ok False for every later step and does no further lookups' worth of
+    state changes.  window[B, order] int32; returns (toks[B, k], ok[B, k]).
+    """
+    n = cnt.shape[0]
+
+    def step(carry, _):
+        win, alive = carry
+        src = ht.ctx_window_hash(win)
+        rows, found = probe_find_ref(jnp.zeros_like(src), src,
+                                     ht_keys[None], ht_vals[None], max_probes)
+        rowm = jnp.clip(jnp.where(found, rows, 0), 0, n - 1)
+        slot0 = ord0[rowm]
+        cnt0 = cnt[rowm, slot0]
+        dst0 = dst[rowm, slot0]
+        ok = alive & found & (cnt0 > 0) & (dst0 != EMPTY)
+        nxt = jnp.where(ok, dst0, 0)
+        win = jnp.concatenate([win[:, 1:], nxt[:, None]], axis=1)
+        return (win, ok), (nxt, ok)
+
+    alive0 = jnp.ones((window.shape[0],), bool)
+    _, (toks, oks) = jax.lax.scan(step, (window, alive0), None, length=k)
+    return toks.T, oks.T.astype(jnp.int32)

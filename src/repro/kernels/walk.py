@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: one-shot k-step greedy draft walk (speculative.draft).
+
+Drafting k tokens from the n-gram chain is k sequential iterations of
+(rolling ctx hash -> src-table probe -> top-1 slab gather).  As a
+``lax.scan`` over ``query_topk`` that is k separate kernel dispatches plus k
+host round trips through lookup+gather+cdf_query — but the chain snapshot is
+immutable for the duration of a draft (RCU/EpochStore contract), so the
+whole walk collapses into ONE kernel: the src hash table and the slabs sit
+in VMEM once, and each step is a handful of VPU ops.
+
+Per step, vectorised across the query block:
+
+  * rolling hash of the ctx window — same recurrence as
+    ``speculative.context_ids`` (newest token first);
+  * src probe — the same lane-parallel linear-probe reductions as
+    ``kernels/probe.py`` (key_p/empty_p min over probe positions);
+  * top-1 gather — the order head ``order[row, 0]`` IS the approximate
+    argmax (paper §II.2), so top-1 needs no CDF walk: one cnt/dst gather.
+
+Dead lanes stop walking: ``alive`` (scratch) clears when a step finds no
+transition, later steps emit token 0 / ok False for that lane, and the whole
+step body is predicated off with ``@pl.when`` once every lane in the block
+is dead — no hashing or probing on dead work.  The window and alive mask
+live in scratch because values cannot thread through ``@pl.when`` bodies.
+
+The top-1 gathers use in-kernel advanced indexing on the VMEM-resident
+slabs; a real-TPU lowering would replace them with per-query ``pl.dslice``
+loads (semantics identical — see ``ref.draft_walk_ref``, the lax.scan
+oracle this kernel must match token-for-token).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.hashtable import EMPTY, ctx_window_hash, hash_u32
+
+DEFAULT_QUERIES_PER_BLOCK = 128
+
+
+def _walk_kernel(win_ref, hk_ref, hv_ref, cnt_ref, dst_ref, ord0_ref,
+                 tok_out_ref, ok_out_ref, win_scr, alive_scr,
+                 *, steps: int, max_probes: int, valid: int):
+    t_size = hk_ref.shape[0]
+    n = cnt_ref.shape[0]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, t_size), 1)
+    big = jnp.int32(t_size)
+    tok_out_ref[...] = jnp.zeros_like(tok_out_ref[...])
+    ok_out_ref[...] = jnp.zeros_like(ok_out_ref[...])
+    win_scr[...] = win_ref[...]
+    # batch-padding lanes (>= valid) start dead: no probe work, and they
+    # cannot hold a block open after every real lane has died
+    row0 = pl.program_id(0) * win_ref.shape[0]
+    qidx = row0 + jax.lax.broadcasted_iota(jnp.int32, alive_scr.shape, 0)
+    alive_scr[...] = (qidx < valid).astype(jnp.int32)
+
+    for s in range(steps):
+
+        def step(s=s):
+            win = win_scr[...]
+            alive = alive_scr[:, 0] > 0
+            # rolling ctx hash, newest token first (context_ids recurrence)
+            src = ctx_window_hash(win)
+            # lane-parallel src probe (kernels/probe.py semantics)
+            h0 = (hash_u32(src) & jnp.uint32(t_size - 1)).astype(jnp.int32)
+            p = (lane - h0[:, None]) & (t_size - 1)          # (Q, T)
+            keys = hk_ref[...][None, :]
+            in_win = p < max_probes
+            is_key = in_win & (keys == src[:, None])
+            is_empty = in_win & (keys == EMPTY)
+            key_p = jnp.min(jnp.where(is_key, p, big), axis=1)
+            empty_p = jnp.min(jnp.where(is_empty, p, big), axis=1)
+            found = key_p < empty_p
+            row = jnp.sum(jnp.where(is_key & (p == key_p[:, None]),
+                                    hv_ref[...][None, :], 0), axis=1)
+            rowm = jnp.clip(jnp.where(found, row, 0), 0, n - 1)
+            # top-1 gather: the order head is the approximate argmax
+            slot0 = ord0_ref[...][rowm]                      # (Q,)
+            cnt0 = cnt_ref[...][rowm, slot0]
+            dst0 = dst_ref[...][rowm, slot0]
+            ok = alive & found & (cnt0 > 0) & (dst0 != EMPTY)
+            nxt = jnp.where(ok, dst0, 0)
+            tok_out_ref[:, s] = nxt
+            ok_out_ref[:, s] = ok.astype(jnp.int32)
+            alive_scr[:, 0] = ok.astype(jnp.int32)
+            win_scr[...] = jnp.concatenate([win[:, 1:], nxt[:, None]], axis=1)
+
+        if s == 0:
+            step()
+        else:  # all lanes dead -> the whole step is predicated off
+            pl.when(jnp.sum(alive_scr[...]) > 0)(step)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "max_probes", "queries_per_block", "valid",
+                     "interpret"))
+def draft_walk_pallas(window: jax.Array, ht_keys: jax.Array,
+                      ht_vals: jax.Array, cnt: jax.Array, dst: jax.Array,
+                      ord0: jax.Array, *, k: int = 4, max_probes: int = 64,
+                      queries_per_block: int = DEFAULT_QUERIES_PER_BLOCK,
+                      valid: int = 0, interpret: bool = True):
+    """window: [B, order] recent tokens per sequence; ht_keys/ht_vals: [T]
+    flat src table; cnt/dst: [N, C] slabs; ord0: [N] order head per row
+    (``slabs.order[:, 0]``).  ``valid`` marks the real (pre-padding) batch
+    size; lanes past it never walk (0 = all lanes real).  Returns
+    ``(toks[B, k], ok[B, k] int32)``.
+    """
+    b, _ = window.shape
+    qb = min(queries_per_block, b)
+    assert b % qb == 0, (b, qb)
+    grid = (b // qb,)
+    valid = valid or b
+    win_spec = pl.BlockSpec((qb, window.shape[1]), lambda i: (i, 0))
+    full1 = lambda arr: pl.BlockSpec(arr.shape, lambda i: (0,))
+    full2 = lambda arr: pl.BlockSpec(arr.shape, lambda i: (0, 0))
+    out_spec = pl.BlockSpec((qb, k), lambda i: (i, 0))
+    toks, oks = pl.pallas_call(
+        functools.partial(_walk_kernel, steps=k, max_probes=max_probes,
+                          valid=valid),
+        grid=grid,
+        in_specs=[win_spec, full1(ht_keys), full1(ht_vals),
+                  full2(cnt), full2(dst), full1(ord0)],
+        out_specs=[out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((qb, window.shape[1]), jnp.int32),
+                        pltpu.VMEM((qb, 1), jnp.int32)],
+        interpret=interpret,
+    )(window, ht_keys, ht_vals, cnt, dst, ord0)
+    return toks, oks

@@ -5,7 +5,8 @@ The paper's structure is a first-class serving feature here (DESIGN.md
   * an **online n-gram drafter** (core/speculative.py) continuously learns
     token transitions from the engine's own emitted tokens — an online sparse
     Markov chain exactly as §II of the paper describes — and proposes draft
-    chains;
+    chains; a draft is ONE fused walk-kernel dispatch against the snapshot
+    (``ops.draft_walk``), not k round trips of lookup + gather + cdf_query;
   * the **target model** verifies a K-token draft in ONE ``extend_step``
     forward (vs K sequential decodes); rejection rollback is free because
     cache pytrees are immutable — the engine just keeps the pre-extend
@@ -75,8 +76,8 @@ class Engine:
         # model_calls counts decode+extend forwards (the latency metric);
         # plain greedy needs exactly max_new_tokens-1 of them
         self.stats = {"model_calls": 0, "accepted": 0, "drafted": 0,
-                      "rounds": 0, "decay_steps": 0, "dh_rebuilds": 0,
-                      "dh_tombstones": 0}
+                      "rounds": 0, "draft_calls": 0, "decay_steps": 0,
+                      "dh_rebuilds": 0, "dh_tombstones": 0}
 
     # ------------------------------------------------------------------
     def generate(self, batch: Dict[str, jax.Array], rng: jax.Array
@@ -160,6 +161,7 @@ class Engine:
         try:
             ctx = jnp.asarray(history[:, -max(self.cfg.ngram.order, 2):])
             draft, ok = self._draft(snap.state, ctx)
+            self.stats["draft_calls"] += 1    # one fused dispatch per round
         finally:
             self.drafter_store.release(snap)
         draft = np.asarray(draft)[:, : k - 1] if k > 1 else \

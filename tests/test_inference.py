@@ -1,0 +1,169 @@
+"""End-to-end inference-path equivalence (DESIGN.md §8).
+
+The acceptance matrix of the fused read side: fused/unfused gather x
+impl x chunks must be bit-identical on both queries for both
+``use_dst_hash`` settings, and the one-shot draft-walk kernel must match
+the k-dispatch scan oracle token-for-token.  (The hypothesis-driven
+version of these properties lives in test_properties.py; this file keeps
+deterministic coverage that runs without hypothesis installed.)
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import mcprioq as mc
+from repro.core import speculative as spec
+
+
+def _learned_state(cfg, seed=0, rounds=6, srcs=24, dsts=16, batch=96):
+    state = mc.init(cfg)
+    rng = np.random.default_rng(seed)
+    for _ in range(rounds):
+        s = jnp.asarray(rng.integers(0, srcs, batch).astype(np.int32))
+        d = jnp.asarray((rng.zipf(1.6, batch) % dsts).astype(np.int32))
+        state = mc.update_batch(state, s, d, cfg=cfg)
+    return state
+
+
+@pytest.mark.parametrize("use_dst_hash", [False, True])
+def test_fused_unfused_impl_chunks_bit_identical(use_dst_hash):
+    """The full acceptance matrix on threshold + top-k queries."""
+    base = mc.MCConfig(num_rows=64, capacity=16, sort_passes=2,
+                       use_dst_hash=use_dst_hash)
+    state = _learned_state(base)
+    srcs = jnp.asarray(np.r_[np.arange(24), [999]].astype(np.int32))
+    ref_out = ref_top = None
+    for fused in (False, True):
+        for impl in ("ref", "pallas"):
+            for chunks in (1, 2, 4):
+                cfg = dataclasses.replace(base, fused_query=fused, impl=impl,
+                                          query_chunks=chunks)
+                out = mc.query_threshold(state, srcs, 0.9, cfg=cfg,
+                                         max_items=8)
+                top = mc.query_topk(state, srcs, cfg=cfg, k=8)
+                if ref_out is None:
+                    ref_out, ref_top = out, top
+                    continue
+                tag = f"fused={fused},impl={impl},chunks={chunks}"
+                for a, b in zip(ref_out, out):
+                    assert np.asarray(a).tobytes() == np.asarray(b).tobytes(), tag
+                for a, b in zip(ref_top, top):
+                    assert np.asarray(a).tobytes() == np.asarray(b).tobytes(), tag
+
+
+def test_fused_matches_inline_unfused_computation():
+    """The fused path reproduces _ordered_rows + cdf_query exactly (the
+    acceptance criterion, spelled out against the baseline pipeline)."""
+    from repro.kernels import ops
+
+    cfg = mc.MCConfig(num_rows=64, capacity=16, sort_passes=4)
+    state = _learned_state(cfg, seed=3)
+    srcs = jnp.arange(32, dtype=jnp.int32)
+    c, d, tot, _ = mc._ordered_rows(state, srcs, cfg)
+    want = ops.cdf_query(c, d, tot, 0.9, max_items=8, impl=cfg.impl)
+    got = mc.query_threshold(state, srcs, 0.9, cfg=cfg, max_items=8)
+    for a, b in zip(want, got):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+def test_topk_has_no_sentinel_threshold():
+    """threshold=None is the top-k contract: identical to keeping every
+    live item, with no dependence on any unreachable float."""
+    from repro.kernels import ops
+
+    cfg = mc.MCConfig(num_rows=32, capacity=8, sort_passes=8)
+    state = _learned_state(cfg, seed=5, srcs=12, dsts=6)
+    srcs = jnp.arange(12, dtype=jnp.int32)
+    dk, pk = mc.query_topk(state, srcs, cfg=cfg, k=8)
+    c, d, tot, _ = mc._ordered_rows(state, srcs, cfg)
+    want_d, want_p, want_n = ops.cdf_query(c, d, tot, None, max_items=8,
+                                           impl=cfg.impl)
+    assert np.asarray(dk).tobytes() == np.asarray(want_d).tobytes()
+    assert np.asarray(pk).tobytes() == np.asarray(want_p).tobytes()
+    # n reports every live item (nothing thresholded away)
+    np.testing.assert_array_equal(np.asarray(want_n),
+                                  np.asarray((c > 0).sum(axis=1)))
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+@pytest.mark.parametrize("k", [1, 4])
+def test_draft_walk_matches_scan_oracle_end_to_end(impl, k):
+    """spec.draft (one walk dispatch) == spec.draft_reference (k dispatches
+    through query_topk), token-for-token, ok-for-ok."""
+    ncfg = spec.NGramConfig(
+        order=2, mc=mc.MCConfig(num_rows=512, capacity=16, sort_passes=2,
+                                impl=impl))
+    st = spec.init(ncfg)
+    rng = np.random.default_rng(7)
+    succ = rng.integers(0, 64, (64,)).astype(np.int32)
+    toks = np.empty((4, 256), np.int32)
+    toks[:, 0] = rng.integers(0, 64, 4)
+    for i in range(1, 256):
+        follow = succ[toks[:, i - 1]]
+        noise = rng.integers(0, 64, 4)
+        toks[:, i] = np.where(rng.random(4) < 0.85, follow, noise)
+    st = spec.observe(st, jnp.asarray(toks), cfg=ncfg)
+    ctx = jnp.asarray(np.concatenate(
+        [toks[:, 40:42], np.full((2, 2), 31337, np.int32)]).astype(np.int32))
+    got_t, got_o = spec.draft(st, ctx, cfg=ncfg, k=k)
+    want_t, want_o = spec.draft_reference(st, ctx, cfg=ncfg, k=k)
+    np.testing.assert_array_equal(np.asarray(got_t), np.asarray(want_t))
+    np.testing.assert_array_equal(np.asarray(got_o), np.asarray(want_o))
+    # unknown-context lanes are dead from step 0: no tokens, no oks
+    assert not np.asarray(got_o)[-2:].any()
+    assert not np.asarray(got_t)[-2:].any()
+
+
+def test_draft_dead_lane_emits_zeros_after_failure():
+    """Once ok goes False the lane stops: later tokens are 0, oks False
+    (the walk does no work there — the early-stop satellite)."""
+    ncfg = spec.NGramConfig(
+        order=2, mc=mc.MCConfig(num_rows=64, capacity=8, sort_passes=2))
+    st = spec.init(ncfg)
+    # learn exactly one bigram chain 1->2->3, then a dead end
+    seq = jnp.asarray([[1, 2, 3]], jnp.int32)
+    st = spec.observe(st, seq, cfg=ncfg)
+    draft, ok = spec.draft(st, jnp.asarray([[1, 2]], jnp.int32), cfg=ncfg, k=4)
+    draft, ok = np.asarray(draft), np.asarray(ok)
+    assert draft[0, 0] == 3 and ok[0, 0]
+    assert not ok[0, 1:].any() and not draft[0, 1:].any()
+
+
+def test_max_items_beyond_capacity_same_shape_both_impls():
+    """max_items > C must yield (B, max_items) on every backend, padded
+    with EMPTY/0 past C (a row holds at most C items)."""
+    cfg = mc.MCConfig(num_rows=16, capacity=8, sort_passes=8)
+    state = _learned_state(cfg, seed=9, srcs=8, dsts=6, batch=32)
+    srcs = jnp.arange(8, dtype=jnp.int32)
+    outs = {}
+    for fused in (False, True):
+        for impl in ("ref", "pallas"):
+            c2 = dataclasses.replace(cfg, fused_query=fused, impl=impl)
+            d, p, n = mc.query_threshold(state, srcs, 0.9, cfg=c2,
+                                         max_items=16)
+            assert d.shape == (8, 16) and p.shape == (8, 16), (fused, impl)
+            outs[(fused, impl)] = (np.asarray(d), np.asarray(p),
+                                   np.asarray(n))
+    base = outs[(False, "ref")]
+    for key, v in outs.items():
+        for a, b in zip(base, v):
+            assert a.tobytes() == b.tobytes(), key
+    assert (base[0][:, 8:] == -1).all() and (base[1][:, 8:] == 0).all()
+
+
+def test_bad_query_chunks_rejected_on_every_backend():
+    """A chunk count that does not divide C fails identically on ref and
+    pallas (validated once in auto_chunks, not at TPU trace time)."""
+    cfg = mc.MCConfig(num_rows=16, capacity=8, sort_passes=1)
+    state = _learned_state(cfg, seed=9, srcs=8, dsts=6, batch=32)
+    srcs = jnp.arange(8, dtype=jnp.int32)
+    for fused in (False, True):
+        for impl in ("ref", "pallas"):
+            c2 = dataclasses.replace(cfg, fused_query=fused, impl=impl,
+                                     query_chunks=3)
+            with pytest.raises(ValueError, match="query_chunks"):
+                mc.query_threshold(state, srcs, 0.9, cfg=c2, max_items=4)

@@ -222,3 +222,69 @@ def test_update_batch_order_independence_for_existing_edges(seed):
                                   np.asarray(s2.slabs.cnt))
     np.testing.assert_array_equal(np.asarray(s1.slabs.tot),
                                   np.asarray(s2.slabs.tot))
+
+
+# ---------------------------------------------------------------------------
+# inference path (DESIGN.md §8): fused gather, chunked walk, draft walk
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.sampled_from([1, 2, 4]),
+       st.sampled_from(["ref", "pallas"]),
+       st.booleans(),
+       st.sampled_from([0.3, 0.5, 0.9, 0.99]))
+def test_query_fused_unfused_chunks_impl_bit_identical(seed, chunks, impl,
+                                                       fused, t):
+    """Acceptance property: every (chunks, impl, fused) combination produces
+    byte-identical threshold and top-k results — the integer-walk contract
+    makes chunking associativity-free, the fused gather is a pure layout
+    change, and the kernels match the ref oracle exactly."""
+    import dataclasses
+    base = mc.MCConfig(num_rows=32, capacity=8, sort_passes=1)
+    state = mc.init(base)
+    rng = np.random.default_rng(seed)
+    for _ in range(3):
+        src = jnp.asarray(rng.integers(0, 12, 48).astype(np.int32))
+        dst = jnp.asarray((rng.zipf(1.5, 48) % 10).astype(np.int32))
+        state = mc.update_batch(state, src, dst, cfg=base)
+    srcs = jnp.asarray(np.r_[np.arange(12), [4242]].astype(np.int32))
+    want = mc.query_threshold(state, srcs, t, cfg=base, max_items=8)
+    want_top = mc.query_topk(state, srcs, cfg=base, k=8)
+    cfg = dataclasses.replace(base, fused_query=fused, impl=impl,
+                              query_chunks=chunks)
+    got = mc.query_threshold(state, srcs, t, cfg=cfg, max_items=8)
+    got_top = mc.query_topk(state, srcs, cfg=cfg, k=8)
+    for a, b in zip(want, got):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+    for a, b in zip(want_top, got_top):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.integers(min_value=1, max_value=6),
+       st.sampled_from(["ref", "pallas"]))
+def test_draft_walk_kernel_matches_scan_oracle(seed, k, impl):
+    """Acceptance property: the one-shot walk kernel == the k-dispatch scan
+    oracle token-for-token, including dead lanes (unknown contexts)."""
+    import dataclasses
+    from repro.core import speculative as spec
+    ncfg = spec.NGramConfig(
+        order=2, mc=mc.MCConfig(num_rows=128, capacity=8, sort_passes=1,
+                                impl=impl))
+    drafter = spec.init(ncfg)
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, 32, (4, 64)).astype(np.int32))
+    drafter = spec.observe(drafter, toks, cfg=ncfg)
+    ctx = jnp.asarray(np.concatenate(
+        [np.asarray(toks)[:, 30:32],
+         rng.integers(50_000, 60_000, (2, 2)).astype(np.int32)]))
+    got_t, got_o = spec.draft(drafter, ctx, cfg=ncfg, k=k)
+    want_t, want_o = spec.draft_reference(drafter, ctx, cfg=ncfg, k=k)
+    np.testing.assert_array_equal(np.asarray(got_t), np.asarray(want_t))
+    np.testing.assert_array_equal(np.asarray(got_o), np.asarray(want_o))
+    # ok rows are prefixes: a dead lane never revives
+    oks = np.asarray(got_o).astype(bool)
+    assert np.all(oks == (np.cumprod(oks, axis=1) > 0))
