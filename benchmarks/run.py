@@ -416,54 +416,98 @@ def bench_drafter():
 
 
 def bench_sharded_routing():
-    """B7: node-sharded update/query on 8 fake host devices (subprocess)."""
-    import os
+    """B7: shard-count × batch sweep of the kernel-routed all_to_all path.
+
+    One subprocess per shard count (the fake host device count is fixed at
+    first jax init), each sweeping batch sizes: per row the routed-update
+    latency (edges/s), the routed threshold-query latency, the drop counters
+    — the fixed-capacity approximation must be *measurably* zero at the
+    default bucket factor — plus one cross-shard top-n merge timing per
+    shard count (``B7_topn``).  Written to ``BENCH_sharded_routing.json``.
+    """
     import subprocess
-    import sys
     import textwrap
-    shards = 4 if SMOKE else 8
+    shard_counts = (1, 4) if SMOKE else (1, 4, 8)
+    batches = (512, 2048) if SMOKE else (2048, 8192)
     rows = 512 if SMOKE else 2048
-    batch = 1024 if SMOKE else 4096
-    script = textwrap.dedent(f"""
-        import os, time
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={shards}"
-        import jax, jax.numpy as jnp, numpy as np
-        from repro import compat
-        from repro.core import mcprioq as mc, sharded as sh
-        mesh = compat.make_mesh(({shards},), ("shard",))
-        scfg = sh.ShardedConfig(base=mc.MCConfig(num_rows={rows}, capacity=32,
-                                                 sort_passes=1),
-                                num_shards={shards}, bucket_factor=2.0)
-        state = sh.init_sharded(scfg, mesh)
-        upd = sh.make_update_fn(scfg, mesh)
-        rng = np.random.default_rng(0)
-        src = jnp.asarray(rng.integers(0, 8192, {batch}).astype(np.int32))
-        dst = jnp.asarray(rng.integers(0, 512, {batch}).astype(np.int32))
-        w = jnp.ones(({batch},), jnp.int32)
-        state = upd(state, src, dst, w)  # compile
-        t0 = time.perf_counter()
-        for _ in range(5):
-            state = upd(state, src, dst, w)
-        jax.block_until_ready(state.slabs.cnt)
-        us = (time.perf_counter() - t0) / 5 * 1e6
-        print(f"B7_sharded_routing,{{us:.0f}},{batch} edges over {shards} shards "
-              f"(dropped={{int(jnp.sum(state.dropped_probes))}})")
-    """)
+    iters = 3 if SMOKE else 5
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(os.path.dirname(__file__), "..", "src"),
          env.get("PYTHONPATH", "")])
-    out = subprocess.run([sys.executable, "-c", script], env=env,
-                         capture_output=True, text=True, timeout=900)
-    # stdout may carry stray warnings: keep the last well-formed B7_ line
-    lines = [ln for ln in out.stdout.splitlines()
-             if ln.startswith("B7_") and ln.count(",") >= 2]
-    if lines:
-        name, us, derived = lines[-1].split(",", 2)
-        REC.emit("sharded_routing", name, float(us), derived)
-    else:  # keep the grep-able FAILED sentinel in CSV and JSON
-        REC.emit("sharded_routing", "B7_sharded_routing", -1.0,
-                 f"FAILED {out.stderr[-200:]}", failed=True)
+    for shards in shard_counts:
+        script = textwrap.dedent(f"""
+            import json, os, time
+            os.environ["XLA_FLAGS"] = (
+                "--xla_force_host_platform_device_count={shards}")
+            import jax, jax.numpy as jnp, numpy as np
+            from repro import compat
+            from repro.core import mcprioq as mc, sharded as sh
+
+            def timeit(fn, n):
+                jax.block_until_ready(fn())
+                t0 = time.perf_counter()
+                for _ in range(n):
+                    out = fn()
+                jax.block_until_ready(out)
+                return (time.perf_counter() - t0) / n * 1e6
+
+            mesh = compat.make_mesh(({shards},), ("shard",))
+            scfg = sh.ShardedConfig(
+                base=mc.MCConfig(num_rows={rows}, capacity=32, sort_passes=1),
+                num_shards={shards}, bucket_factor=2.0)
+            rng = np.random.default_rng(0)
+            for batch in {batches}:
+                state = sh.init_sharded(scfg, mesh)
+                upd = sh.make_update_fn(scfg, mesh)
+                qry = sh.make_query_fn(scfg, mesh, threshold=0.9,
+                                       max_items=8)
+                src = jnp.asarray(
+                    rng.integers(0, 8192, batch).astype(np.int32))
+                dst = jnp.asarray(
+                    rng.integers(0, 512, batch).astype(np.int32))
+                w = jnp.ones((batch,), jnp.int32)
+                state = upd(state, src, dst, w)   # warm + compile
+                us = timeit(lambda: upd(state, src, dst, w), {iters})
+                q_us = timeit(lambda: qry(state, src), {iters})
+                _, _, _, qdrop = qry(state, src)
+                print("ROW " + json.dumps({{
+                    "name": f"B7_shard_sweep[shards={shards};B={{batch}}]",
+                    "us": us,
+                    "derived": f"{{batch / (us / 1e6):.0f}} edges/s over "
+                               f"{shards} shards (query {{q_us:.0f}} us)",
+                    "shards": {shards}, "batch": batch,
+                    "edges_per_s": round(batch / (us / 1e6)),
+                    "query_us": round(q_us, 1),
+                    "dropped": int(jnp.sum(state.route_dropped))
+                    + int(jnp.sum(qdrop)),
+                }}))
+            topn = sh.make_topn_fn(scfg, mesh, 16)
+            t_us = timeit(lambda: topn(state), {iters})
+            _, _, probs, tdrop = topn(state)
+            desc = bool(np.all(np.diff(np.asarray(probs)) <= 0))
+            print("ROW " + json.dumps({{
+                "name": f"B7_topn[shards={shards}]",
+                "us": t_us,
+                "derived": f"global top-16 merge, descending={{desc}} "
+                           f"(unexposed={{int(tdrop)}})",
+                "shards": {shards}, "n": 16,
+            }}))
+        """)
+        out = subprocess.run([sys.executable, "-c", script], env=env,
+                             capture_output=True, text=True, timeout=900)
+        rows_out = [ln[4:] for ln in out.stdout.splitlines()
+                    if ln.startswith("ROW ")]
+        if not rows_out:  # keep the grep-able FAILED sentinel in CSV + JSON
+            REC.emit("sharded_routing", f"B7_shard_sweep[shards={shards};B=0]",
+                     -1.0, f"FAILED {out.stderr[-200:]}", failed=True,
+                     shards=shards, batch=0, edges_per_s=-1, dropped=-1)
+            continue
+        for ln in rows_out:
+            row = json.loads(ln)
+            us = row.pop("us")
+            REC.emit("sharded_routing", row.pop("name"), us,
+                     row.pop("derived"), **row)
     REC.write("sharded_routing")
 
 
@@ -487,6 +531,10 @@ BENCH_ROW_SCHEMAS = {
         "B6_drafter": ("acceptance",),
         "B6_draft_us": ("us_per_draft", "k", "path"),
     },
+    "sharded_routing": {
+        "B7_shard_sweep": ("shards", "batch", "edges_per_s", "dropped"),
+        "B7_topn": ("shards", "n"),
+    },
 }
 
 
@@ -509,8 +557,8 @@ def validate_bench_files() -> int:
         except (OSError, json.JSONDecodeError) as e:
             problems.append(f"{name}: unreadable ({e})")
             continue
-        if not isinstance(data.get("bench"), str) or \
-                not isinstance(data.get("rows"), list):
+        if not isinstance(data.get("bench"), str) or not isinstance(
+                data.get("rows"), list):
             problems.append(f"{name}: missing 'bench'/'rows' envelope")
             continue
         if not data["rows"]:
@@ -542,6 +590,17 @@ def validate_bench_files() -> int:
     return len(problems)
 
 
+BENCHES = (
+    ("update", bench_update_throughput),
+    ("query_cdf", bench_query_cdf),
+    ("sortedness", bench_sortedness),
+    ("decay", bench_decay),
+    ("hash_vs_scan", bench_hash_vs_scan),
+    ("drafter", bench_drafter),
+    ("sharded_routing", bench_sharded_routing),
+)
+
+
 def main() -> None:
     global SMOKE
     ap = argparse.ArgumentParser(description=__doc__)
@@ -549,18 +608,18 @@ def main() -> None:
                     help="CI-scale sizes; same recorders and JSON schema")
     ap.add_argument("--validate", action="store_true",
                     help="only validate existing BENCH_*.json schemas")
+    ap.add_argument("--only", default="",
+                    help="comma-separated bench-name substrings to run "
+                         "(e.g. --only sharded_routing); default all")
     args = ap.parse_args()
     if args.validate:
         sys.exit(1 if validate_bench_files() else 0)
     SMOKE = args.smoke
+    picks = [s.strip() for s in args.only.split(",") if s.strip()]
     print("name,us_per_call,derived")
-    bench_update_throughput()
-    bench_query_cdf()
-    bench_sortedness()
-    bench_decay()
-    bench_hash_vs_scan()
-    bench_drafter()
-    bench_sharded_routing()
+    for name, fn in BENCHES:
+        if not picks or any(p in name for p in picks):
+            fn()
 
 
 if __name__ == "__main__":

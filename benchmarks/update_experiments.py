@@ -7,7 +7,6 @@ from __future__ import annotations
 
 import contextlib
 import io
-import os
 import re
 
 from benchmarks import roofline_table as rt

@@ -8,7 +8,6 @@ API surface.
 """
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import mcprioq as mc
 from repro.data.synthetic import MarkovGraphSampler

@@ -139,6 +139,7 @@ class MCState(NamedTuple):
     dropped_probes: jax.Array  # items dropped on probe-window overflow
     evictions: jax.Array       # Space-Saving tail replacements
     deferred_new: jax.Array    # new edges past the max_new_per_batch prefix
+    route_dropped: jax.Array   # items dropped on all_to_all bucket overflow
     # maintenance state + observability (DESIGN.md §6)
     decay_cursor: jax.Array    # next row block for rolling decay
     decay_steps: jax.Array     # decay calls applied (blocks, not full sweeps)
@@ -159,6 +160,7 @@ def init(cfg: MCConfig) -> MCState:
         dropped_probes=jnp.int32(0),
         evictions=jnp.int32(0),
         deferred_new=jnp.int32(0),
+        route_dropped=jnp.int32(0),
         decay_cursor=jnp.int32(0),
         decay_steps=jnp.int32(0),
         dh_rebuilds=jnp.int32(0),
@@ -301,8 +303,8 @@ def _take_new_prefix(src, dst, w, pos, new_mask, limit: int):
     key_s, _, p_src, p_dst, p_w = jax.lax.sort(
         (key, pos, src, dst, w), num_keys=2, is_stable=True)
     p_mask = key_s[:limit] == 0
-    overflow = jnp.sum(new_mask.astype(jnp.int32)) - \
-        jnp.sum(p_mask.astype(jnp.int32))
+    overflow = (jnp.sum(new_mask.astype(jnp.int32))
+                - jnp.sum(p_mask.astype(jnp.int32)))
     return p_src[:limit], p_dst[:limit], p_w[:limit], p_mask, overflow
 
 
@@ -360,8 +362,7 @@ def _slow_path(state: MCState, src, dst, w, active, cfg: MCConfig) -> MCState:
     return state
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def update_batch(
+def update_batch_impl(
     state: MCState,
     src: jax.Array,
     dst: jax.Array,
@@ -370,12 +371,13 @@ def update_batch(
     *,
     cfg: MCConfig,
 ) -> MCState:
-    """Apply a batch of transitions ``src[i] -> dst[i]`` (paper §II.A).
+    """Traced body of :func:`update_batch` — the full kernel-routed pipeline
+    with no jit boundary of its own.
 
-    Pipeline: pre-aggregate duplicates, fused fast-path increment
-    (``ops.slab_update``), bounded sequential slow path for new edges
-    (skipped via ``lax.cond`` when the batch has none), then
-    ``cfg.sort_passes`` odd-even passes (``ops.oddeven_sort``).
+    Call this (not ``update_batch``) from inside another traced context such
+    as the shard_map bodies in ``core/sharded.py``: the kernel dispatches
+    (``ops.slab_update`` / ``ops.ht_find`` / ``ops.oddeven_sort``) then inline
+    directly into the caller's program instead of nesting a jit call.
     """
     b = src.shape[0]
     w = jnp.ones((b,), jnp.int32) if weights is None else weights.astype(jnp.int32)
@@ -433,6 +435,27 @@ def update_batch(
         state = state._replace(
             slabs=Slabs(slabs.dst, slabs.cnt, slabs.tot, order))
     return state
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def update_batch(
+    state: MCState,
+    src: jax.Array,
+    dst: jax.Array,
+    weights: Optional[jax.Array] = None,
+    mask: Optional[jax.Array] = None,
+    *,
+    cfg: MCConfig,
+) -> MCState:
+    """Apply a batch of transitions ``src[i] -> dst[i]`` (paper §II.A).
+
+    Pipeline: pre-aggregate duplicates, fused fast-path increment
+    (``ops.slab_update``), bounded sequential slow path for new edges
+    (skipped via ``lax.cond`` when the batch has none), then
+    ``cfg.sort_passes`` odd-even passes (``ops.oddeven_sort``).
+    jit wrapper over :func:`update_batch_impl`.
+    """
+    return update_batch_impl(state, src, dst, weights, mask, cfg=cfg)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -500,11 +523,13 @@ def _ordered_rows(state: MCState, src: jax.Array, cfg: MCConfig):
     return c, d, state.slabs.tot[rows], found
 
 
-def _query(state: MCState, src: jax.Array, threshold, cfg: MCConfig,
-           max_items: int):
-    """Shared inference dispatch: fused in-kernel row gather by default,
-    the unfused ``_ordered_rows`` + ``cdf_query`` pipeline otherwise.
-    ``threshold=None`` is top-k mode (every live item)."""
+def query_impl(state: MCState, src: jax.Array, threshold, cfg: MCConfig,
+               max_items: int):
+    """Shared inference dispatch: fused in-kernel row gather by default
+    (``ops.ht_find`` probe + ``ops.cdf_query_fused``), the unfused
+    ``_ordered_rows`` + ``cdf_query`` pipeline otherwise.  ``threshold=None``
+    is top-k mode (every live item).  Un-jitted traced body — the shard_map
+    bodies in ``core/sharded.py`` call it directly."""
     if cfg.fused_query:
         rows, found = lookup_rows(state, src, cfg)
         return ops.cdf_query_fused(
@@ -533,7 +558,7 @@ def query_threshold(
     Runs through the kernel layer (``ops.cdf_query_fused`` /
     ``ops.cdf_query`` per ``cfg.fused_query``; DESIGN.md §8).
     """
-    return _query(state, src, threshold, cfg, max_items)
+    return query_impl(state, src, threshold, cfg, max_items)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "k"))
@@ -543,7 +568,7 @@ def query_topk(state: MCState, src: jax.Array, *, cfg: MCConfig, k: int = 8):
     Top-k is the kernel's explicit ``threshold=None`` mode (keep every live
     item), sharing the fused CDF walk.
     """
-    dk, pk, _ = _query(state, src, None, cfg, k)
+    dk, pk, _ = query_impl(state, src, None, cfg, k)
     return dk, pk
 
 
@@ -591,19 +616,9 @@ def _dh_repair_rows(state: MCState, row0: jax.Array, block_rows: int,
                         rebuild, lambda s: s, state)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def decay(state: MCState, *, cfg: MCConfig) -> MCState:
-    """§II.C decay through the kernel layer (``ops.decay_sort``).
-
-    Stop-the-world (``decay_block_rows == 0``): halve every counter, evict
-    dead edges and compact in one fused dispatch.  Rolling mode
-    (``decay_block_rows == R``): halve only the cursor's R-row block and
-    advance the cursor, so a serving system amortises maintenance across
-    steps — per-call cost scales with R, not ``num_rows``, and readers see
-    the paper's approximately-correct mid-maintenance state (some rows
-    decayed, some not) instead of a stop-the-world stall.  The dst hash is
-    repaired incrementally for the touched block only (``_dh_repair_rows``).
-    """
+def decay_impl(state: MCState, *, cfg: MCConfig) -> MCState:
+    """Traced body of :func:`decay` (no jit boundary — shard bodies call it
+    directly, so every shard keeps its own rolling ``decay_cursor``)."""
     n, c = cfg.num_rows, cfg.capacity
     r = cfg.resolved_decay_rows()
     slabs = state.slabs
@@ -636,15 +651,39 @@ def decay(state: MCState, *, cfg: MCConfig) -> MCState:
     return _dh_repair_rows(state, row0, r, cfg)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def decay(state: MCState, *, cfg: MCConfig) -> MCState:
+    """§II.C decay through the kernel layer (``ops.decay_sort``).
+
+    Stop-the-world (``decay_block_rows == 0``): halve every counter, evict
+    dead edges and compact in one fused dispatch.  Rolling mode
+    (``decay_block_rows == R``): halve only the cursor's R-row block and
+    advance the cursor, so a serving system amortises maintenance across
+    steps — per-call cost scales with R, not ``num_rows``, and readers see
+    the paper's approximately-correct mid-maintenance state (some rows
+    decayed, some not) instead of a stop-the-world stall.  The dst hash is
+    repaired incrementally for the touched block only (``_dh_repair_rows``).
+    jit wrapper over :func:`decay_impl`.
+    """
+    return decay_impl(state, cfg=cfg)
+
+
+def maybe_decay_impl(state: MCState, *, cfg: MCConfig,
+                     total_threshold: int) -> MCState:
+    """Traced body of :func:`maybe_decay` (the per-shard maintenance step of
+    ``core/sharded.py`` runs this under shard_map)."""
+    should = jnp.any(state.slabs.tot > total_threshold)
+    return jax.lax.cond(
+        should, lambda s: decay_impl(s, cfg=cfg), lambda s: s, state)
+
+
 def maybe_decay(state: MCState, *, cfg: MCConfig, total_threshold: int) -> MCState:
     """Decay when any row total exceeds ``total_threshold`` (paper §II.C
     suggests decaying "at some threshold over the number of total
     transitions").  In rolling mode each trigger halves one block; the
     threshold keeps firing until the offending row's block comes around, so
     pressure drains over a few calls instead of one stall."""
-    should = jnp.any(state.slabs.tot > total_threshold)
-    return jax.lax.cond(
-        should, lambda s: decay(s, cfg=cfg), lambda s: s, state)
+    return maybe_decay_impl(state, cfg=cfg, total_threshold=total_threshold)
 
 
 # ---------------------------------------------------------------------------
@@ -703,3 +742,28 @@ def maintenance_stats(state: MCState) -> dict:
         "dh_rebuilds": int(state.dh_rebuilds),
         "dh_tombstones": int(state.dh_tombstones),
     }
+
+
+_COUNTER_FIELDS = ("n_rows", "dropped_rows", "dropped_probes", "evictions",
+                   "deferred_new", "route_dropped", "decay_steps",
+                   "dh_rebuilds", "dh_tombstones")
+
+
+@jax.jit
+def _counter_stack(state: MCState) -> jax.Array:
+    return jnp.stack([jnp.sum(getattr(state, f)) for f in _COUNTER_FIELDS])
+
+
+def counter_stats(state: MCState) -> dict:
+    """Every additive observability counter as a host-side int.
+
+    Counters are summed over any leading dims, so the same helper reads a
+    local ``MCState`` and the stacked per-shard state of ``core/sharded.py``
+    (where each counter is ``int32[num_shards]``).  ``decay_cursor`` is a
+    position, not a count, and is deliberately excluded.  The sums are one
+    fused dispatch and ONE device->host transfer — callers sit on serving
+    hot paths (``ShardedEngine.observe`` reads this per batch, inside its
+    writer lock).
+    """
+    vals = jax.device_get(_counter_stack(state))
+    return {f: int(v) for f, v in zip(_COUNTER_FIELDS, vals)}

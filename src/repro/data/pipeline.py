@@ -7,7 +7,7 @@ unchanged: every host feeds its slice of the global batch.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
 import numpy as np

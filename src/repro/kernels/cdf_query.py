@@ -89,8 +89,8 @@ def walk_chunks(load, totf, t, dst_out_ref, prob_out_ref, n_out_ref,
             else:
                 before = (cum - ck).astype(jnp.float32)
                 needed = (before < tcnt[:, None]) & (ck > 0)
-            n_out_ref[...] = n_out_ref[...] + \
-                jnp.sum(needed.astype(jnp.int32), axis=1)
+            n_out_ref[...] = n_out_ref[...] + jnp.sum(
+                needed.astype(jnp.int32), axis=1)
             lo = k * chunk
             if lo < max_items:
                 hi = min(lo + chunk, max_items)

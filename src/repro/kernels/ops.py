@@ -203,6 +203,23 @@ def cdf_query_fused(rows: jax.Array, found: jax.Array,
         interpret=not _on_tpu())
 
 
+@functools.partial(jax.jit, static_argnames=("n", "impl"))
+def topn_merge(probs: jax.Array, dsts: jax.Array, srcs: jax.Array,
+               *, n: int, impl: str = "auto"):
+    """Cross-shard top-n merge: ``(srcs[n], dsts[n], probs[n])`` descending.
+
+    Merges S per-shard descending top lists (``probs/dsts/srcs[S, M]``) into
+    one globally descending n-list — the reduce step of the sharded headline
+    query (``core/sharded.py`` all_gathers local answers, then merges).
+    A fixed-shape scalar head-pointer merge over an (S, M) tile is branch-
+    serial by nature and tiny (S = shards, M <= n), so every backend runs
+    the ref merge; ``impl`` is still validated so dispatch stays uniform
+    with the other ops.
+    """
+    _use_ref(impl)
+    return _ref.topn_merge_ref(probs, dsts, srcs, n)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("k", "max_probes", "impl"))
 def draft_walk(window: jax.Array, ht_keys: jax.Array, ht_vals: jax.Array,

@@ -182,6 +182,38 @@ def cdf_query_fused_ref(rows: jax.Array, found: jax.Array,
     return dk, pk, n_needed
 
 
+def topn_merge_ref(probs: jax.Array, dsts: jax.Array, srcs: jax.Array,
+                   n: int):
+    """Fixed-shape k-way merge of per-shard descending top lists.
+
+    probs/dsts/srcs[S, M]: each shard's local answer, descending by prob
+    (dead entries carry prob 0 / EMPTY ids at the tail).  Classic k-way
+    head-pointer merge as a lax.scan of n steps: every step reads the S list
+    heads, emits the max (ties break toward the lowest shard id — argmax
+    first occurrence — so the merge is deterministic), and advances that
+    shard's pointer.  Because each input list is descending, the emitted
+    stream is globally descending.  Exhausted or dead heads emit
+    EMPTY/EMPTY/0.0; output is always (srcs[n], dsts[n], probs[n]).
+    """
+    s, m = probs.shape
+
+    def step(ptr, _):
+        j = jnp.minimum(ptr, m - 1)
+        head = probs[jnp.arange(s), j]
+        head = jnp.where(ptr < m, head, 0.0)
+        best = jnp.argmax(head)
+        p = head[best]
+        live = p > 0
+        src = jnp.where(live, srcs[best, j[best]], EMPTY)
+        dst = jnp.where(live, dsts[best, j[best]], EMPTY)
+        ptr = ptr.at[best].add(1)
+        return ptr, (src, dst, jnp.where(live, p, 0.0))
+
+    _, (ms, md, mp) = jax.lax.scan(
+        step, jnp.zeros((s,), jnp.int32), None, length=n)
+    return ms, md, mp
+
+
 def draft_walk_ref(window: jax.Array, ht_keys: jax.Array, ht_vals: jax.Array,
                    cnt: jax.Array, dst: jax.Array, ord0: jax.Array,
                    *, k: int, max_probes: int):

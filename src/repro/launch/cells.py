@@ -14,12 +14,12 @@ embeddings are part of the sequence budget.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCHS, get_config
+from repro.configs import ARCHS
 from repro.configs.base import ModelConfig
 from repro.models.model import Model
 

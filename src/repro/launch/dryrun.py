@@ -35,7 +35,6 @@ from repro.launch import cells as cells_mod
 from repro.launch import roofline as rl
 from repro.launch.mesh import make_production_mesh
 from repro.models.model import Model
-from repro.optim import adamw
 from repro.sharding.specs import batch_axes, partition_specs
 from repro.train.train_step import TrainConfig, abstract_state, make_train_step
 

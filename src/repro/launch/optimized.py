@@ -21,7 +21,7 @@ import argparse
 import json
 import traceback
 
-from repro.configs import ARCHS, get_config
+from repro.configs import get_config
 from repro.launch import cells as cells_mod
 from repro.launch.dryrun import lower_cell
 

@@ -3,6 +3,14 @@ speculative drafter (the paper's structure as a first-class serving feature).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
       --requests 8 --prompt-len 32 --new-tokens 48
+
+Shard-parallel chain serving (DESIGN.md §9) — routes synthetic transition
+traffic through the :class:`ShardedEngine` instead of the LM loop (off-TPU,
+fake the devices first):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --num-shards 8 \
+      --bucket-factor 2.0 --requests 16 --route-batch 4096
 """
 
 from __future__ import annotations
@@ -16,9 +24,12 @@ import numpy as np
 
 from repro.configs import get_config, smoke_config
 from repro.core import mcprioq as mc
+from repro.core import sharded as sh
 from repro.core import speculative as spec
+from repro.data.synthetic import MarkovGraphSampler
 from repro.models.model import Model
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve.engine import (Engine, ServeConfig, ShardedEngine,
+                                ShardedServeConfig)
 
 
 def run(arch: str, smoke: bool, requests: int, prompt_len: int,
@@ -63,6 +74,51 @@ def run(arch: str, smoke: bool, requests: int, prompt_len: int,
     return outs, engine
 
 
+def run_sharded(num_shards: int, bucket_factor: float, requests: int,
+                route_batch: int, topn: int, seed: int = 0,
+                decay_threshold: int = 1 << 18, decay_block_rows: int = 1024):
+    """Shard-parallel chain serving: route synthetic Zipf transition traffic
+    through the ShardedEngine (observe + query per request) and report
+    throughput plus the routing/overflow counters."""
+    base = mc.MCConfig(num_rows=4096, capacity=64, sort_passes=1,
+                       decay_block_rows=decay_block_rows)
+    scfg = sh.ShardedConfig(base=base, num_shards=num_shards,
+                            bucket_factor=bucket_factor)
+    engine = ShardedEngine(ShardedServeConfig(
+        sharded=scfg, decay_threshold=decay_threshold, topn=topn))
+    graph = MarkovGraphSampler(num_nodes=4096, out_degree=32, seed=seed)
+    rng = np.random.default_rng(seed)
+    # compile outside the timed loop (jit caches persist per shape)
+    s, d = graph.sample_transitions(route_batch)
+    engine.observe(s, d)
+    engine.query(jnp.asarray(rng.integers(0, 4096, 256).astype(np.int32)))
+    t0 = time.time()
+    for _ in range(requests):
+        s, d = graph.sample_transitions(route_batch)
+        engine.observe(s, d)
+        engine.query(jnp.asarray(
+            rng.integers(0, 4096, 256).astype(np.int32)))
+    dt = time.time() - t0
+    edges = requests * route_batch
+    srcs, dsts, probs = engine.topn()
+    st = engine.stats
+    print(f"{requests} requests, {edges} edges over {num_shards} shards "
+          f"in {dt:.1f}s ({edges / dt:.0f} edges/s)")
+    print(f"routing: route_dropped={st['route_dropped']} "
+          f"query_dropped={st['query_dropped']} "
+          f"dropped_rows={st['dropped_rows']} "
+          f"deferred_new={st['deferred_new']}")
+    print(f"maintenance: decay_steps={st['decay_steps']} "
+          f"n_rows={st['n_rows']}")
+    head = ", ".join(
+        f"{int(s_)}->{int(d_)}:{float(p_):.3f}"
+        for s_, d_, p_ in zip(np.asarray(srcs)[:5], np.asarray(dsts)[:5],
+                              np.asarray(probs)[:5]))
+    print(f"global top-{topn} head: {head} "
+          f"(unexposed candidates {st['topn_dropped']})")
+    return engine
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-7b")
@@ -75,7 +131,25 @@ def main():
                     help="row-total threshold that triggers §II.C decay")
     ap.add_argument("--decay-block-rows", type=int, default=1024,
                     help="rolling decay block size; 0 = stop-the-world")
+    ap.add_argument("--num-shards", type=int, default=0,
+                    help="> 0 serves the node-sharded chain (ShardedEngine) "
+                         "instead of the LM loop; needs that many devices "
+                         "(fake with XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N before jax starts)")
+    ap.add_argument("--bucket-factor", type=float, default=2.0,
+                    help="all_to_all bucket capacity as a multiple of the "
+                         "fair per-shard share (overflow drops are counted)")
+    ap.add_argument("--route-batch", type=int, default=2048,
+                    help="transitions per sharded observe() call")
+    ap.add_argument("--topn", type=int, default=16,
+                    help="global top-n read size for the sharded path")
     args = ap.parse_args()
+    if args.num_shards > 0:
+        run_sharded(args.num_shards, args.bucket_factor, args.requests,
+                    args.route_batch, args.topn,
+                    decay_threshold=args.decay_threshold,
+                    decay_block_rows=args.decay_block_rows)
+        return
     run(args.arch, args.smoke, args.requests, args.prompt_len,
         args.new_tokens, args.draft_len,
         decay_threshold=args.decay_threshold,

@@ -10,11 +10,9 @@ data pipeline, pjit'd train step, checkpoint/restart, straggler watchdog.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding
 
 from repro.checkpoint import ckpt

@@ -111,7 +111,7 @@ def _flash_stats(q: jax.Array, k: jax.Array, v: jax.Array, *,
                  causal: bool, window: int,
                  q_positions: jax.Array, kv_positions: jax.Array,
                  kv_valid_len: Optional[jax.Array], kv_chunk: int):
-    """Online-softmax statistics (m, l, acc) — acc is the un-normalised
+    """Online-softmax statistics (m, lsum, acc) — acc is the un-normalised
     numerator, so partial results combine exactly across KV shards
     (sequence-parallel attention)."""
     b, sq, h, hd = q.shape
@@ -139,7 +139,7 @@ def _flash_stats(q: jax.Array, k: jax.Array, v: jax.Array, *,
         ps = kv_positions.reshape(b, n_chunks, ck).swapaxes(0, 1)
 
     def step(carry, inp):
-        m, l, acc = carry
+        m, lsum, acc = carry
         kc, vc, pc = inp  # [B, ck, KV, Dh], [B, ck]
         s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kc).astype(jnp.float32)
         mask = jnp.ones((b, sq, ck), bool)
@@ -154,19 +154,19 @@ def _flash_stats(q: jax.Array, k: jax.Array, v: jax.Array, *,
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
-        l = l * corr + jnp.sum(p, axis=-1)
+        lsum = lsum * corr + jnp.sum(p, axis=-1)
         acc = acc * corr[..., None] + jnp.einsum(
             "bqkgc,bckd->bqkgd", p.astype(vc.dtype), vc).astype(jnp.float32)
-        return (m_new, l, acc), None
+        return (m_new, lsum, acc), None
 
     m0 = jnp.full((b, sq, kvh, g), NEG_INF, jnp.float32)
     l0 = jnp.zeros((b, sq, kvh, g), jnp.float32)
     a0 = jnp.zeros((b, sq, kvh, g, hd), jnp.float32)
     if n_chunks == 1:
-        (m, l, acc), _ = step((m0, l0, a0), (ks[0], vs[0], ps[0]))
+        (m, lsum, acc), _ = step((m0, l0, a0), (ks[0], vs[0], ps[0]))
     else:
-        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (ks, vs, ps))
-    return m, l, acc
+        (m, lsum, acc), _ = jax.lax.scan(step, (m0, l0, a0), (ks, vs, ps))
+    return m, lsum, acc
 
 
 def attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -189,11 +189,11 @@ def attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
         q_positions = jnp.broadcast_to(jnp.arange(sq), (b, sq))
     if kv_positions is None:
         kv_positions = jnp.broadcast_to(jnp.arange(t), (b, t))
-    m, l, acc = _flash_stats(
+    m, lsum, acc = _flash_stats(
         q, k, v, causal=causal, window=window, q_positions=q_positions,
         kv_positions=kv_positions, kv_valid_len=kv_valid_len,
         kv_chunk=kv_chunk)
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = acc / jnp.maximum(lsum, 1e-30)[..., None]
     return out.reshape(b, sq, h, hd).astype(q.dtype)
 
 
@@ -256,7 +256,7 @@ def sp_insert_attend(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
         all-gather the whole cache (the 30 GB/step + 50 GB peak observed on
         qwen2 decode_32k, §Perf).
       * attend — each shard runs flash over its local KV slice; the exact
-        softmax is reassembled from (m, l, acc) partials with a psum: an
+        softmax is reassembled from (m, lsum, acc) partials with a psum: an
         O(B·H·Dh) collective instead of an O(B·T·KV·Dh) gather.
     """
     from jax.sharding import PartitionSpec as P
@@ -284,13 +284,13 @@ def sp_insert_attend(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
                       vc[b_idx, li]))
         pc = pc.at[b_idx, li].set(jnp.where(mine, qp, pc[b_idx, li]))
         # --- local flash + exact LSE combine ---------------------------
-        m, l, acc = _flash_stats(
+        m, lsum, acc = _flash_stats(
             qc, kc, vc, causal=True, window=window, q_positions=qp,
             kv_positions=pc, kv_valid_len=None,
             kv_chunk=min(kv_chunk, kc.shape[1]))
         gm = jax.lax.pmax(m, "model")
         scale = jnp.exp(m - gm)
-        denom = jax.lax.psum(l * scale, "model")
+        denom = jax.lax.psum(lsum * scale, "model")
         num = jax.lax.psum(acc * scale[..., None], "model")
         out = num / jnp.maximum(denom, 1e-30)[..., None]
         bq, sq = qc.shape[:2]

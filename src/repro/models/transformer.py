@@ -9,7 +9,6 @@ bounded for 88-layer models on a 512-device dry-run.  Pattern remainders and
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

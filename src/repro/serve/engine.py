@@ -30,7 +30,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core import mcprioq as mc
+from repro.core import sharded as sh
 from repro.core import speculative as spec
 from repro.core.epoch import EpochStore
 from repro.models.model import Model
@@ -164,10 +166,10 @@ class Engine:
             self.stats["draft_calls"] += 1    # one fused dispatch per round
         finally:
             self.drafter_store.release(snap)
-        draft = np.asarray(draft)[:, : k - 1] if k > 1 else \
-            np.zeros((cur.shape[0], 0), np.int32)
-        ok = np.asarray(ok)[:, : k - 1] if k > 1 else \
-            np.zeros((cur.shape[0], 0), bool)
+        draft = (np.asarray(draft)[:, : k - 1] if k > 1
+                 else np.zeros((cur.shape[0], 0), np.int32))
+        ok = (np.asarray(ok)[:, : k - 1] if k > 1
+              else np.zeros((cur.shape[0], 0), bool))
         n_drafted = int(ok.all(axis=0).cumprod().sum()) if ok.size else 0
         draft = draft[:, :n_drafted]
 
@@ -187,8 +189,8 @@ class Engine:
         model_toks = np.asarray(self._sample_all(logits, rng))  # [B, 1+n]
 
         # longest batch-wide prefix where model agrees with the draft
-        agree = (model_toks[:, :-1] == draft).all(axis=0) if draft.size \
-            else np.zeros((0,), bool)
+        agree = ((model_toks[:, :-1] == draft).all(axis=0) if draft.size
+                 else np.zeros((0,), bool))
         n_acc = int(np.cumprod(agree).sum()) if agree.size else 0
         self.stats["accepted"] += n_acc * draft.shape[0]
 
@@ -221,3 +223,181 @@ class Engine:
     @property
     def acceptance_rate(self) -> float:
         return self.stats["accepted"] / max(1, self.stats["drafted"])
+
+
+# ---------------------------------------------------------------------------
+# sharded chain serving (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ShardedServeConfig:
+    """Serving-side knobs around a :class:`repro.core.sharded.ShardedConfig`."""
+
+    sharded: sh.ShardedConfig
+    decay_threshold: int = 1 << 18   # row-total that triggers §II.C decay
+    threshold: float = 0.9           # default cumulative-probability target
+    max_items: int = 16              # per-query emission window
+    topn: int = 16                   # global top-n read size
+
+
+class ShardedEngine:
+    """Shard-parallel MCPrioQ behind the serving boundary.
+
+    The pod-scale analogue of the paper's lock-free single-host design
+    (DESIGN.md §9): node-space shards with fixed-capacity all_to_all routing,
+    every per-shard body dispatching the kernel layer.  The host-side
+    contract mirrors :class:`Engine`'s learner: ``observe`` runs the
+    single-writer acquire -> observe -> maintain -> publish cycle behind the
+    ``EpochStore`` under a writer lock (rolling per-shard decay keeps the
+    maintain step O(block) on every shard), while ``query``/``topn`` readers
+    stay lock-free on their snapshots.  Routing/overflow counters are
+    surfaced in ``stats`` — drops are the measurable price of static shapes,
+    the paper's "approximately correct" contract.
+
+    Batches are padded host-side to a multiple of ``num_shards`` with
+    inactive (-1) items, which consume no bucket capacity.
+    """
+
+    def __init__(self, cfg: ShardedServeConfig,
+                 mesh: Optional[jax.sharding.Mesh] = None):
+        scfg = cfg.sharded
+        if mesh is None:
+            if scfg.num_shards > jax.device_count():
+                raise ValueError(
+                    f"num_shards={scfg.num_shards} exceeds the "
+                    f"{jax.device_count()} visible devices; set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count="
+                    f"{scfg.num_shards} before importing jax to fake them")
+            mesh = compat.make_mesh((scfg.num_shards,), (scfg.axis,))
+        self.cfg = cfg
+        self.mesh = mesh
+        self.store = EpochStore(sh.init_sharded(scfg, mesh))
+        self._update = sh.make_update_fn(scfg, mesh)
+        self._maintain = sh.make_maintain_fn(
+            scfg, mesh, total_threshold=cfg.decay_threshold)
+        # bounded, insertion-ordered caches of routed read programs keyed by
+        # their static args; guarded by a lock so concurrent first-time
+        # readers build one program, and capped so per-request float
+        # thresholds cannot grow executables without bound
+        self._query_fns: Dict[Tuple[float, int], Any] = {}
+        self._topn_fns: Dict[int, Any] = {}
+        self._fn_cache_max = 8
+        self._compile_lock = threading.Lock()
+        # single-writer invariant (same reasoning as Engine._learn): two
+        # overlapping observe() calls must not publish from the same base
+        self._write_lock = threading.Lock()
+        # readers are lock-free on their snapshots, but the stats dict is
+        # shared by all of them — unguarded read-modify-write of the drop
+        # counters would silently undercount, defeating the observability
+        # contract the counters exist for
+        self._stats_lock = threading.Lock()
+        self.stats = {"updates": 0, "queries": 0, "topn_calls": 0,
+                      "query_dropped": 0, "topn_dropped": 0}
+        snap = self.store.acquire()
+        try:
+            self.stats.update(mc.counter_stats(snap.state))
+        finally:
+            self.store.release(snap)
+
+    # ------------------------------------------------------------------
+    def _cached_fn(self, cache: Dict, key, build):
+        """Bounded get-or-build of a routed read program (FIFO eviction —
+        jit recompiles transparently if an evicted key returns)."""
+        with self._compile_lock:
+            fn = cache.get(key)
+            if fn is None:
+                if len(cache) >= self._fn_cache_max:
+                    cache.pop(next(iter(cache)))
+                fn = build()
+                cache[key] = fn
+        return fn
+
+    # ------------------------------------------------------------------
+    def _pad(self, *arrays):
+        """Pad 1-D arrays to a multiple of num_shards with inactive items
+        (src = -1 never routes).  Returns (padded..., original_len)."""
+        n = self.cfg.sharded.num_shards
+        b = arrays[0].shape[0]
+        pad = (-b) % n
+        out = []
+        for i, a in enumerate(arrays):
+            a = jnp.asarray(a)
+            fill = -1 if i == 0 else 0   # first array is always src
+            if pad:
+                a = jnp.concatenate(
+                    [a, jnp.full((pad,), fill, a.dtype)])
+            out.append(a)
+        return (*out, b)
+
+    # ------------------------------------------------------------------
+    def observe(self, src, dst, weights=None) -> None:
+        """Route one transition batch to its owner shards and learn from it.
+
+        Serialised writer: acquire -> update (kernel-routed all_to_all
+        dispatch) -> maintain (rolling per-shard decay) -> publish.
+        """
+        src = jnp.asarray(src, jnp.int32)
+        dst = jnp.asarray(dst, jnp.int32)
+        w = (jnp.ones(src.shape, jnp.int32) if weights is None
+             else jnp.asarray(weights, jnp.int32))
+        src, dst, w, _ = self._pad(src, dst, w)
+        with self._write_lock:
+            snap = self.store.acquire()
+            try:
+                state = self._update(snap.state, src, dst, w)
+                state = self._maintain(state)
+            finally:
+                self.store.release(snap)
+            self.store.publish(state)
+            counters = mc.counter_stats(state)
+            with self._stats_lock:
+                self.stats["updates"] += 1
+                self.stats.update(counters)
+
+    # ------------------------------------------------------------------
+    def query(self, src, threshold: Optional[float] = None,
+              max_items: Optional[int] = None):
+        """Per-src cumulative-threshold read (the paper's §II.B query),
+        answered by the owner shards.  Returns ``(dsts[B, k], probs[B, k],
+        n_needed[B])``; routing drops land in ``stats['query_dropped']``."""
+        t = float(self.cfg.threshold if threshold is None else threshold)
+        k = int(self.cfg.max_items if max_items is None else max_items)
+        fn = self._cached_fn(
+            self._query_fns, (t, k),
+            lambda: sh.make_query_fn(self.cfg.sharded, self.mesh,
+                                     threshold=t, max_items=k))
+        src = jnp.asarray(src, jnp.int32)
+        src, b = self._pad(src)
+        snap = self.store.acquire()
+        try:
+            d, p, n, dropped = fn(snap.state, src)
+        finally:
+            self.store.release(snap)
+        n_dropped = int(jnp.sum(dropped))
+        with self._stats_lock:
+            self.stats["queries"] += 1
+            self.stats["query_dropped"] += n_dropped
+        return d[:b], p[:b], n[:b]
+
+    # ------------------------------------------------------------------
+    def topn(self, n: Optional[int] = None):
+        """Globally descending top-n edges across every shard (the
+        cross-shard merge read).  Returns ``(srcs[n], dsts[n], probs[n])``;
+        candidates the shards could not expose are counted in
+        ``stats['topn_dropped']`` (last call's value is kept — it is a
+        property of the current state, not a running total)."""
+        n = int(self.cfg.topn if n is None else n)
+        fn = self._cached_fn(
+            self._topn_fns, n,
+            lambda: sh.make_topn_fn(self.cfg.sharded, self.mesh, n))
+        snap = self.store.acquire()
+        try:
+            srcs, dsts, probs, dropped = fn(snap.state)
+        finally:
+            self.store.release(snap)
+        n_dropped = int(dropped)
+        with self._stats_lock:
+            self.stats["topn_calls"] += 1
+            self.stats["topn_dropped"] = n_dropped
+        return srcs, dsts, probs

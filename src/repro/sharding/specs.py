@@ -23,10 +23,9 @@ from __future__ import annotations
 import contextlib
 import contextvars
 import re
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 BATCH = "__batch__"

@@ -4,7 +4,6 @@ gradient compression) -> AdamW update.  Pure function, pjit-ready."""
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax

@@ -120,7 +120,6 @@ def test_rope_relative_property():
 
 def test_sp_insert_attend_matches_plain_on_host_mesh():
     """shard_map SP path == plain insert+attend (1-device mesh degenerate)."""
-    from repro.launch.mesh import make_host_mesh
     mesh = compat.make_mesh((1, 1), ("data", "model"))
     rng = np.random.default_rng(3)
     b, t, kvh, h, d = 2, 16, 2, 4, 8

@@ -1,6 +1,5 @@
 """Validate the trip-count-aware HLO cost analyzer against ground truth."""
 
-import numpy as np
 import pytest
 
 import jax

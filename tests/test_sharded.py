@@ -49,13 +49,15 @@ SCRIPT = textwrap.dedent(
             oracle[s][d] = oracle[s].get(d, 0) + 1
 
     # no drops allowed at this bucket factor
-    assert int(jnp.sum(state.dropped_probes)) == 0, "router dropped items"
+    assert int(jnp.sum(state.route_dropped)) == 0, "router dropped items"
+    assert int(jnp.sum(state.dropped_probes)) == 0
     assert int(jnp.sum(state.dropped_rows)) == 0
 
     # query every src node once; batch padded to a multiple of 8
     srcs = np.arange(40, dtype=np.int32)
     srcs = np.concatenate([srcs, np.full(8 - len(srcs) % 8, -1, np.int32)])
-    d, p, n = qry(state, jnp.asarray(srcs))
+    d, p, n, qdrop = qry(state, jnp.asarray(srcs))
+    assert int(jnp.sum(qdrop)) == 0, "query routing dropped items"
     d, p, n = map(np.asarray, (d, p, n))
     for s in range(40):
         tot = sum(oracle[s].values())

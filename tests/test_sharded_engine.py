@@ -1,0 +1,333 @@
+"""Sharded serving (DESIGN.md §9): kernel-routed shard bodies behind the
+ShardedEngine, bucket-overflow semantics, and the cross-shard top-n merge.
+
+Single-shard meshes run in-process (the routing machinery is fully exercised
+with num_shards=1 — identity all_to_all, real buckets and counters); the
+multi-shard path needs 8 fake host devices and runs in a subprocess because
+the device count is fixed at first jax init (same pattern as test_sharded.py).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.core import mcprioq as mc
+from repro.core import sharded as sh
+from repro.core.hashtable import EMPTY
+from repro.kernels import ops
+from repro.serve.engine import ShardedEngine, ShardedServeConfig
+
+
+def _distinct_count_batch(n_src=12, n_dst=5, seed=0):
+    """(src, dst) batch where src s carries dst d exactly (d+1) times — every
+    per-row count is distinct, so priority order (and therefore query output)
+    is unique and bit-exact comparisons are well-defined."""
+    srcs, dsts = [], []
+    for s in range(n_src):
+        for d in range(n_dst):
+            srcs += [s] * (d + 1)
+            dsts += [d] * (d + 1)
+    src = np.array(srcs, np.int32)
+    dst = np.array(dsts, np.int32)
+    perm = np.random.default_rng(seed).permutation(src.size)
+    return src[perm], dst[perm]
+
+
+# ---------------------------------------------------------------------------
+# k-way merge (kernel layer)
+# ---------------------------------------------------------------------------
+
+
+def test_topn_merge_matches_flat_topk():
+    rng = np.random.default_rng(3)
+    s, m, n = 4, 6, 8
+    probs = np.sort(rng.random((s, m)).astype(np.float32), axis=1)[:, ::-1]
+    dsts = rng.integers(0, 100, (s, m)).astype(np.int32)
+    srcs = rng.integers(0, 100, (s, m)).astype(np.int32)
+    ms, md, mp = ops.topn_merge(jnp.asarray(probs.copy()), jnp.asarray(dsts),
+                                jnp.asarray(srcs), n=n)
+    mp = np.asarray(mp)
+    assert np.all(np.diff(mp) <= 0)
+    flat = np.sort(probs.reshape(-1))[::-1][:n]
+    np.testing.assert_array_equal(mp, flat)
+    # emitted ids belong to the emitted probability (same flat position)
+    for i in range(n):
+        hits = np.argwhere(probs == mp[i])
+        assert any(dsts[a, b] == int(np.asarray(md)[i])
+                   and srcs[a, b] == int(np.asarray(ms)[i])
+                   for a, b in hits)
+
+
+def test_topn_merge_dead_tail_is_empty():
+    probs = jnp.asarray(np.array([[0.5, 0.0], [0.25, 0.0]], np.float32))
+    dsts = jnp.asarray(np.array([[7, -1], [9, -1]], np.int32))
+    srcs = jnp.asarray(np.array([[1, -1], [2, -1]], np.int32))
+    ms, md, mp = ops.topn_merge(probs, dsts, srcs, n=4)
+    np.testing.assert_array_equal(np.asarray(mp),
+                                  np.array([0.5, 0.25, 0.0, 0.0], np.float32))
+    np.testing.assert_array_equal(np.asarray(md), np.array([7, 9, EMPTY, EMPTY]))
+    np.testing.assert_array_equal(np.asarray(ms), np.array([1, 2, EMPTY, EMPTY]))
+
+
+# ---------------------------------------------------------------------------
+# bucket-overflow semantics (fixed-capacity drop model)
+# ---------------------------------------------------------------------------
+
+
+def test_roomy_buckets_bit_identical_to_local_oracle():
+    """With bucket_factor large enough the sharded path IS the local kernel
+    path: zero drops, query outputs bit-identical to the unsharded oracle."""
+    mesh = compat.make_mesh((1,), ("shard",))
+    base = mc.MCConfig(num_rows=64, capacity=16, sort_passes=4)
+    scfg = sh.ShardedConfig(base=base, num_shards=1, bucket_factor=4.0)
+    state = sh.init_sharded(scfg, mesh)
+    upd = sh.make_update_fn(scfg, mesh)
+    qry = sh.make_query_fn(scfg, mesh, threshold=0.9, max_items=8)
+    src, dst = _distinct_count_batch()
+    w = jnp.ones((src.size,), jnp.int32)
+    state = upd(state, jnp.asarray(src), jnp.asarray(dst), w)
+    assert int(jnp.sum(state.route_dropped)) == 0
+
+    local = mc.update_batch(mc.init(base), jnp.asarray(src),
+                            jnp.asarray(dst), cfg=base)
+    q = jnp.arange(12, dtype=jnp.int32)
+    d, p, n, qdrop = qry(state, q)
+    d0, p0, n0 = mc.query_threshold(local, q, 0.9, cfg=base, max_items=8)
+    assert int(jnp.sum(qdrop)) == 0
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(d0))
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p0))
+    np.testing.assert_array_equal(np.asarray(n), np.asarray(n0))
+
+
+def test_tiny_buckets_count_drops_and_stay_sorted():
+    """A deliberately under-provisioned bucket factor drops items — counted,
+    never corrupting: surviving answers stay sorted descending."""
+    mesh = compat.make_mesh((1,), ("shard",))
+    base = mc.MCConfig(num_rows=64, capacity=16, sort_passes=4)
+    scfg = sh.ShardedConfig(base=base, num_shards=1, bucket_factor=0.25)
+    state = sh.init_sharded(scfg, mesh)
+    upd = sh.make_update_fn(scfg, mesh)
+    qry = sh.make_query_fn(scfg, mesh, threshold=0.9, max_items=8)
+    src, dst = _distinct_count_batch()
+    b = src.size
+    cap = scfg.bucket_capacity(b)
+    w = jnp.ones((b,), jnp.int32)
+    state = upd(state, jnp.asarray(src), jnp.asarray(dst), w)
+    # single shard: every item targets one bucket of exactly `cap` slots
+    assert int(jnp.sum(state.route_dropped)) == b - cap
+
+    q = jnp.arange(12, dtype=jnp.int32)
+    d, p, n, qdrop = qry(state, q)
+    q_cap = scfg.bucket_capacity(12)
+    assert int(jnp.sum(qdrop)) == 12 - q_cap
+    p = np.asarray(p)
+    assert np.all(np.diff(p, axis=1) <= 1e-9), p   # descending per row
+    # dropped queries answer EMPTY/0, never garbage
+    dropped_rows = np.asarray(d)[q_cap:]
+    assert np.all(dropped_rows == EMPTY)
+    assert np.all(p[q_cap:] == 0.0)
+
+
+def test_padding_consumes_no_bucket_capacity():
+    """Inactive (-1) padding items must not displace real items or count as
+    drops (they route to a nonexistent shard)."""
+    mesh = compat.make_mesh((1,), ("shard",))
+    base = mc.MCConfig(num_rows=64, capacity=16, sort_passes=2)
+    scfg = sh.ShardedConfig(base=base, num_shards=1, bucket_factor=1.0)
+    state = sh.init_sharded(scfg, mesh)
+    upd = sh.make_update_fn(scfg, mesh)
+    # 8 real + 8 pad items with factor 1.0: bucket cap 16 holds all 8 real
+    src = jnp.asarray(np.array([0] * 8 + [-1] * 8, np.int32))
+    dst = jnp.asarray(np.array(list(range(8)) + [0] * 8, np.int32))
+    state = upd(state, src, dst, jnp.ones((16,), jnp.int32))
+    assert int(jnp.sum(state.route_dropped)) == 0
+    assert int(jnp.sum(state.slabs.tot)) == 8
+
+
+# ---------------------------------------------------------------------------
+# ShardedEngine (serving boundary)
+# ---------------------------------------------------------------------------
+
+
+def _engine(bucket_factor=4.0, **cfg_kw):
+    base = mc.MCConfig(num_rows=64, capacity=16, sort_passes=4)
+    scfg = sh.ShardedConfig(base=base, num_shards=1,
+                            bucket_factor=bucket_factor)
+    return ShardedEngine(ShardedServeConfig(sharded=scfg, **cfg_kw))
+
+
+def test_engine_observe_query_topn_cycle():
+    eng = _engine(decay_threshold=1 << 20)
+    src, dst = _distinct_count_batch()
+    eng.observe(src, dst)
+    assert eng.store.version == 1          # publish happened
+    assert eng.stats["updates"] == 1
+    assert eng.stats["route_dropped"] == 0
+    assert eng.stats["n_rows"] == 12
+
+    d, p, n = eng.query(np.arange(12, dtype=np.int32))
+    base = eng.cfg.sharded.base
+    local = mc.update_batch(mc.init(base), jnp.asarray(src),
+                            jnp.asarray(dst), cfg=base)
+    d0, p0, n0 = mc.query_threshold(local, jnp.arange(12, dtype=jnp.int32),
+                                    eng.cfg.threshold, cfg=base,
+                                    max_items=eng.cfg.max_items)
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(d0))
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p0))
+    np.testing.assert_array_equal(np.asarray(n), np.asarray(n0))
+
+    srcs, dsts, probs = eng.topn(6)
+    probs = np.asarray(probs)
+    assert np.all(np.diff(probs) <= 0)
+    # oracle: global best prob is 5/15 for every row's heaviest dst
+    np.testing.assert_allclose(probs[0], 5.0 / 15.0, rtol=1e-6)
+    assert eng.stats["topn_dropped"] == 12 * 5 - 6
+
+
+def test_engine_query_pads_ragged_batches():
+    eng = _engine()
+    src, dst = _distinct_count_batch(n_src=3)
+    eng.observe(src, dst)
+    d, p, n = eng.query(np.array([0, 1, 2], np.int32))  # not padded by caller
+    assert d.shape[0] == 3
+    assert eng.stats["query_dropped"] == 0
+
+
+def test_engine_decay_runs_behind_writer_lock():
+    eng = _engine(decay_threshold=4)
+    src, dst = _distinct_count_batch()
+    eng.observe(src, dst)                  # row totals 15 > 4 -> decay fires
+    assert eng.stats["decay_steps"] >= 1
+
+
+def test_engine_concurrent_observes_lose_no_updates():
+    """Two overlapping observe() calls must serialise behind the writer lock
+    — without it both publish from the same base and one batch vanishes."""
+    eng = _engine()
+    a = (np.repeat(np.arange(0, 6, dtype=np.int32), 4),
+         np.tile(np.arange(4, dtype=np.int32), 6))
+    b = (np.repeat(np.arange(6, 12, dtype=np.int32), 4),
+         np.tile(np.arange(4, dtype=np.int32), 6))
+    ts = [threading.Thread(target=eng.observe, args=batch)
+          for batch in (a, b)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert eng.store.version == 2
+    assert eng.stats["updates"] == 2
+    d, p, n = eng.query(np.arange(12, dtype=np.int32), threshold=0.99)
+    assert int(np.asarray(n).min()) == 4   # every src from both batches live
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >= 2 devices (CI multidevice job sets "
+                           "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+def test_engine_multi_shard_inprocess():
+    """Real multi-shard routing in-process — only runs where the session
+    already has multiple devices (the CI multidevice job), since the device
+    count is fixed at first jax init."""
+    shards = min(4, jax.device_count())
+    base = mc.MCConfig(num_rows=128, capacity=16, sort_passes=4)
+    scfg = sh.ShardedConfig(base=base, num_shards=shards, bucket_factor=4.0)
+    eng = ShardedEngine(ShardedServeConfig(sharded=scfg,
+                                           decay_threshold=1 << 20))
+    src, dst = _distinct_count_batch(n_src=20)
+    eng.observe(src, dst)
+    assert eng.stats["route_dropped"] == 0
+    d, p, n = eng.query(np.arange(20, dtype=np.int32))
+    local = mc.update_batch(mc.init(base), jnp.asarray(src),
+                            jnp.asarray(dst), cfg=base)
+    d0, p0, n0 = mc.query_threshold(local, jnp.arange(20, dtype=jnp.int32),
+                                    eng.cfg.threshold, cfg=base,
+                                    max_items=eng.cfg.max_items)
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(d0))
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p0))
+    np.testing.assert_array_equal(np.asarray(n), np.asarray(n0))
+    _, _, probs = eng.topn(8)
+    assert np.all(np.diff(np.asarray(probs)) <= 0)
+
+
+# ---------------------------------------------------------------------------
+# multi-shard engine on 8 fake devices (subprocess)
+# ---------------------------------------------------------------------------
+
+SCRIPT_8DEV = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import mcprioq as mc, sharded as sh
+    from repro.serve.engine import ShardedEngine, ShardedServeConfig
+
+    srcs, dsts = [], []
+    for s in range(40):
+        for d in range(6):
+            srcs += [s] * (d + 1)
+            dsts += [d] * (d + 1)
+    src = np.array(srcs, np.int32)
+    dst = np.array(dsts, np.int32)
+    perm = np.random.default_rng(0).permutation(src.size)
+    src, dst = src[perm], dst[perm]
+
+    base = mc.MCConfig(num_rows=256, capacity=32, sort_passes=4)
+    scfg = sh.ShardedConfig(base=base, num_shards=8, bucket_factor=4.0)
+    eng = ShardedEngine(ShardedServeConfig(sharded=scfg,
+                                           decay_threshold=1 << 20))
+    eng.observe(src, dst)      # ragged batch: engine pads to a multiple of 8
+    assert eng.stats["route_dropped"] == 0, eng.stats
+    assert eng.stats["n_rows"] == 40
+
+    local = mc.update_batch(mc.init(base), jnp.asarray(src),
+                            jnp.asarray(dst), cfg=base)
+    q = np.arange(40, dtype=np.int32)
+    d, p, n = eng.query(q)
+    d0, p0, n0 = mc.query_threshold(local, jnp.asarray(q), 0.9, cfg=base,
+                                    max_items=16)
+    assert np.array_equal(np.asarray(d), np.asarray(d0))
+    assert np.array_equal(np.asarray(p), np.asarray(p0))
+    assert np.array_equal(np.asarray(n), np.asarray(n0))
+    assert eng.stats["query_dropped"] == 0
+
+    ms, md, mp = eng.topn(16)
+    mp = np.asarray(mp)
+    assert np.all(np.diff(mp) <= 0), mp
+    tot = np.int32(sum(d + 1 for d in range(6)))
+    flat = np.sort(np.array(
+        [np.float32(np.int32(d + 1)) / np.float32(tot)
+         for s in range(40) for d in range(6)], np.float32))[::-1][:16]
+    assert np.array_equal(mp, flat), (mp, flat)
+
+    # under-provisioned buckets: drops counted, reads stay sorted
+    tiny = ShardedEngine(ShardedServeConfig(
+        sharded=sh.ShardedConfig(base=base, num_shards=8,
+                                 bucket_factor=0.25),
+        decay_threshold=1 << 20))
+    tiny.observe(src, dst)
+    assert tiny.stats["route_dropped"] > 0
+    d, p, n = tiny.query(q)
+    assert np.all(np.diff(np.asarray(p), axis=1) <= 1e-9)
+    print("SHARDED-ENGINE-OK")
+    """
+)
+
+
+def test_sharded_engine_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", SCRIPT_8DEV], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARDED-ENGINE-OK" in out.stdout

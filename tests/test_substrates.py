@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro.checkpoint import ckpt
-from repro.data.pipeline import ShardedIterator, shard_batch
+from repro.data.pipeline import shard_batch
 from repro.data.synthetic import MarkovGraphSampler, token_stream
 from repro.launch.mesh import make_host_mesh
 from repro.optim import adamw
@@ -56,8 +56,8 @@ def test_adamw_weight_decay_and_clip():
 
 def test_warmup_cosine_shape():
     assert float(warmup_cosine(0, warmup_steps=10, total_steps=100)) == 0.0
-    assert float(warmup_cosine(10, warmup_steps=10, total_steps=100)) == \
-        pytest.approx(1.0, abs=0.01)
+    assert float(warmup_cosine(
+        10, warmup_steps=10, total_steps=100)) == pytest.approx(1.0, abs=0.01)
     end = float(warmup_cosine(100, warmup_steps=10, total_steps=100))
     assert end == pytest.approx(0.1, abs=0.01)
 

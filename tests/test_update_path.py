@@ -196,8 +196,8 @@ def test_query_topk_matches_inline_seed_path():
     live = (c > 0) & found[:, None]
     np.testing.assert_array_equal(np.asarray(got_d),
                                   np.asarray(jnp.where(live, d, EMPTY)))
-    assert np.asarray(got_p).tobytes() == \
-        np.asarray(jnp.where(live, p, 0.0)).tobytes()
+    assert (np.asarray(got_p).tobytes()
+            == np.asarray(jnp.where(live, p, 0.0)).tobytes())
 
 
 def test_zero_new_edge_batch_skips_slow_path_state_effects():
