@@ -15,6 +15,9 @@ has no numbered tables, so each benchmark validates one stated claim:
                          obvious")
   B6 drafter             serving feature: n-gram drafter acceptance rate
   B7 sharded_routing     all_to_all node-sharded scaling (8 fake devices)
+  B8 persist             durability subsystem (DESIGN.md §10): snapshot
+                         save/restore, WAL append per fsync policy + replay
+                         throughput, N -> M elastic reshard (8 fake devices)
 
 Prints ``name,us_per_call,derived`` CSV lines (harness contract) and writes
 ``BENCH_<bench>.json`` next to this file with the same rows in machine-
@@ -511,6 +514,139 @@ def bench_sharded_routing():
     REC.write("sharded_routing")
 
 
+def bench_persist():
+    """B8: durability & elasticity (DESIGN.md §10).
+
+    Three recorders: snapshot save/restore latency at chain scale, WAL
+    append cost per fsync policy plus full-replay throughput (recovery
+    speed), and the N -> M elastic reshard — snapshot at 4 shards, restore
+    at 2 and 8, recording re-ingestion edges/s (subprocess with 8 fake
+    devices, same pattern as B7).
+    """
+    import shutil
+    import subprocess
+    import tempfile
+    import textwrap
+    from repro.persist import snapshot as snap_io
+    from repro.persist.wal import WriteAheadLog
+
+    rows = 512 if SMOKE else 4096
+    batch = 256 if SMOKE else 1024
+    n_batches = 6 if SMOKE else 20
+    cfg = mc.MCConfig(num_rows=rows, capacity=64, sort_passes=1)
+    graph = MarkovGraphSampler(num_nodes=rows, out_degree=32, seed=7)
+    state = mc.init(cfg)
+    batches = []
+    for _ in range(n_batches):
+        s, d = graph.sample_transitions(batch)
+        batches.append((s.astype(np.int32), d.astype(np.int32)))
+        state = mc.update_batch(state, jnp.asarray(s), jnp.asarray(d),
+                                cfg=cfg)
+    live = int(jnp.sum(state.slabs.cnt > 0))
+
+    snap_dir = tempfile.mkdtemp()
+    meta = {"wal_seq": n_batches - 1}
+    us_save = _time(lambda: snap_io.save_snapshot(state, snap_dir, 0, meta),
+                    n=5)
+    like = mc.init(cfg)   # template built once: time the restore alone
+    us_restore = _time(
+        lambda: snap_io.restore_snapshot(like, snap_dir, 0), n=5)
+    REC.emit("persist", f"B8_snapshot[rows={rows}]", us_save,
+             f"{live} live edges (restore {us_restore:.0f} us)",
+             num_rows=rows, live_edges=live,
+             restore_us=round(us_restore, 1))
+    shutil.rmtree(snap_dir)
+
+    for fsync in ("always", "rotate", "never"):
+        wal_dir = tempfile.mkdtemp()
+        wal = WriteAheadLog(wal_dir, segment_records=64, fsync=fsync)
+        t0 = time.perf_counter()
+        for s, d in batches:
+            wal.append(s, d)
+        wal.close()
+        us_append = (time.perf_counter() - t0) / n_batches * 1e6
+        # recovery speed: replay every durable batch through update_batch
+        replayed = mc.init(cfg)
+        n_edges = 0
+        t0 = time.perf_counter()
+        for _seq, s, d, w in WriteAheadLog(wal_dir).replay():
+            replayed = mc.update_batch(replayed, jnp.asarray(s),
+                                       jnp.asarray(d), jnp.asarray(w),
+                                       cfg=cfg)
+            n_edges += s.size
+        jax.block_until_ready(replayed.slabs.cnt)
+        eps = n_edges / (time.perf_counter() - t0)
+        REC.emit("persist", f"B8_wal[fsync={fsync}]", us_append,
+                 f"append/batch; replay {eps:.0f} edges/s",
+                 fsync=fsync, batches=n_batches,
+                 replay_edges_per_s=round(eps))
+        shutil.rmtree(wal_dir)
+
+    # N -> M elastic reshard (fake-device subprocess; see B7)
+    rows_sub = 256 if SMOKE else 1024
+    warm = 4 if SMOKE else 12
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    script = textwrap.dedent(f"""
+        import json, os, tempfile, time
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count=8")
+        import numpy as np
+        from repro.core import mcprioq as mc, sharded as sh
+        from repro.data.synthetic import MarkovGraphSampler
+        from repro.serve.engine import ShardedEngine, ShardedServeConfig
+
+        snap_dir = tempfile.mkdtemp()
+        base = mc.MCConfig(num_rows={rows_sub}, capacity=32, sort_passes=1)
+
+        def eng(n):
+            return ShardedEngine(ShardedServeConfig(
+                sharded=sh.ShardedConfig(base=base, num_shards=n,
+                                         bucket_factor=2.0),
+                decay_threshold=1 << 30, snapshot_dir=snap_dir))
+
+        g = MarkovGraphSampler(num_nodes={rows_sub}, out_degree=16, seed=0)
+        e4 = eng(4)
+        for _ in range({warm}):
+            s, d = g.sample_transitions({batch})
+            e4.observe(s, d)
+        e4.checkpoint()
+        snap = e4.store.acquire()
+        try:
+            edges = int(np.sum(np.asarray(snap.state.slabs.cnt) > 0))
+        finally:
+            e4.store.release(snap)
+        for m in (2, 8):
+            em = eng(m)
+            t0 = time.perf_counter()
+            info = em.restore()
+            dt = time.perf_counter() - t0
+            print("ROW " + json.dumps({{
+                "name": f"B8_reshard[N=4;M={{m}}]",
+                "us": dt * 1e6,
+                "derived": f"{{edges / dt:.0f}} edges/s re-ingested "
+                           f"(mode={{info['mode']}})",
+                "from_shards": 4, "to_shards": m, "edges": edges,
+                "edges_per_s": round(edges / dt),
+            }}))
+    """)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    rows_out = [ln[4:] for ln in out.stdout.splitlines()
+                if ln.startswith("ROW ")]
+    if not rows_out:  # keep the grep-able FAILED sentinel in CSV + JSON
+        REC.emit("persist", "B8_reshard[N=4;M=0]", -1.0,
+                 f"FAILED {out.stderr[-200:]}", failed=True, from_shards=4,
+                 to_shards=0, edges=-1, edges_per_s=-1)
+    for ln in rows_out:
+        row = json.loads(ln)
+        us = row.pop("us")
+        REC.emit("persist", row.pop("name"), us, row.pop("derived"), **row)
+    REC.write("persist")
+
+
 # ---------------------------------------------------------------------------
 # schema validation (CI: BENCH_*.json must stay generatable + well-formed)
 # ---------------------------------------------------------------------------
@@ -534,6 +670,11 @@ BENCH_ROW_SCHEMAS = {
     "sharded_routing": {
         "B7_shard_sweep": ("shards", "batch", "edges_per_s", "dropped"),
         "B7_topn": ("shards", "n"),
+    },
+    "persist": {
+        "B8_snapshot": ("num_rows", "live_edges", "restore_us"),
+        "B8_wal": ("fsync", "batches", "replay_edges_per_s"),
+        "B8_reshard": ("from_shards", "to_shards", "edges", "edges_per_s"),
     },
 }
 
@@ -598,6 +739,7 @@ BENCHES = (
     ("hash_vs_scan", bench_hash_vs_scan),
     ("drafter", bench_drafter),
     ("sharded_routing", bench_sharded_routing),
+    ("persist", bench_persist),
 )
 
 

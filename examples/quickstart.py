@@ -1,19 +1,35 @@
-"""Quickstart: the paper's data structure in 60 lines.
+"""Quickstart: the paper's data structure, then durable elastic serving.
 
-Build an online sparse Markov chain, stream transitions into it, query
-"items until cumulative probability >= t", and decay it — the full MCPrioQ
-API surface.
+Part 1 builds an online sparse Markov chain, streams transitions into it,
+queries "items until cumulative probability >= t", and decays it — the full
+MCPrioQ API surface.
+
+Part 2 is the production story (DESIGN.md §10): the same chain behind the
+sharded serving engine with snapshots and a write-ahead log — save, kill
+the "process", and restore **at a different shard count**, getting the
+same answers back.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
+import os
+import shutil
+import tempfile
+
+# part 2 reshards a 4-shard chain onto 2 shards; fake the devices before
+# jax initialises (harmless on a real multi-device host)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import numpy as np
 import jax.numpy as jnp
 
 from repro.core import mcprioq as mc
+from repro.core import sharded as sh
 from repro.data.synthetic import MarkovGraphSampler
+from repro.serve.engine import ShardedEngine, ShardedServeConfig
 
 
-def main():
+def part1_the_data_structure():
     # a ground-truth random graph with Zipf(1.8) edge probabilities
     graph = MarkovGraphSampler(num_nodes=200, out_degree=16, zipf_s=1.8,
                                seed=0)
@@ -52,5 +68,65 @@ def main():
           f"(distribution preserved, cold edges evicted)")
 
 
+def part2_durable_elastic_serving():
+    """save -> kill -> restore at a different shard count (DESIGN.md §10)."""
+    snap_dir = tempfile.mkdtemp(prefix="mcprioq-snap-")
+    wal_dir = tempfile.mkdtemp(prefix="mcprioq-wal-")
+    base = mc.MCConfig(num_rows=512, capacity=32, sort_passes=4)
+    graph = MarkovGraphSampler(num_nodes=300, out_degree=12, zipf_s=1.5,
+                               seed=3)
+
+    def engine_at(num_shards):
+        return ShardedEngine(ShardedServeConfig(
+            sharded=sh.ShardedConfig(base=base, num_shards=num_shards,
+                                     bucket_factor=4.0),
+            decay_threshold=1 << 30,
+            snapshot_dir=snap_dir,   # arms checkpoint()/restore()
+            wal_dir=wal_dir,         # every batch durably logged pre-apply
+            snapshot_every=4))       # background snapshot every 4 observes
+
+    # every learned edge of a row, order-canonicalised: elastic restore
+    # conserves counts exactly but *settles* the order permutation, while a
+    # live chain's order is only approximately sorted (A2) — so the
+    # order-independent view is what must match across the kill
+    def canonical_edges(engine, queries):
+        d, p, n = engine.query(queries, threshold=0.999999, max_items=32)
+        d, p = np.asarray(d), np.asarray(p)
+        key = np.lexsort((d, -p), axis=-1)
+        return (np.take_along_axis(d, key, 1),
+                np.take_along_axis(p, key, 1), np.asarray(n))
+
+    # ---- serve at N=4 shards: observe, snapshot on cadence ----------------
+    engine = engine_at(4)
+    for _ in range(6):
+        src, dst = graph.sample_transitions(1024)
+        engine.observe(src, dst)
+    engine.checkpoint()              # explicit snapshot (cadence also ran)
+    src, dst = graph.sample_transitions(1024)
+    engine.observe(src, dst)         # after the snapshot: WAL-only
+    queries = np.arange(32, dtype=np.int32)
+    before = canonical_edges(engine, queries)
+    print(f"\nserved {engine.stats['updates']} batches at 4 shards, "
+          f"{engine.stats['snapshots']} snapshots, "
+          f"WAL through seq {engine._seq}")
+
+    # ---- kill: drop every in-memory reference -----------------------------
+    del engine                       # all device + host state is gone
+
+    # ---- restore at M=2 shards: elastic reshard + WAL replay --------------
+    revived = engine_at(2)
+    info = revived.restore()
+    print(f"restored snapshot step {info['step']} at 2 shards "
+          f"(mode={info['mode']}, replayed {info['replayed']} WAL batches)")
+    after = canonical_edges(revived, queries)
+    same = all(np.array_equal(a, b) for a, b in zip(before, after))
+    print(f"learned edges after elastic restore match pre-kill chain: {same}")
+    assert same
+
+    shutil.rmtree(snap_dir)
+    shutil.rmtree(wal_dir)
+
+
 if __name__ == "__main__":
-    main()
+    part1_the_data_structure()
+    part2_durable_elastic_serving()

@@ -117,7 +117,21 @@ def restore(tree_like: PyTree, directory: str, step: Optional[int] = None,
         arr = by_key[k]
         if tuple(arr.shape) != tuple(like.shape):
             raise ValueError(f"{k}: shape {arr.shape} != {like.shape}")
-        arr = arr.astype(like.dtype)
+        # cast only within a kind (f64 ckpt -> f32 leaf, i64 -> i32): a
+        # float array restoring into an integer leaf (or vice versa) means
+        # the checkpoint and the template disagree about what the leaf IS,
+        # and a silent astype would truncate/round values instead of
+        # failing.  Explicit kind equality — np.can_cast('same_kind')
+        # alone would still let int checkpoints round into float leaves.
+        like_dtype = np.dtype(like.dtype)
+        if arr.dtype != like_dtype and (
+                arr.dtype.kind != like_dtype.kind
+                or not np.can_cast(arr.dtype, like_dtype,
+                                   casting="same_kind")):
+            raise ValueError(
+                f"{k}: checkpoint dtype {arr.dtype} cannot restore into "
+                f"{like_dtype} without changing kind")
+        arr = arr.astype(like_dtype)
         out.append(jax.device_put(arr, sh) if sh is not None
                    else jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, out), step

@@ -2,10 +2,15 @@
 
 The paper scales by lock-free concurrency on one cache-coherent host.  On a
 TPU pod the equivalent scale-out axis is *node-space sharding*: every shard
-owns ``hash(src) % num_shards`` of the graph, a global update batch is routed
-to owner shards with a fixed-capacity ``all_to_all`` (the same dispatch shape
-as MoE expert-parallel routing), and each shard applies its local update.
-Queries route the same way and the answers are routed back.
+owns a slice of the graph under the two-level ownership map (hash ->
+virtual bucket -> shard, :class:`repro.sharding.ownership.Ownership`;
+DESIGN.md §10), a global update batch is routed to owner shards with a
+fixed-capacity ``all_to_all`` (the same dispatch shape as MoE
+expert-parallel routing), and each shard applies its local update.  Queries
+route the same way and the answers are routed back.  The bucket indirection
+is what makes the chain *elastic*: reassigning a bucket (rebalancing) or
+re-deriving the table at M shards (reshard-on-restore, ``persist/``) moves
+keys without touching the routing machinery.
 
 Every per-shard body dispatches the kernel layer directly (DESIGN.md §9):
 ``_update_local`` runs the pre-aggregated ``ops.slab_update`` pipeline via
@@ -36,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,8 +49,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core import mcprioq as mc
-from repro.core.hashtable import EMPTY, hash_u32
+from repro.core.hashtable import EMPTY
 from repro.kernels import ops
+from repro.sharding.ownership import Ownership
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,17 +60,30 @@ class ShardedConfig:
     num_shards: int
     axis: str = "shard"
     bucket_factor: float = 2.0  # capacity = factor * fair share
+    # two-level hash -> virtual bucket -> shard map (DESIGN.md §10); None =
+    # the default assignment, which reproduces the legacy static hash for
+    # power-of-two shard counts
+    ownership: Optional[Ownership] = None
 
     def bucket_capacity(self, local_batch: int) -> int:
         fair = max(1, local_batch // self.num_shards)
         # never 0: zero-width buckets can route nothing (and break gathers)
         return max(1, int(self.bucket_factor * fair))
 
+    def resolved_ownership(self) -> Ownership:
+        own = self.ownership or Ownership(num_shards=self.num_shards)
+        if own.num_shards != self.num_shards:
+            raise ValueError(
+                f"ownership maps {own.num_shards} shards but config has "
+                f"{self.num_shards}")
+        return own
+
 
 def owner_of(src: jax.Array, num_shards: int) -> jax.Array:
-    """Owner shard of a node id. Uses the high mix bits so the src hash table
-    inside each shard (which uses the low bits) stays well distributed."""
-    return ((hash_u32(src) >> jnp.uint32(8)) % jnp.uint32(num_shards)).astype(jnp.int32)
+    """Owner shard of a node id under the *default* two-level map (kept as
+    the module-level convenience; routed configs use
+    ``ShardedConfig.resolved_ownership().owner_of``)."""
+    return Ownership(num_shards=num_shards).owner_of(src)
 
 
 def init_sharded(cfg: ShardedConfig, mesh: jax.sharding.Mesh) -> mc.MCState:
@@ -140,7 +160,8 @@ def _update_local(state, src, dst, w, scfg: ShardedConfig):
     state = jax.tree_util.tree_map(lambda x: x[0], state)
     n, cap = scfg.num_shards, scfg.bucket_capacity(src.shape[0])
     (bsrc, bdst, bw), _, dropped = _build_buckets(
-        [src, dst, w], owner_of(src, n), n, cap, active=src >= 0)
+        [src, dst, w], scfg.resolved_ownership().owner_of(src), n, cap,
+        active=src >= 0)
     rsrc = jax.lax.all_to_all(bsrc, scfg.axis, 0, 0, tiled=True)
     rdst = jax.lax.all_to_all(bdst, scfg.axis, 0, 0, tiled=True)
     rw = jax.lax.all_to_all(bw, scfg.axis, 0, 0, tiled=True)
@@ -160,7 +181,7 @@ def _query_local(state, src, threshold, max_items, scfg: ShardedConfig):
     n, cap = scfg.num_shards, scfg.bucket_capacity(src.shape[0])
     act = src >= 0
     (bsrc,), pos, dropped = _build_buckets(
-        [src], owner_of(src, n), n, cap, active=act)
+        [src], scfg.resolved_ownership().owner_of(src), n, cap, active=act)
     rsrc = jax.lax.all_to_all(bsrc, scfg.axis, 0, 0, tiled=True)
     d, p, need = mc.query_impl(
         state, rsrc.reshape(-1), threshold, scfg.base, max_items)
@@ -172,7 +193,7 @@ def _query_local(state, src, threshold, max_items, scfg: ShardedConfig):
     p = jax.lax.all_to_all(p, scfg.axis, 0, 0, tiled=True)
     need = jax.lax.all_to_all(need, scfg.axis, 0, 0, tiled=True)
     # un-permute: item i sits at [owner[i], pos[i]]
-    own = owner_of(src, n)
+    own = scfg.resolved_ownership().owner_of(src)
     ok = (pos < cap) & (pos >= 0) & act
     gi = jnp.clip(pos, 0, cap - 1)
     di = d[own, gi]

@@ -11,6 +11,13 @@ fake the devices first):
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python -m repro.launch.serve --num-shards 8 \
       --bucket-factor 2.0 --requests 16 --route-batch 4096
+
+Durable serving (DESIGN.md §10) — snapshot on cadence, write-ahead-log every
+batch, and recover (optionally at a different shard count) with --restore:
+
+  ... --num-shards 8 --snapshot-dir /tmp/mc-snap --snapshot-every 8 \
+      --wal /tmp/mc-wal
+  ... --num-shards 4 --snapshot-dir /tmp/mc-snap --wal /tmp/mc-wal --restore
 """
 
 from __future__ import annotations
@@ -76,16 +83,28 @@ def run(arch: str, smoke: bool, requests: int, prompt_len: int,
 
 def run_sharded(num_shards: int, bucket_factor: float, requests: int,
                 route_batch: int, topn: int, seed: int = 0,
-                decay_threshold: int = 1 << 18, decay_block_rows: int = 1024):
+                decay_threshold: int = 1 << 18, decay_block_rows: int = 1024,
+                snapshot_dir: str = "", snapshot_every: int = 0,
+                wal_dir: str = "", restore: bool = False):
     """Shard-parallel chain serving: route synthetic Zipf transition traffic
     through the ShardedEngine (observe + query per request) and report
-    throughput plus the routing/overflow counters."""
+    throughput plus the routing/overflow counters.  With a snapshot dir the
+    engine checkpoints on cadence (and a WAL makes recovery exact);
+    ``restore=True`` recovers from the newest complete snapshot first —
+    elastically, if it was taken at a different shard count (DESIGN.md §10)."""
     base = mc.MCConfig(num_rows=4096, capacity=64, sort_passes=1,
                        decay_block_rows=decay_block_rows)
     scfg = sh.ShardedConfig(base=base, num_shards=num_shards,
                             bucket_factor=bucket_factor)
     engine = ShardedEngine(ShardedServeConfig(
-        sharded=scfg, decay_threshold=decay_threshold, topn=topn))
+        sharded=scfg, decay_threshold=decay_threshold, topn=topn,
+        snapshot_dir=snapshot_dir or None, snapshot_every=snapshot_every,
+        wal_dir=wal_dir or None))
+    if restore:
+        info = engine.restore()
+        print(f"restored step {info['step']} ({info['mode']}), "
+              f"replayed {info['replayed']} WAL batches "
+              f"through seq {info['wal_seq']}")
     graph = MarkovGraphSampler(num_nodes=4096, out_degree=32, seed=seed)
     rng = np.random.default_rng(seed)
     # compile outside the timed loop (jit caches persist per shape)
@@ -109,7 +128,10 @@ def run_sharded(num_shards: int, bucket_factor: float, requests: int,
           f"dropped_rows={st['dropped_rows']} "
           f"deferred_new={st['deferred_new']}")
     print(f"maintenance: decay_steps={st['decay_steps']} "
-          f"n_rows={st['n_rows']}")
+          f"n_rows={st['n_rows']} snapshots={st['snapshots']}")
+    if snapshot_dir:
+        path = engine.checkpoint()
+        print(f"final checkpoint -> {path}")
     head = ", ".join(
         f"{int(s_)}->{int(d_)}:{float(p_):.3f}"
         for s_, d_, p_ in zip(np.asarray(srcs)[:5], np.asarray(dsts)[:5],
@@ -143,12 +165,29 @@ def main():
                     help="transitions per sharded observe() call")
     ap.add_argument("--topn", type=int, default=16,
                     help="global top-n read size for the sharded path")
+    ap.add_argument("--snapshot-dir", default="",
+                    help="arm durable serving: checkpoint()/restore() + "
+                         "cadence snapshots land here (DESIGN.md §10)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="background snapshot every N observe() calls "
+                         "(0 = only the final/escalation checkpoints)")
+    ap.add_argument("--wal", default="", dest="wal_dir",
+                    help="write-ahead-log directory: every observed batch "
+                         "is durably logged before it is applied, so "
+                         "--restore replays to the exact pre-crash state")
+    ap.add_argument("--restore", action="store_true",
+                    help="recover from the newest complete snapshot before "
+                         "serving (elastic if the snapshot's shard count "
+                         "differs from --num-shards)")
     args = ap.parse_args()
     if args.num_shards > 0:
         run_sharded(args.num_shards, args.bucket_factor, args.requests,
                     args.route_batch, args.topn,
                     decay_threshold=args.decay_threshold,
-                    decay_block_rows=args.decay_block_rows)
+                    decay_block_rows=args.decay_block_rows,
+                    snapshot_dir=args.snapshot_dir,
+                    snapshot_every=args.snapshot_every,
+                    wal_dir=args.wal_dir, restore=args.restore)
         return
     run(args.arch, args.smoke, args.requests, args.prompt_len,
         args.new_tokens, args.draft_len,

@@ -1,0 +1,34 @@
+"""Durability & elasticity for MCPrioQ chains (DESIGN.md §10).
+
+Three pieces compose into crash recovery and N -> M elastic restore:
+
+* :mod:`repro.persist.snapshot` — epoch-consistent snapshots of ``MCState``
+  (single or shard-stacked), reusing the ``checkpoint/ckpt.py`` manifest+npz
+  layout plus a ``chain.json`` sidecar (config, shard count, WAL position).
+* :mod:`repro.persist.wal` — append-only segmented write-ahead log of
+  observed ``(src, dst, w)`` batches with CRC-framed records, torn-tail
+  detection and an explicit fsync policy.
+* :mod:`repro.persist.reshard` — restores a snapshot taken at N shards onto
+  M shards by extracting the live edges host-side and re-routing them
+  through the pre-aggregated ``slab_update`` path under the two-level
+  :class:`repro.sharding.ownership.Ownership` map.
+
+Recovery contract: ``state = restore(latest complete snapshot)`` then replay
+WAL records with ``seq > snapshot.wal_seq`` through the same (deterministic)
+update pipeline — bit-exact on the unsharded path, exact-modulo-approximate-
+order on an elastic reshard.
+"""
+
+from repro.persist.snapshot import (  # noqa: F401
+    latest_complete_step,
+    load_meta,
+    restore_snapshot,
+    save_snapshot,
+    save_snapshot_async,
+)
+from repro.persist.wal import WriteAheadLog  # noqa: F401
+from repro.persist.reshard import (  # noqa: F401
+    extract_edges,
+    plan_batches,
+    settle_order,
+)

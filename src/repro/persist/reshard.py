@@ -1,0 +1,128 @@
+"""N -> M elastic restore: re-route a snapshot's live edges (DESIGN.md §10).
+
+Arrays snapshotted at N shards cannot be `device_put` onto M shards: row
+placement is a function of the ownership map, so changing the shard count
+moves *every node whose bucket moved* — the slabs must be rebuilt, not
+resliced.  The trick is that an MCPrioQ is fully described by its live edge
+multiset: ``(src, dst, cnt)`` triples.  Extraction walks the snapshot
+host-side (the src hash table's reverse map labels rows), and re-ingestion
+feeds the triples back through the **existing pre-aggregated slab_update
+path** — the routed update pipeline itself is the reshard engine, so the
+restored chain obeys every routing/capacity invariant by construction.
+
+Two invariants make this exact (tested):
+
+* **Counts are conserved.**  Each unique ``(src, dst)`` appears once with
+  weight ``cnt``; pre-aggregation passes it through untouched and the slow
+  path inserts it with that exact count, so ``cnt``/``tot`` on the restored
+  chain equal the snapshot's wherever capacity suffices (drops are counted,
+  as everywhere else).
+* **Zero routing drops by planning.**  Bucket capacity is per-batch fixed;
+  a Zipf-skewed edge list fed naively can overflow one owner's bucket.
+  :func:`plan_batches` packs each batch with at most ``bucket_capacity``
+  items per destination shard, so the all_to_all provably never drops.
+
+The order permutation is *not* conserved — it is approximate state by the
+paper's own contract (A2).  :func:`settle_order` restores the exact
+descending order after ingestion, which every settled chain converges to.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import mcprioq as mc
+from repro.core import slab as sl
+
+
+def extract_edges(state: mc.MCState
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Live edges of a (possibly shard-stacked) ``MCState``, host-side.
+
+    Returns ``(src, dst, cnt)`` int32 arrays in deterministic
+    (shard, row, slot) order.  Rows whose src id cannot be recovered from
+    the hash table are skipped (cannot happen while the src-table invariant
+    holds; defensive for corrupted snapshots).
+    """
+    host = jax.tree_util.tree_map(np.asarray, jax.device_get(state))
+    keys, vals = host.src_table.keys, host.src_table.vals
+    dst, cnt = host.slabs.dst, host.slabs.cnt
+    if keys.ndim == 1:  # unsharded: treat as one shard
+        keys, vals = keys[None], vals[None]
+        dst, cnt = dst[None], cnt[None]
+    srcs, dsts, cnts = [], [], []
+    num_rows = dst.shape[1]
+    for s in range(keys.shape[0]):
+        row_src = np.full((num_rows,), -1, np.int32)
+        valid = (keys[s] >= 0) & (vals[s] >= 0) & (vals[s] < num_rows)
+        row_src[vals[s][valid]] = keys[s][valid]
+        live = (cnt[s] > 0) & (row_src >= 0)[:, None]
+        rows, slots = np.nonzero(live)
+        srcs.append(row_src[rows])
+        dsts.append(dst[s][rows, slots])
+        cnts.append(cnt[s][rows, slots])
+    return (np.concatenate(srcs).astype(np.int32),
+            np.concatenate(dsts).astype(np.int32),
+            np.concatenate(cnts).astype(np.int32))
+
+
+def plan_batches(src: np.ndarray, dst: np.ndarray, w: np.ndarray,
+                 owner: np.ndarray, num_shards: int, slice_len: int,
+                 bucket_capacity: int
+                 ) -> Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+    """Pack edges into routed-update batches that provably never drop.
+
+    The routed path slices a global batch into ``num_shards`` contiguous
+    per-shard slices of ``slice_len`` items and enforces bucket capacity
+    **per (source slice, destination shard)** pair, so that pair count is
+    the constraint to plan against.  Greedy fill: each slice draws at most
+    ``bucket_capacity`` items per destination queue (round-robin start so
+    skewed owners don't monopolise slice 0) and at most ``slice_len``
+    total; slice tails pad with inactive (-1) items, which consume no
+    bucket capacity.  Yields ``(src, dst, w)`` global batches of exactly
+    ``num_shards * slice_len`` items — already a shard multiple, so the
+    engine's host-side padding is a no-op and slice alignment is preserved.
+
+    Covers every edge exactly once; terminates because every non-empty
+    round moves at least one item.
+    """
+    queues = [list(np.nonzero(owner == d)[0]) for d in range(num_shards)]
+    heads = [0] * num_shards
+    wave = 0
+    while any(heads[d] < len(queues[d]) for d in range(num_shards)):
+        g_src = np.full((num_shards, slice_len), -1, np.int32)
+        g_dst = np.zeros((num_shards, slice_len), np.int32)
+        g_w = np.zeros((num_shards, slice_len), np.int32)
+        for s in range(num_shards):
+            fill = 0
+            for j in range(num_shards):
+                d = (s + wave + j) % num_shards
+                room = min(bucket_capacity, slice_len - fill)
+                take = min(room, len(queues[d]) - heads[d])
+                if take <= 0:
+                    continue
+                idx = queues[d][heads[d]:heads[d] + take]
+                heads[d] += take
+                g_src[s, fill:fill + take] = src[idx]
+                g_dst[s, fill:fill + take] = dst[idx]
+                g_w[s, fill:fill + take] = w[idx]
+                fill += take
+                if fill >= slice_len:
+                    break
+        wave += 1
+        yield g_src.reshape(-1), g_dst.reshape(-1), g_w.reshape(-1)
+
+
+def settle_order(state: mc.MCState) -> mc.MCState:
+    """Exact descending order on every row (stable argsort, ties to the
+    lower slot id — the same tie-break a fully settled odd-even network
+    reaches from slot order).  Applied once after re-ingestion; subsequent
+    updates resume the normal approximate odd-even maintenance."""
+    cnt = state.slabs.cnt
+    flat = cnt.reshape(-1, cnt.shape[-1])
+    order = sl.full_sort(flat, None).reshape(cnt.shape)
+    slabs = state.slabs._replace(order=order.astype(state.slabs.order.dtype))
+    return state._replace(slabs=slabs)

@@ -1,0 +1,141 @@
+"""Epoch-consistent chain snapshots (DESIGN.md §10).
+
+A snapshot is one ``step_<n>/`` directory in the ``checkpoint/ckpt.py``
+manifest+npz layout plus a ``chain.json`` sidecar carrying what arrays alone
+cannot: the ``MCConfig`` the shapes were built from, the shard count the
+leading state dim encodes, the ownership assignment, and ``wal_seq`` — the
+WAL position the arrays are consistent with (replay starts *after* it).
+
+Consistency point: the caller captures the state inside the Engine's
+writer-lock publish cycle (acquire -> observe -> maintain -> publish), so a
+snapshot is always a *published* epoch — never a torn mid-update view.  The
+EpochStore makes this nearly free: published pytrees are immutable, so the
+device->host gather can race nothing.
+
+Commit protocol (crash-safe): ``chain.json`` and ``arrays.npz`` are written
+first, ``manifest.json`` is renamed into place last (the atomic commit, same
+as ``ckpt.save``).  A crash mid-snapshot leaves a directory without a valid
+manifest — or, under weaker filesystems, a manifest with a truncated npz —
+so readers must use :func:`latest_complete_step`, which verifies every array
+actually loads before trusting a step, and falls back to the previous
+complete one.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+from repro.checkpoint import ckpt
+
+PyTree = Any
+
+META_NAME = "chain.json"
+
+
+def step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:08d}")
+
+
+def _write_meta(path: str, meta: dict) -> None:
+    tmp = os.path.join(path, META_NAME + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(meta, f, indent=1)
+    os.replace(tmp, os.path.join(path, META_NAME))
+
+
+def save_snapshot(state: PyTree, directory: str, step: int,
+                  meta: dict) -> str:
+    """Write ``step_<n>/{chain.json, arrays.npz, manifest.json}``.
+
+    ``chain.json`` lands before ``ckpt.save`` commits the manifest, so a
+    committed manifest implies the sidecar exists.  Returns the step path.
+    """
+    path = step_dir(directory, step)
+    os.makedirs(path, exist_ok=True)
+    _write_meta(path, meta)
+    return ckpt.save(state, directory, step)
+
+
+def save_snapshot_async(state: PyTree, directory: str, step: int,
+                        meta: dict) -> threading.Thread:
+    """Background-cadence variant: the device->host gather happens on the
+    caller thread (under the Engine's writer lock, so the captured epoch is
+    exact), file IO on a worker thread with the same commit ordering."""
+    path = step_dir(directory, step)
+    os.makedirs(path, exist_ok=True)
+    _write_meta(path, meta)
+    return ckpt.save_async(state, directory, step)
+
+
+# ---------------------------------------------------------------------------
+# completeness checking (crash-during-snapshot recovery)
+# ---------------------------------------------------------------------------
+
+
+def _step_is_complete(path: str, *, require_meta: bool = True) -> bool:
+    """A step is complete iff the manifest parses, the sidecar parses (when
+    required) and every manifest key loads from the npz with its recorded
+    shape.  Anything else — missing files, torn json, truncated zip — is an
+    aborted snapshot and must be skipped, never half-restored."""
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        keys = manifest["keys"]
+        shapes = manifest["shapes"]
+        if require_meta:
+            with open(os.path.join(path, META_NAME)) as f:
+                json.load(f)
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            for i, (key, shape) in enumerate(zip(keys, shapes)):
+                arr = data[f"a{i}"]  # forces the read; truncation raises
+                if tuple(arr.shape) != tuple(shape):
+                    return False
+        return True
+    except Exception:
+        return False
+
+
+def latest_complete_step(directory: str,
+                         require_meta: bool = True) -> Optional[int]:
+    """Newest step whose snapshot is fully readable (see
+    :func:`_step_is_complete`); ``None`` when no complete snapshot exists."""
+    if not os.path.isdir(directory):
+        return None
+    steps = sorted(
+        (int(name.split("_")[1]) for name in os.listdir(directory)
+         if name.startswith("step_")),
+        reverse=True)
+    for step in steps:
+        if _step_is_complete(step_dir(directory, step),
+                             require_meta=require_meta):
+            return step
+    return None
+
+
+def load_meta(directory: str, step: int) -> dict:
+    with open(os.path.join(step_dir(directory, step), META_NAME)) as f:
+        return json.load(f)
+
+
+def restore_snapshot(tree_like: PyTree, directory: str,
+                     step: Optional[int] = None,
+                     shardings: Optional[PyTree] = None
+                     ) -> Tuple[PyTree, dict, int]:
+    """Restore the newest *complete* snapshot (or ``step``) into the
+    structure of ``tree_like``.  Returns ``(state, meta, step)``."""
+    if step is None:
+        step = latest_complete_step(directory)
+        if step is None:
+            raise FileNotFoundError(
+                f"no complete snapshot under {directory}")
+    elif not _step_is_complete(step_dir(directory, step)):
+        raise FileNotFoundError(
+            f"snapshot step {step} under {directory} is incomplete")
+    meta = load_meta(directory, step)
+    state, _ = ckpt.restore(tree_like, directory, step, shardings=shardings)
+    return state, meta, step

@@ -1,0 +1,209 @@
+"""Append-only write-ahead log of observed transition batches (DESIGN.md §10).
+
+The learner's input is a stream of ``(src, dst, w)`` int32 batches; every
+state transition of the chain is a pure function of (previous state, batch),
+so logging the *batches* — not the state deltas — makes recovery a replay:
+``restore(latest snapshot)`` then re-apply every record with
+``seq > snapshot.wal_seq`` through the same update pipeline.  Determinism of
+``update_batch`` / ``maybe_decay`` (pre-aggregation sorts are stable, the
+slow path is a sequential scan, kernels are bit-exact across impls) makes
+the replay reproduce the pre-crash state *bit-exactly* on the unsharded
+path — tested, not assumed.
+
+Format: segments ``wal_<first_seq:016d>.seg`` of length-framed records::
+
+    header  = <4s I q i>  magic 'MCWL', crc32(payload), seq, n_items
+    payload = src[n] int32le + dst[n] int32le + w[n] int32le
+
+A record is valid iff the header is whole, the magic matches, the payload is
+whole and the CRC agrees.  An invalid record ends its *segment* — the torn
+tail a crash mid-append leaves is as if the record never happened (its batch
+was also never applied: append happens *before* apply, hence write-AHEAD).
+Later segments are still replayed, but only while sequence numbers stay
+contiguous: after a crash the writer resumes exactly at the torn record's
+seq in a fresh segment (so the chain continues through the tear), whereas a
+genuine mid-log gap (bit rot swallowing whole records with valid data
+after) breaks contiguity and replay refuses to resurrect anything past it.
+
+fsync policy (assumption A11): ``always`` fsyncs file data after every
+append (strongest; one fsync per batch), ``rotate`` (default) fsyncs on
+segment close and relies on the OS for the open segment (bounded loss: at
+most one segment of batches), ``never`` leaves it all to the OS.  Directory
+entries are fsynced on segment create/close under ``always``/``rotate``.
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+import zlib
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+_MAGIC = b"MCWL"
+_HEADER = struct.Struct("<4sIqi")
+
+FSYNC_POLICIES = ("always", "rotate", "never")
+
+
+def _fsync_dir(directory: str) -> None:
+    fd = os.open(directory, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+class WriteAheadLog:
+    """Segmented, CRC-framed, fsync-policied append log of int32 batches."""
+
+    def __init__(self, directory: str, *, segment_records: int = 256,
+                 fsync: str = "rotate"):
+        if fsync not in FSYNC_POLICIES:
+            raise ValueError(f"fsync must be one of {FSYNC_POLICIES}")
+        if segment_records < 1:
+            raise ValueError("segment_records must be >= 1")
+        self.directory = directory
+        self.segment_records = segment_records
+        self.fsync = fsync
+        os.makedirs(directory, exist_ok=True)
+        self._fh = None
+        self._fh_records = 0
+        self._next_seq = self._scan_next_seq()
+
+    # -- discovery ------------------------------------------------------
+    def _segments(self):
+        if not os.path.isdir(self.directory):
+            return []
+        names = sorted(n for n in os.listdir(self.directory)
+                       if n.startswith("wal_") and n.endswith(".seg"))
+        return [os.path.join(self.directory, n) for n in names]
+
+    def _scan_next_seq(self) -> int:
+        last = -1
+        for _, seq, *_ in self._iter_records():
+            last = max(last, seq)
+        return last + 1
+
+    # -- write side -----------------------------------------------------
+    def append(self, src, dst, w=None) -> int:
+        """Durably log one batch; returns its sequence number.  Call BEFORE
+        applying the batch to the chain (write-ahead ordering)."""
+        src = np.asarray(src, dtype="<i4").reshape(-1)
+        dst = np.asarray(dst, dtype="<i4").reshape(-1)
+        w = (np.ones_like(src) if w is None
+             else np.asarray(w, dtype="<i4").reshape(-1))
+        if not (src.size == dst.size == w.size):
+            raise ValueError(
+                f"ragged batch: {src.size}/{dst.size}/{w.size} items")
+        seq = self._next_seq
+        payload = src.tobytes() + dst.tobytes() + w.tobytes()
+        record = _HEADER.pack(_MAGIC, zlib.crc32(payload), seq,
+                              src.size) + payload
+        if self._fh is None:
+            path = os.path.join(self.directory, f"wal_{seq:016d}.seg")
+            self._fh = open(path, "ab")
+            if self.fsync != "never":
+                _fsync_dir(self.directory)
+        self._fh.write(record)
+        self._fh.flush()
+        if self.fsync == "always":
+            os.fsync(self._fh.fileno())
+        self._fh_records += 1
+        self._next_seq = seq + 1
+        if self._fh_records >= self.segment_records:
+            self._rotate()
+        return seq
+
+    def _rotate(self) -> None:
+        if self._fh is None:
+            return
+        if self.fsync in ("always", "rotate"):
+            os.fsync(self._fh.fileno())
+        self._fh.close()
+        self._fh = None
+        self._fh_records = 0
+
+    def close(self) -> None:
+        self._rotate()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- read side ------------------------------------------------------
+    def _iter_records(self):
+        """Yield ``(path, seq, src, dst, w)`` in strictly contiguous
+        sequence order.
+
+        An invalid record (bad magic/length/CRC, or a trailing partial —
+        the torn tail of a crash mid-append) ends its segment; scanning
+        continues with the next segment, because a post-crash writer
+        resumes at the torn seq in a fresh segment (the tear hides no
+        acknowledged record).  Contiguity is enforced across everything
+        yielded: a segment whose first record does not follow the previous
+        yielded seq means records were *lost* mid-log, and everything past
+        that gap is untrusted — stop."""
+        expected = None
+        for path in self._segments():
+            with open(path, "rb") as f:
+                data = f.read()
+            off = 0
+            while off + _HEADER.size <= len(data):
+                magic, crc, seq, n = _HEADER.unpack_from(data, off)
+                end = off + _HEADER.size + 3 * 4 * n
+                if magic != _MAGIC or n < 0 or end > len(data):
+                    break  # torn/corrupt: ends this segment only
+                payload = data[off + _HEADER.size:end]
+                if zlib.crc32(payload) != crc:
+                    break
+                if expected is not None and seq != expected:
+                    return  # gap: records lost, stop trusting the log
+                src = np.frombuffer(payload, dtype="<i4", count=n)
+                dst = np.frombuffer(payload, dtype="<i4", count=n,
+                                    offset=4 * n)
+                w = np.frombuffer(payload, dtype="<i4", count=n,
+                                  offset=8 * n)
+                yield path, seq, src, dst, w
+                expected = seq + 1
+                off = end
+
+    def replay(self, after_seq: int = -1
+               ) -> Iterator[Tuple[int, np.ndarray, np.ndarray, np.ndarray]]:
+        """Yield ``(seq, src, dst, w)`` for every durable record with
+        ``seq > after_seq``, in sequence order."""
+        for _, seq, src, dst, w in self._iter_records():
+            if seq > after_seq:
+                yield seq, src, dst, w
+
+    # -- maintenance ----------------------------------------------------
+    def truncate_through(self, seq: int) -> int:
+        """Delete segments made redundant by a snapshot at ``seq`` (every
+        record of the segment has ``seq' <= seq``).  Returns the number of
+        segments removed.  Conservative: a segment containing any newer
+        record is kept whole."""
+        removed = 0
+        keep_from: Optional[str] = None
+        last_by_path: dict = {}
+        for path, rec_seq, *_ in self._iter_records():
+            last_by_path[path] = rec_seq
+        for path in self._segments():
+            if path == (self._fh and self._fh.name):
+                continue  # never unlink the open segment
+            if last_by_path.get(path, seq + 1) <= seq and keep_from is None:
+                os.unlink(path)
+                removed += 1
+            else:
+                keep_from = keep_from or path
+        return removed
+
+    @property
+    def next_seq(self) -> int:
+        return self._next_seq
+
+    @property
+    def last_seq(self) -> int:
+        return self._next_seq - 1

@@ -24,11 +24,13 @@ from __future__ import annotations
 import dataclasses
 import functools
 import threading
+import time
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core import mcprioq as mc
@@ -36,7 +38,12 @@ from repro.core import sharded as sh
 from repro.core import speculative as spec
 from repro.core.epoch import EpochStore
 from repro.models.model import Model
+from repro.persist import reshard as rs
+from repro.persist import snapshot as snapshot_io
+from repro.persist.wal import WriteAheadLog
+from repro.runtime.fault_tolerance import StepWatchdog, WatchdogConfig
 from repro.serve import sampling
+from repro.sharding.ownership import Ownership
 
 PyTree = Any
 
@@ -239,6 +246,16 @@ class ShardedServeConfig:
     threshold: float = 0.9           # default cumulative-probability target
     max_items: int = 16              # per-query emission window
     topn: int = 16                   # global top-n read size
+    # durability & elasticity (DESIGN.md §10): a snapshot dir arms
+    # checkpoint()/restore(); snapshot_every > 0 snapshots in the background
+    # every that many observe() calls; a WAL dir makes recovery exact
+    # (snapshot + deterministic replay of the batches logged after it)
+    snapshot_dir: Optional[str] = None
+    snapshot_every: int = 0
+    wal_dir: Optional[str] = None
+    wal_fsync: str = "rotate"        # always | rotate | never (A11)
+    observe_deadline_s: float = 60.0  # StepWatchdog budget per observe()
+    reingest_slice_len: int = 256    # per-shard batch slice during reshard
 
 
 class ShardedEngine:
@@ -287,18 +304,40 @@ class ShardedEngine:
         # single-writer invariant (same reasoning as Engine._learn): two
         # overlapping observe() calls must not publish from the same base
         self._write_lock = threading.Lock()
+        # routing-consistency lock: readers hold it only while pairing a
+        # routed program with a snapshot (microseconds — never during the
+        # device compute), and rebalance/restore hold it while swapping
+        # (rebind + publish) so a reader can never combine the NEW
+        # ownership's routing with the OLD state's row placement (or vice
+        # versa).  Reads stay lock-free with respect to the learner; they
+        # briefly serialise only against a rebalance swap.
+        self._route_lock = threading.Lock()
         # readers are lock-free on their snapshots, but the stats dict is
         # shared by all of them — unguarded read-modify-write of the drop
         # counters would silently undercount, defeating the observability
         # contract the counters exist for
         self._stats_lock = threading.Lock()
         self.stats = {"updates": 0, "queries": 0, "topn_calls": 0,
-                      "query_dropped": 0, "topn_dropped": 0}
+                      "query_dropped": 0, "topn_dropped": 0, "snapshots": 0}
         snap = self.store.acquire()
         try:
             self.stats.update(mc.counter_stats(snap.state))
         finally:
             self.store.release(snap)
+        # durability (DESIGN.md §10): WAL position of the published state;
+        # -1 = nothing applied.  The WAL resumes its sequence from disk, so
+        # an engine pointed at an existing log must restore() before
+        # observing or the snapshot/WAL positions drift apart.
+        self._seq = -1
+        self.wal = (WriteAheadLog(cfg.wal_dir, fsync=cfg.wal_fsync)
+                    if cfg.wal_dir else None)
+        self._snapshot_thread: Optional[threading.Thread] = None
+        # straggler escalation -> checkpoint-now, so a kill after a stall
+        # loses nothing (runtime/fault_tolerance.py contract)
+        self.watchdog = (StepWatchdog(
+            WatchdogConfig(deadline_s=cfg.observe_deadline_s),
+            on_escalate=self._escalate_snapshot)
+            if cfg.snapshot_dir else None)
 
     # ------------------------------------------------------------------
     def _cached_fn(self, cache: Dict, key, build):
@@ -334,26 +373,49 @@ class ShardedEngine:
     def observe(self, src, dst, weights=None) -> None:
         """Route one transition batch to its owner shards and learn from it.
 
-        Serialised writer: acquire -> update (kernel-routed all_to_all
-        dispatch) -> maintain (rolling per-shard decay) -> publish.
+        Serialised writer: WAL append (write-AHEAD: the batch is durable
+        before it is applied) -> acquire -> update (kernel-routed
+        all_to_all dispatch) -> maintain (rolling per-shard decay) ->
+        publish -> cadence snapshot.  The watchdog observes the step
+        duration outside the lock; escalation checkpoints immediately.
         """
-        src = jnp.asarray(src, jnp.int32)
-        dst = jnp.asarray(dst, jnp.int32)
-        w = (jnp.ones(src.shape, jnp.int32) if weights is None
-             else jnp.asarray(weights, jnp.int32))
-        src, dst, w, _ = self._pad(src, dst, w)
+        src = np.asarray(src, np.int32)
+        dst = np.asarray(dst, np.int32)
+        w = (np.ones(src.shape, np.int32) if weights is None
+             else np.asarray(weights, np.int32))
+        t0 = time.monotonic()
         with self._write_lock:
-            snap = self.store.acquire()
-            try:
-                state = self._update(snap.state, src, dst, w)
-                state = self._maintain(state)
-            finally:
-                self.store.release(snap)
-            self.store.publish(state)
-            counters = mc.counter_stats(state)
-            with self._stats_lock:
-                self.stats["updates"] += 1
-                self.stats.update(counters)
+            if self.wal is not None:
+                self._seq = self.wal.append(src, dst, w)
+            else:
+                self._seq += 1
+            self._apply_locked(src, dst, w)
+            every = self.cfg.snapshot_every
+            if (every and self.cfg.snapshot_dir
+                    and (self._seq + 1) % every == 0):
+                self._snapshot_locked(sync=False)
+        if self.watchdog is not None:
+            self.watchdog.observe(time.monotonic() - t0)
+
+    def _apply_locked(self, src, dst, w) -> None:
+        """One learner cycle against the published state (caller holds the
+        write lock).  Shared verbatim by observe() and WAL replay — the
+        recovery determinism contract is 'same batches through the same
+        pipeline', so there must only be one pipeline."""
+        src, dst, w, _ = self._pad(jnp.asarray(src, jnp.int32),
+                                   jnp.asarray(dst, jnp.int32),
+                                   jnp.asarray(w, jnp.int32))
+        snap = self.store.acquire()
+        try:
+            state = self._update(snap.state, src, dst, w)
+            state = self._maintain(state)
+        finally:
+            self.store.release(snap)
+        self.store.publish(state)
+        counters = mc.counter_stats(state)
+        with self._stats_lock:
+            self.stats["updates"] += 1
+            self.stats.update(counters)
 
     # ------------------------------------------------------------------
     def query(self, src, threshold: Optional[float] = None,
@@ -363,13 +425,14 @@ class ShardedEngine:
         n_needed[B])``; routing drops land in ``stats['query_dropped']``."""
         t = float(self.cfg.threshold if threshold is None else threshold)
         k = int(self.cfg.max_items if max_items is None else max_items)
-        fn = self._cached_fn(
-            self._query_fns, (t, k),
-            lambda: sh.make_query_fn(self.cfg.sharded, self.mesh,
-                                     threshold=t, max_items=k))
+        with self._route_lock:   # pair the program with its snapshot
+            fn = self._cached_fn(
+                self._query_fns, (t, k),
+                lambda: sh.make_query_fn(self.cfg.sharded, self.mesh,
+                                         threshold=t, max_items=k))
+            snap = self.store.acquire()
         src = jnp.asarray(src, jnp.int32)
         src, b = self._pad(src)
-        snap = self.store.acquire()
         try:
             d, p, n, dropped = fn(snap.state, src)
         finally:
@@ -388,10 +451,11 @@ class ShardedEngine:
         ``stats['topn_dropped']`` (last call's value is kept — it is a
         property of the current state, not a running total)."""
         n = int(self.cfg.topn if n is None else n)
-        fn = self._cached_fn(
-            self._topn_fns, n,
-            lambda: sh.make_topn_fn(self.cfg.sharded, self.mesh, n))
-        snap = self.store.acquire()
+        with self._route_lock:   # pair the program with its snapshot
+            fn = self._cached_fn(
+                self._topn_fns, n,
+                lambda: sh.make_topn_fn(self.cfg.sharded, self.mesh, n))
+            snap = self.store.acquire()
         try:
             srcs, dsts, probs, dropped = fn(snap.state)
         finally:
@@ -401,3 +465,209 @@ class ShardedEngine:
             self.stats["topn_calls"] += 1
             self.stats["topn_dropped"] = n_dropped
         return srcs, dsts, probs
+
+    # ------------------------------------------------------------------
+    # durability & elasticity (DESIGN.md §10)
+    # ------------------------------------------------------------------
+
+    def checkpoint(self, step: Optional[int] = None, sync: bool = True) -> str:
+        """Snapshot the published chain inside the writer-lock publish cycle.
+
+        The captured state is always a published epoch (immutable pytree)
+        and ``wal_seq`` is captured under the same lock, so snapshot and
+        log position can never disagree.  ``sync=False`` runs the file IO
+        on a worker thread (the device->host gather still happens here).
+        """
+        if not self.cfg.snapshot_dir:
+            raise ValueError("ShardedServeConfig.snapshot_dir not set")
+        with self._write_lock:
+            return self._snapshot_locked(step=step, sync=sync)
+
+    def _snapshot_locked(self, step: Optional[int] = None,
+                         sync: bool = True) -> str:
+        scfg = self.cfg.sharded
+        own = scfg.resolved_ownership()
+        step = self._seq + 1 if step is None else step
+        meta = {
+            "wal_seq": self._seq,
+            "num_shards": scfg.num_shards,
+            "bucket_factor": scfg.bucket_factor,
+            "ownership": {"num_buckets": own.num_buckets,
+                          "assignment": list(own.resolved_assignment())},
+            "base_cfg": dataclasses.asdict(scfg.base),
+            "store_version": self.store.version,
+        }
+        snap = self.store.acquire()
+        try:
+            if sync:
+                path = snapshot_io.save_snapshot(
+                    snap.state, self.cfg.snapshot_dir, step, meta)
+            else:
+                self._snapshot_thread = snapshot_io.save_snapshot_async(
+                    snap.state, self.cfg.snapshot_dir, step, meta)
+                path = snapshot_io.step_dir(self.cfg.snapshot_dir, step)
+        finally:
+            self.store.release(snap)
+        with self._stats_lock:
+            self.stats["snapshots"] += 1
+        return path
+
+    def _escalate_snapshot(self) -> None:
+        # watchdog escalation fires outside the write lock (observe() calls
+        # watchdog.observe after releasing it), so taking it here is safe
+        self.checkpoint()
+
+    def restore(self, step: Optional[int] = None, replay: bool = True) -> dict:
+        """Recover from the newest complete snapshot (+ WAL replay).
+
+        Same shard count: exact array restore — bit-identical state,
+        including the ownership map (the engine rebinds its routing
+        programs if the snapshot's assignment differs).  Different shard
+        count: elastic reshard — the snapshot's live edges re-route
+        through the pre-aggregated update path under this engine's
+        ownership map (``persist/reshard.py``), then the order settles
+        exactly.  Either way, WAL records with ``seq > wal_seq`` replay
+        through the one observe pipeline.
+        """
+        directory = self.cfg.snapshot_dir
+        if not directory:
+            raise ValueError("ShardedServeConfig.snapshot_dir not set")
+        if step is None:
+            step = snapshot_io.latest_complete_step(directory)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no complete snapshot under {directory}")
+        meta = snapshot_io.load_meta(directory, step)
+        base_old = mc.MCConfig(**meta["base_cfg"])
+        n_old = int(meta["num_shards"])
+        replayed = 0
+        # one write-lock hold end to end: a concurrent observe() slipping
+        # between publish and replay would be WAL-appended AND re-read by
+        # the replay generator — applied twice
+        with self._write_lock:
+            scfg = self.cfg.sharded
+            new_scfg = None
+            if n_old == scfg.num_shards:
+                mode = "exact"
+                snap_own = Ownership(
+                    num_shards=n_old,
+                    num_buckets=int(meta["ownership"]["num_buckets"]),
+                    assignment=tuple(meta["ownership"]["assignment"]))
+                own_now = scfg.resolved_ownership()
+                if (snap_own.resolved_assignment()
+                        != own_now.resolved_assignment()
+                        or dataclasses.asdict(base_old)
+                        != dataclasses.asdict(scfg.base)):
+                    # rows live where the snapshot's map routed them; the
+                    # engine must route future traffic the same way
+                    new_scfg = dataclasses.replace(
+                        scfg, base=base_old, ownership=snap_own)
+                like = self._stacked_like(base_old, n_old)
+                shardings = jax.tree_util.tree_map(
+                    lambda _: NamedSharding(self.mesh, P(scfg.axis)), like)
+                state, _, _ = snapshot_io.restore_snapshot(
+                    like, directory, step, shardings)
+            else:
+                mode = "reshard"
+                like = self._stacked_like(base_old, n_old)
+                old_state, _, _ = snapshot_io.restore_snapshot(
+                    like, directory, step)
+                state = self._reingest(old_state, scfg)
+            # swap: readers must never pair the new routing with the old
+            # snapshot (or vice versa), so rebind + publish are atomic
+            # with respect to their (program, snapshot) pairing
+            with self._route_lock:
+                if new_scfg is not None:
+                    self._rebind(new_scfg)
+                self.store.publish(state)
+            self._seq = int(meta["wal_seq"])
+            with self._stats_lock:
+                self.stats.update(mc.counter_stats(state))
+            if replay and self.wal is not None:
+                for seq, src, dst, w in self.wal.replay(
+                        after_seq=self._seq):
+                    self._seq = seq
+                    self._apply_locked(src, dst, w)
+                    replayed += 1
+        return {"step": step, "mode": mode, "replayed": replayed,
+                "wal_seq": self._seq}
+
+    def reassign(self, ownership: Ownership) -> dict:
+        """Live rebalancing: install a new bucket -> shard assignment and
+        migrate by re-routing the live edges — the same machinery as
+        elastic restore, at a constant shard count (ROADMAP "cross-shard
+        rebalancing").  Readers keep serving the pre-migration snapshot
+        until the re-ingested state publishes."""
+        scfg = self.cfg.sharded
+        if ownership.num_shards != scfg.num_shards:
+            raise ValueError(
+                f"reassign keeps the shard count: map has "
+                f"{ownership.num_shards}, engine has {scfg.num_shards}")
+        new_scfg = dataclasses.replace(scfg, ownership=ownership)
+        with self._write_lock:
+            snap = self.store.acquire()
+            try:
+                old_state = jax.device_get(snap.state)
+            finally:
+                self.store.release(snap)
+            # migrate FIRST, against local programs for the new map;
+            # readers keep pairing the old routing with the old snapshot
+            # until the atomic swap below
+            state = self._reingest(old_state, new_scfg)
+            with self._route_lock:
+                self._rebind(new_scfg)
+                self.store.publish(state)
+            with self._stats_lock:
+                self.stats.update(mc.counter_stats(state))
+        return {"num_buckets": ownership.num_buckets,
+                "version": self.store.version}
+
+    # -- internals ------------------------------------------------------
+
+    def _rebind(self, scfg: sh.ShardedConfig) -> None:
+        """Swap the static sharded config and rebuild every routed program
+        (ownership/base changes are baked into them as constants)."""
+        self.cfg = dataclasses.replace(self.cfg, sharded=scfg)
+        self._update = sh.make_update_fn(scfg, self.mesh)
+        self._maintain = sh.make_maintain_fn(
+            scfg, self.mesh, total_threshold=self.cfg.decay_threshold)
+        with self._compile_lock:
+            self._query_fns.clear()
+            self._topn_fns.clear()
+
+    def _stacked_like(self, base: mc.MCConfig, num_shards: int):
+        """Host-side template with the stacked [num_shards, ...] shapes a
+        snapshot at that config was written with."""
+        one = mc.init(base)
+        return jax.tree_util.tree_map(
+            lambda x: np.broadcast_to(np.asarray(x)[None],
+                                      (num_shards,) + x.shape), one)
+
+    def _reingest(self, old_state: mc.MCState,
+                  scfg: sh.ShardedConfig) -> mc.MCState:
+        """Re-route a state's live edges into a fresh chain under
+        ``scfg``'s ownership map, through the routed pre-aggregated update
+        path, with drop-free batch planning; settle the order exactly.
+        Builds its own programs — deliberately independent of the
+        engine's installed routing, so callers can migrate before
+        swapping."""
+        src, dst, cnt = rs.extract_edges(old_state)
+        owner = np.asarray(
+            scfg.resolved_ownership().owner_of(jnp.asarray(src)))
+        slice_len = max(scfg.num_shards, self.cfg.reingest_slice_len)
+        cap = scfg.bucket_capacity(slice_len)
+        # every re-ingested item is a new edge; a bounded slow path would
+        # defer (= silently drop) everything past the prefix, so ingestion
+        # gets its own program with the bound lifted (shapes are identical)
+        ingest_scfg = dataclasses.replace(
+            scfg, base=dataclasses.replace(scfg.base, max_new_per_batch=0))
+        ingest = sh.make_update_fn(ingest_scfg, self.mesh)
+        state = sh.init_sharded(scfg, self.mesh)
+        for bsrc, bdst, bw in rs.plan_batches(
+                src, dst, cnt, owner, scfg.num_shards, slice_len, cap):
+            state = ingest(state, jnp.asarray(bsrc),
+                           jnp.asarray(bdst), jnp.asarray(bw))
+        state = rs.settle_order(state)
+        sharding = NamedSharding(self.mesh, P(scfg.axis))
+        return jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, sharding), state)

@@ -1,3 +1,4 @@
+from repro.sharding.ownership import Ownership  # noqa: F401
 from repro.sharding.specs import (  # noqa: F401
     batch_axes,
     constrain,

@@ -1,0 +1,102 @@
+"""Two-level ownership map: node id -> virtual bucket -> shard (DESIGN.md §10).
+
+The seed's ``owner_of`` was a static hash ``(hash(src) >> 8) % S`` — total and
+cheap, but frozen: changing the shard count rewrites every node's owner, and a
+hot shard (Zipf src skew) cannot shed load without moving *individual nodes*.
+The classic fix (consistent-hashing virtual nodes, Dynamo-style) is a small
+indirection table: nodes hash into ``num_buckets`` **virtual buckets** (far
+more buckets than shards) and an explicit ``assignment[bucket] -> shard``
+table maps buckets to owners.  Reassigning one bucket moves ~1/num_buckets of
+the key space; restoring a snapshot onto M shards is just the default
+assignment at M (`persist/reshard.py` re-routes the live edges).
+
+The default assignment ``bucket % num_shards`` reproduces the seed routing
+bit-for-bit whenever ``num_shards`` divides ``num_buckets`` (every power-of-two
+shard count up to ``num_buckets``), because ``x % B % S == x % S`` when S | B.
+
+Frozen and hashable: the assignment is a tuple, so an ``Ownership`` can ride
+inside the static ``ShardedConfig`` and bake into jitted routing programs as a
+constant — reassignment builds new programs, which is the right cost model
+(rebalancing is rare; routing is the hot path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashtable import hash_u32
+
+
+@dataclasses.dataclass(frozen=True)
+class Ownership:
+    """hash -> virtual bucket -> shard map.  ``assignment=()`` means the
+    default ``bucket % num_shards`` (seed-compatible, see module docstring)."""
+
+    num_shards: int
+    num_buckets: int = 256
+    assignment: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {self.num_shards}")
+        if self.num_buckets & (self.num_buckets - 1) or self.num_buckets < 1:
+            raise ValueError(
+                f"num_buckets must be a power of two, got {self.num_buckets}")
+        if self.assignment:
+            if len(self.assignment) != self.num_buckets:
+                raise ValueError(
+                    f"assignment has {len(self.assignment)} entries for "
+                    f"{self.num_buckets} buckets")
+            bad = [s for s in self.assignment
+                   if not 0 <= s < self.num_shards]
+            if bad:
+                raise ValueError(
+                    f"assignment targets out-of-range shards {sorted(set(bad))} "
+                    f"(num_shards={self.num_shards})")
+
+    # ------------------------------------------------------------------
+    def resolved_assignment(self) -> Tuple[int, ...]:
+        if self.assignment:
+            return self.assignment
+        return tuple(b % self.num_shards for b in range(self.num_buckets))
+
+    def table(self) -> jax.Array:
+        """The bucket -> shard table as an int32 device constant."""
+        return jnp.asarray(self.resolved_assignment(), jnp.int32)
+
+    # ------------------------------------------------------------------
+    def bucket_of(self, src: jax.Array) -> jax.Array:
+        """Virtual bucket of a node id.  Uses the high mix bits so the src
+        hash table inside each shard (low bits) stays well distributed."""
+        return ((hash_u32(src) >> jnp.uint32(8))
+                % jnp.uint32(self.num_buckets)).astype(jnp.int32)
+
+    def owner_of(self, src: jax.Array) -> jax.Array:
+        """Owner shard of a node id: total and static for a fixed map."""
+        return self.table()[self.bucket_of(src)]
+
+    # ------------------------------------------------------------------
+    def reassign(self, bucket: int, shard: int) -> "Ownership":
+        """Move one virtual bucket to ``shard`` (the rebalancing primitive:
+        ~1/num_buckets of the key space migrates)."""
+        if not 0 <= bucket < self.num_buckets:
+            raise ValueError(f"bucket {bucket} out of range")
+        assign = list(self.resolved_assignment())
+        assign[bucket] = shard
+        return dataclasses.replace(self, assignment=tuple(assign))
+
+    def with_num_shards(self, num_shards: int) -> "Ownership":
+        """Default map at a different shard count (N -> M reshard-on-restore:
+        the bucket level is shard-count-invariant, only the table changes)."""
+        return Ownership(num_shards=num_shards, num_buckets=self.num_buckets)
+
+    def shards_of_buckets(self) -> Tuple[Tuple[int, ...], ...]:
+        """Buckets grouped per shard — the inspection view rebalancers use."""
+        groups: list = [[] for _ in range(self.num_shards)]
+        for b, s in enumerate(self.resolved_assignment()):
+            groups[s].append(b)
+        return tuple(tuple(g) for g in groups)

@@ -1,0 +1,578 @@
+"""Durability & elasticity subsystem (DESIGN.md §10): snapshots, WAL,
+crash recovery, N -> M reshard-on-restore, and the two-level ownership map.
+
+Single-shard engines run in-process (the persist machinery is fully
+exercised at num_shards=1); the N=4 -> M={2,8} elastic matrix needs 8 fake
+host devices and runs in a subprocess (device count is fixed at first jax
+init — same pattern as test_sharded_engine.py).
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.core import mcprioq as mc
+from repro.core import sharded as sh
+from repro.persist import reshard as rs
+from repro.persist import snapshot as snap_io
+from repro.persist.wal import WriteAheadLog
+from repro.serve.engine import ShardedEngine, ShardedServeConfig
+from repro.sharding.ownership import Ownership
+
+
+def _distinct_count_batch(n_src=12, n_dst=5, seed=0):
+    srcs, dsts = [], []
+    for s in range(n_src):
+        for d in range(n_dst):
+            srcs += [s] * (d + 1)
+            dsts += [d] * (d + 1)
+    src = np.array(srcs, np.int32)
+    dst = np.array(dsts, np.int32)
+    perm = np.random.default_rng(seed).permutation(src.size)
+    return src[perm], dst[perm]
+
+
+def _assert_states_equal(a: mc.MCState, b: mc.MCState):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# ckpt dtype regression (satellite): integer counters must survive npz
+# ---------------------------------------------------------------------------
+
+
+def test_ckpt_roundtrips_integer_counters(tmp_path):
+    cfg = mc.MCConfig(num_rows=8, capacity=4)
+    state = mc.init(cfg)._replace(
+        decay_cursor=jnp.int32(3), route_dropped=jnp.int32(7),
+        deferred_new=jnp.int32(11))
+    ckpt.save(state, str(tmp_path), 0)
+    restored, _ = ckpt.restore(mc.init(cfg), str(tmp_path))
+    for field in ("decay_cursor", "route_dropped", "deferred_new"):
+        leaf = getattr(restored, field)
+        assert leaf.dtype == jnp.int32, field
+        assert int(leaf) == int(getattr(state, field)), field
+    _assert_states_equal(state, restored)
+
+
+def test_ckpt_rejects_kind_changing_cast(tmp_path):
+    """A float checkpoint restoring into an integer leaf is a template
+    mismatch; the old silent ``astype`` truncated values instead of
+    failing."""
+    cfg = mc.MCConfig(num_rows=8, capacity=4)
+    float_state = jax.tree_util.tree_map(
+        lambda x: jnp.asarray(x, jnp.float32) + 0.5, mc.init(cfg))
+    ckpt.save(float_state, str(tmp_path), 0)
+    with pytest.raises(ValueError, match="kind"):
+        ckpt.restore(mc.init(cfg), str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# snapshot completeness (crash-during-snapshot recovery)
+# ---------------------------------------------------------------------------
+
+
+def _save_two_steps(tmp_path, cfg):
+    state0 = mc.init(cfg)
+    src, dst = _distinct_count_batch()
+    state1 = mc.update_batch(state0, jnp.asarray(src), jnp.asarray(dst),
+                             cfg=cfg)
+    snap_io.save_snapshot(state0, str(tmp_path), 0, {"wal_seq": -1})
+    snap_io.save_snapshot(state1, str(tmp_path), 1, {"wal_seq": 0})
+    return state0, state1
+
+
+def test_latest_complete_step_skips_missing_npz(tmp_path):
+    cfg = mc.MCConfig(num_rows=32, capacity=8)
+    state0, _ = _save_two_steps(tmp_path, cfg)
+    os.unlink(tmp_path / "step_00000001" / "arrays.npz")
+    assert snap_io.latest_complete_step(str(tmp_path)) == 0
+    restored, meta, step = snap_io.restore_snapshot(
+        mc.init(cfg), str(tmp_path))
+    assert step == 0 and meta["wal_seq"] == -1
+    _assert_states_equal(state0, restored)
+
+
+def test_latest_complete_step_skips_truncated_npz(tmp_path):
+    cfg = mc.MCConfig(num_rows=32, capacity=8)
+    _save_two_steps(tmp_path, cfg)
+    npz = tmp_path / "step_00000001" / "arrays.npz"
+    data = npz.read_bytes()
+    npz.write_bytes(data[: len(data) // 2])   # torn mid-write
+    assert snap_io.latest_complete_step(str(tmp_path)) == 0
+
+
+def test_latest_complete_step_skips_torn_manifest(tmp_path):
+    cfg = mc.MCConfig(num_rows=32, capacity=8)
+    _save_two_steps(tmp_path, cfg)
+    man = tmp_path / "step_00000001" / "manifest.json"
+    man.write_text(man.read_text()[:20])      # torn json
+    assert snap_io.latest_complete_step(str(tmp_path)) == 0
+
+
+def test_latest_complete_step_requires_sidecar(tmp_path):
+    cfg = mc.MCConfig(num_rows=32, capacity=8)
+    _save_two_steps(tmp_path, cfg)
+    os.unlink(tmp_path / "step_00000001" / "chain.json")
+    assert snap_io.latest_complete_step(str(tmp_path)) == 0
+    with pytest.raises(FileNotFoundError):
+        snap_io.restore_snapshot(mc.init(cfg), str(tmp_path), step=1)
+
+
+def test_no_complete_snapshot_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        snap_io.restore_snapshot(mc.init(mc.MCConfig(num_rows=8, capacity=4)),
+                                 str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# WAL: framing, rotation, torn tails, truncation
+# ---------------------------------------------------------------------------
+
+
+def test_wal_roundtrip_and_rotation(tmp_path):
+    wal = WriteAheadLog(str(tmp_path), segment_records=2, fsync="always")
+    batches = []
+    rng = np.random.default_rng(0)
+    for i in range(5):
+        src = rng.integers(0, 100, 16).astype(np.int32)
+        dst = rng.integers(0, 100, 16).astype(np.int32)
+        w = rng.integers(1, 5, 16).astype(np.int32)
+        assert wal.append(src, dst, w) == i
+        batches.append((src, dst, w))
+    wal.close()
+    assert len([n for n in os.listdir(tmp_path) if n.endswith(".seg")]) == 3
+    wal2 = WriteAheadLog(str(tmp_path))
+    assert wal2.next_seq == 5          # resumes after what is on disk
+    records = list(wal2.replay())
+    assert [seq for seq, *_ in records] == list(range(5))
+    for (seq, src, dst, w), (s0, d0, w0) in zip(records, batches):
+        np.testing.assert_array_equal(src, s0)
+        np.testing.assert_array_equal(dst, d0)
+        np.testing.assert_array_equal(w, w0)
+    assert len(list(wal2.replay(after_seq=2))) == 2
+
+
+def test_wal_torn_tail_stops_replay(tmp_path):
+    wal = WriteAheadLog(str(tmp_path), segment_records=100)
+    for i in range(3):
+        wal.append(np.full(8, i, np.int32), np.full(8, i, np.int32))
+    wal.close()
+    seg = os.path.join(str(tmp_path), sorted(os.listdir(tmp_path))[0])
+    size = os.path.getsize(seg)
+    with open(seg, "r+b") as f:       # crash mid-append: half a record
+        f.truncate(size - 10)
+    records = list(WriteAheadLog(str(tmp_path)).replay())
+    assert [seq for seq, *_ in records] == [0, 1]
+
+
+def test_wal_corrupt_record_stops_replay(tmp_path):
+    wal = WriteAheadLog(str(tmp_path), segment_records=100)
+    for i in range(3):
+        wal.append(np.full(8, i, np.int32), np.full(8, i, np.int32))
+    wal.close()
+    seg = os.path.join(str(tmp_path), sorted(os.listdir(tmp_path))[0])
+    with open(seg, "r+b") as f:       # flip payload bytes of record 1
+        f.seek(-40, os.SEEK_END)
+        f.write(b"\xff\xff\xff\xff")
+    records = list(WriteAheadLog(str(tmp_path)).replay())
+    assert [seq for seq, *_ in records] == [0, 1]  # CRC kills record 2
+
+
+def test_wal_append_after_torn_tail_keeps_later_records(tmp_path):
+    """Crash-restart pattern: a torn tail in segment A must not hide the
+    durable records a post-crash writer appends to segment B — the writer
+    resumes at the torn seq, so the sequence stays contiguous through the
+    tear (regression: replay used to stop at the first tear globally)."""
+    wal = WriteAheadLog(str(tmp_path), segment_records=100, fsync="always")
+    for i in range(3):
+        wal.append(np.full(8, i, np.int32), np.full(8, i, np.int32))
+    wal.close()
+    seg = os.path.join(str(tmp_path), sorted(os.listdir(tmp_path))[0])
+    with open(seg, "r+b") as f:       # crash mid-append tears record 2
+        f.truncate(os.path.getsize(seg) - 10)
+    wal2 = WriteAheadLog(str(tmp_path))
+    assert wal2.next_seq == 2         # the torn record never happened
+    wal2.append(np.full(8, 7, np.int32), np.full(8, 7, np.int32))
+    wal2.append(np.full(8, 9, np.int32), np.full(8, 9, np.int32))
+    wal2.close()
+    records = list(WriteAheadLog(str(tmp_path)).replay())
+    assert [seq for seq, *_ in records] == [0, 1, 2, 3]
+    np.testing.assert_array_equal(records[2][1], np.full(8, 7, np.int32))
+    np.testing.assert_array_equal(records[3][1], np.full(8, 9, np.int32))
+
+
+def test_wal_gap_between_segments_stops_replay(tmp_path):
+    """A genuine mid-log gap (whole segment lost, valid data after) breaks
+    seq contiguity; nothing past it may be resurrected."""
+    wal = WriteAheadLog(str(tmp_path), segment_records=2)
+    for i in range(6):
+        wal.append(np.full(4, i, np.int32), np.full(4, i, np.int32))
+    wal.close()
+    os.unlink(os.path.join(str(tmp_path), sorted(os.listdir(tmp_path))[1]))
+    records = list(WriteAheadLog(str(tmp_path)).replay())
+    assert [seq for seq, *_ in records] == [0, 1]
+
+
+def test_wal_truncate_through_drops_closed_segments(tmp_path):
+    wal = WriteAheadLog(str(tmp_path), segment_records=2)
+    for i in range(6):
+        wal.append(np.full(4, i, np.int32), np.full(4, i, np.int32))
+    wal.close()
+    removed = wal.truncate_through(3)   # segments [0,1] and [2,3]
+    assert removed == 2
+    assert [seq for seq, *_ in WriteAheadLog(str(tmp_path)).replay()] == [4, 5]
+
+
+# ---------------------------------------------------------------------------
+# crash recovery, unsharded path: snapshot + replay is bit-exact
+# ---------------------------------------------------------------------------
+
+
+def test_unsharded_crash_recovery_bit_exact(tmp_path):
+    """Restore(latest snapshot) + deterministic WAL replay through the same
+    update/maintain pipeline reproduces the pre-crash state — arrays and
+    counter_stats — bit-exactly (the recovery contract)."""
+    cfg = mc.MCConfig(num_rows=64, capacity=8, sort_passes=1,
+                      max_new_per_batch=16, decay_block_rows=16)
+    snap_dir, wal_dir = tmp_path / "snap", tmp_path / "wal"
+    wal = WriteAheadLog(str(wal_dir), segment_records=3, fsync="always")
+
+    def cycle(state, src, dst):
+        state = mc.update_batch(state, jnp.asarray(src), jnp.asarray(dst),
+                                cfg=cfg)
+        return mc.maybe_decay(state, cfg=cfg, total_threshold=4)
+
+    rng = np.random.default_rng(1)
+    state = mc.init(cfg)
+    for seq in range(10):
+        src = rng.integers(0, 80, 64).astype(np.int32)   # overflows rows,
+        dst = rng.integers(0, 40, 64).astype(np.int32)   # decays, defers
+        wal.append(src, dst)
+        state = cycle(state, src, dst)
+        if seq == 4:
+            snap_io.save_snapshot(state, str(snap_dir), seq + 1,
+                                  {"wal_seq": seq})
+    wal.close()
+    expect_stats = mc.counter_stats(state)
+    assert expect_stats["deferred_new"] > 0      # the messy path is live
+    assert mc.maintenance_stats(state)["decay_steps"] > 0
+
+    # crash: all host/device state is gone; recover from disk only
+    step = snap_io.latest_complete_step(str(snap_dir))
+    recovered, meta, _ = snap_io.restore_snapshot(mc.init(cfg),
+                                                  str(snap_dir), step)
+    replayed = 0
+    for seq, src, dst, _w in WriteAheadLog(str(wal_dir)).replay(
+            after_seq=meta["wal_seq"]):
+        recovered = cycle(recovered, src, dst)
+        replayed += 1
+    assert replayed == 5
+    _assert_states_equal(state, recovered)
+    assert mc.counter_stats(recovered) == expect_stats
+
+
+# ---------------------------------------------------------------------------
+# ownership map
+# ---------------------------------------------------------------------------
+
+
+def test_ownership_default_matches_legacy_hash():
+    """The seed routing formula, inlined as the oracle (sh.owner_of now
+    delegates to Ownership, so comparing against it would be circular)."""
+    from repro.core.hashtable import hash_u32
+    src = jnp.arange(4096, dtype=jnp.int32)
+    for s in (1, 2, 4, 8, 16):
+        legacy = ((hash_u32(src) >> jnp.uint32(8))
+                  % jnp.uint32(s)).astype(jnp.int32)
+        own = Ownership(num_shards=s).owner_of(src)
+        np.testing.assert_array_equal(np.asarray(legacy), np.asarray(own))
+        np.testing.assert_array_equal(np.asarray(legacy),
+                                      np.asarray(sh.owner_of(src, s)))
+
+
+def test_ownership_total_and_reassign_moves_bucket():
+    own = Ownership(num_shards=4, num_buckets=64)
+    src = jnp.arange(10000, dtype=jnp.int32)
+    owners = np.asarray(own.owner_of(src))
+    assert owners.min() >= 0 and owners.max() < 4          # total
+    buckets = np.asarray(own.bucket_of(src))
+    b = int(buckets[0])
+    moved = own.reassign(b, 3)
+    new_owners = np.asarray(moved.owner_of(src))
+    in_bucket = buckets == b
+    assert np.all(new_owners[in_bucket] == 3)              # bucket moved
+    np.testing.assert_array_equal(owners[~in_bucket],
+                                  new_owners[~in_bucket])  # others pinned
+
+
+def test_ownership_validation():
+    with pytest.raises(ValueError):
+        Ownership(num_shards=2, num_buckets=3)       # not a power of two
+    with pytest.raises(ValueError):
+        Ownership(num_shards=2, num_buckets=4, assignment=(0, 1, 2, 0))
+    with pytest.raises(ValueError):
+        Ownership(num_shards=2, num_buckets=4, assignment=(0, 1))
+    scfg = sh.ShardedConfig(base=mc.MCConfig(num_rows=8, capacity=4),
+                            num_shards=2,
+                            ownership=Ownership(num_shards=4))
+    with pytest.raises(ValueError):
+        scfg.resolved_ownership()
+
+
+# ---------------------------------------------------------------------------
+# reshard planning + edge extraction
+# ---------------------------------------------------------------------------
+
+
+def test_extract_edges_roundtrips_counts():
+    cfg = mc.MCConfig(num_rows=64, capacity=16, sort_passes=4)
+    src, dst = _distinct_count_batch()
+    state = mc.update_batch(mc.init(cfg), jnp.asarray(src), jnp.asarray(dst),
+                            cfg=cfg)
+    es, ed, ec = rs.extract_edges(state)
+    assert es.size == 12 * 5
+    got = {(int(s), int(d)): int(c) for s, d, c in zip(es, ed, ec)}
+    for s in range(12):
+        for d in range(5):
+            assert got[(s, d)] == d + 1
+
+
+def test_plan_batches_respects_slice_and_bucket_caps():
+    rng = np.random.default_rng(2)
+    n = 1000
+    # unique (src, dst) pairs so edges are identifiable across batches
+    src = (np.arange(n) // 40).astype(np.int32)
+    dst = (np.arange(n) % 40).astype(np.int32)
+    w = rng.integers(1, 9, n).astype(np.int32)
+    num_shards, slice_len, cap = 4, 32, 8
+    owner = rng.integers(0, num_shards, n).astype(np.int32)
+    owner[:600] = 0                                          # heavy skew
+    seen = np.zeros(n, bool)
+    key = {(int(s), int(d)): i for i, (s, d) in enumerate(zip(src, dst))}
+    for bsrc, bdst, bw in rs.plan_batches(src, dst, w, owner, num_shards,
+                                          slice_len, cap):
+        assert bsrc.size == num_shards * slice_len
+        s2, d2 = (bsrc.reshape(num_shards, slice_len),
+                  bdst.reshape(num_shards, slice_len))
+        for s in range(num_shards):
+            live = s2[s] >= 0
+            # per (source slice, destination shard) count within capacity
+            d_of = owner[[key[(int(x), int(y))]
+                          for x, y in zip(s2[s][live], d2[s][live])]]
+            for dshard in range(num_shards):
+                assert np.sum(np.asarray(d_of) == dshard) <= cap
+        for x, y, z in zip(bsrc, bdst, bw):
+            if x >= 0:
+                i = key[(int(x), int(y))]
+                assert not seen[i] and z == w[i]
+                seen[i] = True
+    assert seen.all()                  # every edge exactly once
+
+
+# ---------------------------------------------------------------------------
+# ShardedEngine durability (single-shard mesh, in-process)
+# ---------------------------------------------------------------------------
+
+
+def _engine(tmp_path, *, wal=True, snapshot_every=0, num_shards=1,
+            deadline_s=60.0):
+    base = mc.MCConfig(num_rows=64, capacity=16, sort_passes=4)
+    scfg = sh.ShardedConfig(base=base, num_shards=num_shards,
+                            bucket_factor=4.0)
+    return ShardedEngine(ShardedServeConfig(
+        sharded=scfg, decay_threshold=1 << 20,
+        snapshot_dir=str(tmp_path / "snap"),
+        snapshot_every=snapshot_every,
+        wal_dir=str(tmp_path / "wal") if wal else None,
+        wal_fsync="always", observe_deadline_s=deadline_s))
+
+
+def test_engine_checkpoint_restore_exact_with_wal_replay(tmp_path):
+    eng = _engine(tmp_path)
+    src, dst = _distinct_count_batch()
+    eng.observe(src, dst)
+    eng.checkpoint()
+    src2, dst2 = _distinct_count_batch(seed=1)
+    eng.observe(src2, dst2)            # after the snapshot: WAL-only
+    ref_q = eng.query(np.arange(12, dtype=np.int32))
+    ref_stats = dict(eng.stats)
+
+    eng2 = _engine(tmp_path)           # fresh process stand-in
+    info = eng2.restore()
+    assert info["mode"] == "exact" and info["replayed"] == 1
+    got_q = eng2.query(np.arange(12, dtype=np.int32))
+    for a, b in zip(ref_q, got_q):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for k in ("n_rows", "evictions", "deferred_new", "route_dropped",
+              "decay_steps"):
+        assert eng2.stats[k] == ref_stats[k], k
+    snap_a = eng.store.acquire()
+    snap_b = eng2.store.acquire()
+    try:
+        _assert_states_equal(snap_a.state, snap_b.state)
+    finally:
+        eng.store.release(snap_a)
+        eng2.store.release(snap_b)
+
+
+def test_engine_cadence_snapshots_in_background(tmp_path):
+    eng = _engine(tmp_path, snapshot_every=2)
+    src, dst = _distinct_count_batch(n_src=4)
+    for _ in range(4):
+        eng.observe(src, dst)
+    if eng._snapshot_thread is not None:
+        eng._snapshot_thread.join()
+    assert eng.stats["snapshots"] == 2
+    assert snap_io.latest_complete_step(str(tmp_path / "snap")) == 4
+
+
+def test_engine_watchdog_escalation_checkpoints(tmp_path):
+    eng = _engine(tmp_path, deadline_s=0.0)   # every observe is "slow"
+    eng.watchdog.cfg = dataclasses.replace(
+        eng.watchdog.cfg, max_consecutive_slow=2)
+    src, dst = _distinct_count_batch(n_src=4)
+    eng.observe(src, dst)
+    assert eng.stats["snapshots"] == 0
+    eng.observe(src, dst)                     # 2nd slow step escalates
+    assert eng.stats["snapshots"] == 1
+    assert snap_io.latest_complete_step(str(tmp_path / "snap")) is not None
+
+
+def test_engine_restore_skips_torn_snapshot(tmp_path):
+    eng = _engine(tmp_path)
+    src, dst = _distinct_count_batch()
+    eng.observe(src, dst)
+    eng.checkpoint()
+    eng.observe(src, dst)
+    eng.checkpoint()
+    # crash mid-snapshot: newest step's arrays are truncated
+    snap_dir = tmp_path / "snap"
+    steps = sorted(os.listdir(snap_dir))
+    npz = snap_dir / steps[-1] / "arrays.npz"
+    npz.write_bytes(npz.read_bytes()[:100])
+    eng2 = _engine(tmp_path)
+    info = eng2.restore()
+    assert f"step_{info['step']:08d}" == steps[0]
+    # WAL replay from the older snapshot still reaches the final state
+    q = np.arange(12, dtype=np.int32)
+    ref, got = eng.query(q), eng2.query(q)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_engine_reassign_preserves_answers(tmp_path):
+    eng = _engine(tmp_path, wal=False)
+    src, dst = _distinct_count_batch()
+    eng.observe(src, dst)
+    ref = eng.query(np.arange(12, dtype=np.int32))
+    own = Ownership(num_shards=1, num_buckets=32)
+    eng.reassign(own)
+    assert eng.cfg.sharded.resolved_ownership() == own
+    got = eng.query(np.arange(12, dtype=np.int32))
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError):
+        eng.reassign(Ownership(num_shards=3))
+
+
+# ---------------------------------------------------------------------------
+# elastic N -> M matrix on 8 fake devices (subprocess)
+# ---------------------------------------------------------------------------
+
+SCRIPT_ELASTIC = textwrap.dedent(
+    """
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import mcprioq as mc, sharded as sh
+    from repro.serve.engine import ShardedEngine, ShardedServeConfig
+
+    srcs, dsts = [], []
+    for s in range(40):
+        for d in range(6):
+            srcs += [s] * (d + 1)
+            dsts += [d] * (d + 1)
+    src = np.array(srcs, np.int32)
+    dst = np.array(dsts, np.int32)
+    perm = np.random.default_rng(0).permutation(src.size)
+    src, dst = src[perm], dst[perm]
+
+    snap_dir = tempfile.mkdtemp()
+    wal_dir = tempfile.mkdtemp()
+    base = mc.MCConfig(num_rows=256, capacity=32, sort_passes=4)
+
+    def engine_at(n):
+        scfg = sh.ShardedConfig(base=base, num_shards=n, bucket_factor=4.0)
+        return ShardedEngine(ShardedServeConfig(
+            sharded=scfg, decay_threshold=1 << 20, snapshot_dir=snap_dir,
+            wal_dir=wal_dir, wal_fsync="always"))
+
+    e4 = engine_at(4)
+    e4.observe(src, dst)
+    e4.checkpoint()
+    # one more batch AFTER the snapshot: elastic restore must replay it too
+    src2 = np.arange(40, dtype=np.int32)
+    dst2 = np.full(40, 17, np.int32)
+    e4.observe(src2, dst2)
+
+    oracle = mc.update_batch(mc.init(base), jnp.asarray(src),
+                             jnp.asarray(dst), cfg=base)
+    oracle = mc.update_batch(oracle, jnp.asarray(src2), jnp.asarray(dst2),
+                             cfg=base)
+    q = np.arange(40, dtype=np.int32)
+    d0, p0, n0 = mc.query_threshold(oracle, jnp.asarray(q), 0.9, cfg=base,
+                                    max_items=16)
+    s4, d4, p4 = e4.topn(16)
+
+    for m in (2, 8):
+        em = engine_at(m)
+        info = em.restore()
+        assert info["mode"] == "reshard", info
+        assert info["replayed"] == 1, info
+        assert em.stats["route_dropped"] == 0, em.stats
+        assert em.stats["deferred_new"] == 0, em.stats
+        d, p, n = em.query(q)
+        assert np.array_equal(np.asarray(d), np.asarray(d0)), m
+        assert np.array_equal(np.asarray(p), np.asarray(p0)), m
+        assert np.array_equal(np.asarray(n), np.asarray(n0)), m
+        ms, md, mp = em.topn(16)
+        assert np.array_equal(np.asarray(mp), np.asarray(p4)), m
+        assert np.array_equal(np.asarray(md), np.asarray(d4)), m
+
+    # same shard count takes the exact path (bit-identical arrays)
+    e4b = engine_at(4)
+    info = e4b.restore()
+    assert info["mode"] == "exact", info
+    a = e4.store.acquire().state
+    b = e4b.store.acquire().state
+    import jax
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        assert np.array_equal(np.asarray(la), np.asarray(lb))
+    print("ELASTIC-PERSIST-OK")
+    """
+)
+
+
+def test_elastic_reshard_restore_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", SCRIPT_ELASTIC], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "ELASTIC-PERSIST-OK" in out.stdout
