@@ -1,0 +1,14 @@
+"""Static/dynamic analysis substrate (DESIGN.md §11).
+
+``invariants`` holds the zero-cost annotation decorators the engine code
+declares its concurrency contract with (``@requires_lock``, ``@kernel_op``);
+``tools/mcqlint`` checks the declarations statically, ``explorer`` checks the
+interleaving behaviour dynamically.  This ``__init__`` deliberately imports
+nothing heavyweight: ``repro.serve.engine`` and ``repro.core.epoch`` import
+``repro.analysis.invariants`` at module load, so anything here is on the
+serving import path.
+"""
+
+from repro.analysis.invariants import kernel_op, requires_lock
+
+__all__ = ["kernel_op", "requires_lock"]

@@ -1,0 +1,115 @@
+"""Machine-checkable concurrency/kernel contract annotations (DESIGN.md §11).
+
+The lock-freedom story of the engine rests on a handful of invariants that
+used to live only in prose: the single-writer publish cycle, WAL-append-
+before-apply, sidecar-before-manifest-rename, the (routing program, snapshot)
+pairing, and kernel/ref parity.  This module is the *declaration* side of
+making them machine-checked:
+
+* :func:`requires_lock` — annotates a function whose **caller** must hold the
+  named lock(s).  Zero-cost by default (returns the function unchanged after
+  attaching metadata); with ``MCQ_RUNTIME_LOCK_CHECKS=1`` in the environment
+  at import time it wraps the function with a ``lock.locked()`` assertion so
+  test runs fail loudly on a violated contract.
+* :func:`kernel_op` — registers a kernel dispatcher's ref oracle / pallas
+  implementation pair (or its composition in terms of other ops), the
+  ``I-parity`` invariant's declaration.
+* class-attribute conventions ``_MCQ_LOCK_ORDER`` / ``_MCQ_LOCK_PROTECTS`` —
+  a class owning ``threading.Lock``s declares the total acquisition order and
+  which attributes/operations each lock guards.
+
+``tools/mcqlint`` reads all three **statically** (AST level — the decorators
+never need to run) and enforces them repo-wide; the interleaving explorer
+(``repro.analysis.explorer``) reuses the named-lock declarations to place its
+schedule-controlled yield points.  Keep the declarations boring and literal:
+the linter parses them as syntax, not by importing the module.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Callable, Optional, Sequence, Tuple
+
+#: Attribute carrying the tuple of lock attribute names a function requires.
+REQUIRES_ATTR = "__mcq_requires_locks__"
+
+#: Attribute carrying the (ref, pallas, composes) registration of a kernel op.
+KERNEL_OP_ATTR = "__mcq_kernel_op__"
+
+#: Class attribute naming the normative lock acquisition order (a tuple of
+#: lock attribute names, outermost first).  Acquiring a lock while holding a
+#: later-ranked one is a lock-order inversion (rule MCQ-L003).
+LOCK_ORDER_ATTR = "_MCQ_LOCK_ORDER"
+
+#: Class attribute mapping lock attribute name -> tuple of protected
+#: resources.  A resource is either an instance attribute name (``"stats"``:
+#: any mutation of ``self.stats`` needs the lock) or a dotted call pattern
+#: (``"store.publish"``: any call of ``self.store.publish`` needs the lock).
+LOCK_PROTECTS_ATTR = "_MCQ_LOCK_PROTECTS"
+
+_RUNTIME_CHECKS = os.environ.get("MCQ_RUNTIME_LOCK_CHECKS", "") not in (
+    "", "0", "false")
+
+
+def requires_lock(*names: str) -> Callable:
+    """Declare that callers must hold ``self.<name>`` for every name.
+
+    The declaration is the contract the static analyzer enforces at every
+    call site (rule MCQ-L002) and seeds the callee's held-lock set with
+    (rule MCQ-L001), so a helper like ``_apply_locked`` can mutate
+    write-lock-protected state without re-acquiring the lock — exactly the
+    idiom the engine already uses, now checkable.
+    """
+    if not names or not all(isinstance(n, str) and n for n in names):
+        raise ValueError("requires_lock needs one or more lock names")
+
+    def deco(fn: Callable) -> Callable:
+        if not _RUNTIME_CHECKS:
+            setattr(fn, REQUIRES_ATTR, tuple(names))
+            return fn
+
+        @functools.wraps(fn)
+        def checked(self, *args, **kwargs):
+            for name in names:
+                lock = getattr(self, name)
+                # threading.Lock has .locked(); instrumented locks mirror it
+                if hasattr(lock, "locked") and not lock.locked():
+                    raise AssertionError(
+                        f"{type(self).__name__}.{fn.__name__} requires "
+                        f"{name} held (MCQ_RUNTIME_LOCK_CHECKS)")
+            return fn(self, *args, **kwargs)
+
+        setattr(checked, REQUIRES_ATTR, tuple(names))
+        return checked
+
+    return deco
+
+
+def kernel_op(*, ref: Optional[str] = None, pallas: Optional[str] = None,
+              composes: Sequence[str] = ()) -> Callable:
+    """Register a kernel dispatcher's parity contract (invariant I-parity).
+
+    ``ref`` names the bit-exact oracle in ``kernels/ref.py``; ``pallas`` the
+    TPU implementation in a sibling ``kernels/`` module (``None`` for ops
+    that deliberately run the ref on every backend, e.g. the scalar-serial
+    top-n merge); ``composes`` names other registered ops an op is built
+    from, inheriting their parity.  The static analyzer checks that every
+    declared name exists, that every ``*_pallas`` kernel in the package is
+    reachable from some registration, and that an equivalence test mentions
+    the op.
+    """
+    if ref is None and not composes:
+        raise ValueError("kernel_op needs a ref oracle or a composes list")
+
+    def deco(fn: Callable) -> Callable:
+        setattr(fn, KERNEL_OP_ATTR,
+                {"ref": ref, "pallas": pallas, "composes": tuple(composes)})
+        return fn
+
+    return deco
+
+
+def declared_locks(cls) -> Tuple[str, ...]:
+    """The class's normative lock order (empty when undeclared)."""
+    return tuple(getattr(cls, LOCK_ORDER_ATTR, ()))

@@ -57,10 +57,17 @@ def save(tree: PyTree, directory: str, step: int) -> str:
     return path
 
 
-def save_async(tree: PyTree, directory: str, step: int) -> threading.Thread:
+def save_async(tree: PyTree, directory: str, step: int,
+               on_complete: Optional[Any] = None) -> threading.Thread:
     """Non-blocking save: device->host copy happens on the caller thread
     (cheap, overlapped with the next step's compile/dispatch), file IO on a
-    worker thread."""
+    worker thread.  ``on_complete`` (a zero-arg callable) runs on the worker
+    thread strictly after the manifest rename commits — the hook for actions
+    that are only safe once the checkpoint is durable, e.g. WAL truncation.
+
+    The thread is deliberately NOT a daemon: interpreter shutdown must wait
+    for the commit rather than abandoning a half-written step (the owner —
+    ``ShardedEngine.close()`` — joins it)."""
     keys, leaves, _ = _paths_and_leaves(tree)
     host = [(k, _gather(x)) for k, x in zip(keys, leaves)]
 
@@ -76,8 +83,10 @@ def save_async(tree: PyTree, directory: str, step: int) -> threading.Thread:
         with open(tmp, "w") as f:
             json.dump(manifest, f)
         os.replace(tmp, os.path.join(path, "manifest.json"))
+        if on_complete is not None:
+            on_complete()
 
-    t = threading.Thread(target=work, daemon=True)
+    t = threading.Thread(target=work, daemon=False)
     t.start()
     return t
 

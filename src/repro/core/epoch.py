@@ -23,6 +23,8 @@ import threading
 import time
 from typing import Any, Callable, NamedTuple, Optional
 
+from repro.analysis.invariants import requires_lock
+
 
 class Snapshot(NamedTuple):
     version: int
@@ -31,6 +33,17 @@ class Snapshot(NamedTuple):
 
 class EpochStore:
     """Single-writer / many-reader snapshot store with reader accounting."""
+
+    # Concurrency contract (DESIGN.md §11, checked by tools/mcqlint):
+    # ``_lock`` guards the reader accounting only.  ``_snap`` is deliberately
+    # NOT declared protected — the single atomic reference swap under the GIL
+    # is the lock-free read path the whole design rests on.  Globally,
+    # ``_lock`` ranks below every engine lock (it is only ever taken inside
+    # store calls and never holds while calling out).
+    _MCQ_LOCK_ORDER = ("_lock",)
+    _MCQ_LOCK_PROTECTS = {
+        "_lock": ("_readers", "retired_versions"),
+    }
 
     def __init__(self, state: Any):
         self._snap = Snapshot(0, state)
@@ -82,6 +95,7 @@ class EpochStore:
             delay = min(delay * 2, 0.01)
 
     # -- reclamation -----------------------------------------------------
+    @requires_lock("_lock")
     def _maybe_retire_locked(self) -> None:
         cur = self._snap.version
         for v in sorted(self._readers):

@@ -14,6 +14,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.invariants import kernel_op
 from repro.kernels import cdf_gather as _cg
 from repro.kernels import cdf_query as _cdf
 from repro.kernels import oddeven as _oe
@@ -50,6 +51,7 @@ def _pad_rows(x: jax.Array, mult: int, fill) -> Tuple[jax.Array, int]:
 
 
 @functools.partial(jax.jit, static_argnames=("passes", "impl"))
+@kernel_op(ref="oddeven_ref", pallas="oddeven_pallas")
 def oddeven_sort(cnt: jax.Array, order: jax.Array, *, passes: int = 1,
                  impl: str = "auto") -> jax.Array:
     """k odd-even passes over every slab row; returns the new order
@@ -71,6 +73,7 @@ def oddeven_sort(cnt: jax.Array, order: jax.Array, *, passes: int = 1,
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))
+@kernel_op(ref="slab_update_ref", pallas="slab_update_pallas")
 def slab_update(rows: jax.Array, dsts: jax.Array, w: jax.Array,
                 dst_slab: jax.Array, cnt: jax.Array, tot: jax.Array,
                 *, impl: str = "auto"):
@@ -90,6 +93,7 @@ def slab_update(rows: jax.Array, dsts: jax.Array, w: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))
+@kernel_op(ref="oddeven_ref", composes=("oddeven_sort",))
 def decay_sort(cnt: jax.Array, dst: jax.Array, order: jax.Array,
                *, impl: str = "auto"):
     """Fused §II.C decay: halve counters, evict dead edges, fully re-sort.
@@ -108,6 +112,7 @@ def decay_sort(cnt: jax.Array, dst: jax.Array, order: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("max_probes", "impl"))
+@kernel_op(ref="dh_find_ref", pallas="probe_find_pallas")
 def dh_find(rows: jax.Array, dsts: jax.Array,
             dh_keys: jax.Array, dh_vals: jax.Array,
             *, max_probes: int = 64, impl: str = "auto"):
@@ -131,6 +136,7 @@ def dh_find(rows: jax.Array, dsts: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("max_probes", "impl"))
+@kernel_op(ref="probe_find_ref", pallas="probe_find_pallas")
 def ht_find(keys_q: jax.Array, tab_keys: jax.Array, tab_vals: jax.Array,
             *, max_probes: int = 64, impl: str = "auto"):
     """Batched flat-table lookup: ``(vals[B], found[B] bool)``.
@@ -152,6 +158,7 @@ def ht_find(keys_q: jax.Array, tab_keys: jax.Array, tab_vals: jax.Array,
 
 @functools.partial(jax.jit,
                    static_argnames=("max_items", "chunks", "topk", "impl"))
+@kernel_op(ref="cdf_query_ref", pallas="cdf_query_pallas")
 def cdf_query(c_ord: jax.Array, d_ord: jax.Array, tot: jax.Array,
               threshold, *, max_items: int = 16, chunks: int = 0,
               topk: bool = False, impl: str = "auto"):
@@ -180,6 +187,7 @@ def cdf_query(c_ord: jax.Array, d_ord: jax.Array, tot: jax.Array,
 
 @functools.partial(jax.jit,
                    static_argnames=("max_items", "chunks", "topk", "impl"))
+@kernel_op(ref="cdf_query_fused_ref", pallas="cdf_query_fused_pallas")
 def cdf_query_fused(rows: jax.Array, found: jax.Array,
                     cnt: jax.Array, dst: jax.Array, order: jax.Array,
                     tot: jax.Array, threshold, *, max_items: int = 16,
@@ -204,6 +212,7 @@ def cdf_query_fused(rows: jax.Array, found: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("n", "impl"))
+@kernel_op(ref="topn_merge_ref", pallas=None)
 def topn_merge(probs: jax.Array, dsts: jax.Array, srcs: jax.Array,
                *, n: int, impl: str = "auto"):
     """Cross-shard top-n merge: ``(srcs[n], dsts[n], probs[n])`` descending.
@@ -222,6 +231,7 @@ def topn_merge(probs: jax.Array, dsts: jax.Array, srcs: jax.Array,
 
 @functools.partial(jax.jit,
                    static_argnames=("k", "max_probes", "impl"))
+@kernel_op(ref="draft_walk_ref", pallas="draft_walk_pallas")
 def draft_walk(window: jax.Array, ht_keys: jax.Array, ht_vals: jax.Array,
                cnt: jax.Array, dst: jax.Array, ord0: jax.Array,
                *, k: int = 4, max_probes: int = 64, impl: str = "auto"):

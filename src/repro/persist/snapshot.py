@@ -62,14 +62,18 @@ def save_snapshot(state: PyTree, directory: str, step: int,
 
 
 def save_snapshot_async(state: PyTree, directory: str, step: int,
-                        meta: dict) -> threading.Thread:
+                        meta: dict,
+                        on_complete: Optional[Any] = None) -> threading.Thread:
     """Background-cadence variant: the device->host gather happens on the
     caller thread (under the Engine's writer lock, so the captured epoch is
-    exact), file IO on a worker thread with the same commit ordering."""
+    exact), file IO on a worker thread with the same commit ordering.
+    ``on_complete`` runs on the worker thread after the manifest commits —
+    the engine hangs WAL truncation off it, so segments are only GC'd once
+    the snapshot that supersedes them is durable."""
     path = step_dir(directory, step)
     os.makedirs(path, exist_ok=True)
     _write_meta(path, meta)
-    return ckpt.save_async(state, directory, step)
+    return ckpt.save_async(state, directory, step, on_complete=on_complete)
 
 
 # ---------------------------------------------------------------------------

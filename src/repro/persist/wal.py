@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import os
 import struct
+import threading
 import zlib
 from typing import Iterator, Optional, Tuple
 
@@ -70,6 +71,11 @@ class WriteAheadLog:
         os.makedirs(directory, exist_ok=True)
         self._fh = None
         self._fh_records = 0
+        # guards the writer file handle vs truncate_through: snapshot GC
+        # runs on async snapshot completion threads while the engine's
+        # writer keeps appending (appends themselves stay serialised by the
+        # engine's write lock; this mutex only makes GC safe against them)
+        self._mu = threading.Lock()
         self._next_seq = self._scan_next_seq()
 
     # -- discovery ------------------------------------------------------
@@ -97,26 +103,27 @@ class WriteAheadLog:
         if not (src.size == dst.size == w.size):
             raise ValueError(
                 f"ragged batch: {src.size}/{dst.size}/{w.size} items")
-        seq = self._next_seq
-        payload = src.tobytes() + dst.tobytes() + w.tobytes()
-        record = _HEADER.pack(_MAGIC, zlib.crc32(payload), seq,
-                              src.size) + payload
-        if self._fh is None:
-            path = os.path.join(self.directory, f"wal_{seq:016d}.seg")
-            self._fh = open(path, "ab")
-            if self.fsync != "never":
-                _fsync_dir(self.directory)
-        self._fh.write(record)
-        self._fh.flush()
-        if self.fsync == "always":
-            os.fsync(self._fh.fileno())
-        self._fh_records += 1
-        self._next_seq = seq + 1
-        if self._fh_records >= self.segment_records:
-            self._rotate()
+        with self._mu:
+            seq = self._next_seq
+            payload = src.tobytes() + dst.tobytes() + w.tobytes()
+            record = _HEADER.pack(_MAGIC, zlib.crc32(payload), seq,
+                                  src.size) + payload
+            if self._fh is None:
+                path = os.path.join(self.directory, f"wal_{seq:016d}.seg")
+                self._fh = open(path, "ab")
+                if self.fsync != "never":
+                    _fsync_dir(self.directory)
+            self._fh.write(record)
+            self._fh.flush()
+            if self.fsync == "always":
+                os.fsync(self._fh.fileno())
+            self._fh_records += 1
+            self._next_seq = seq + 1
+            if self._fh_records >= self.segment_records:
+                self._rotate_locked()
         return seq
 
-    def _rotate(self) -> None:
+    def _rotate_locked(self) -> None:
         if self._fh is None:
             return
         if self.fsync in ("always", "rotate"):
@@ -126,7 +133,8 @@ class WriteAheadLog:
         self._fh_records = 0
 
     def close(self) -> None:
-        self._rotate()
+        with self._mu:
+            self._rotate_locked()
 
     def __enter__(self):
         return self
@@ -184,20 +192,25 @@ class WriteAheadLog:
         """Delete segments made redundant by a snapshot at ``seq`` (every
         record of the segment has ``seq' <= seq``).  Returns the number of
         segments removed.  Conservative: a segment containing any newer
-        record is kept whole."""
+        record is kept whole.  Safe against a concurrent appender (the
+        engine's snapshot-cadence GC runs this from async snapshot
+        completion threads): the writer mutex pins the open segment while
+        the unlink decisions are made."""
         removed = 0
-        keep_from: Optional[str] = None
-        last_by_path: dict = {}
-        for path, rec_seq, *_ in self._iter_records():
-            last_by_path[path] = rec_seq
-        for path in self._segments():
-            if path == (self._fh and self._fh.name):
-                continue  # never unlink the open segment
-            if last_by_path.get(path, seq + 1) <= seq and keep_from is None:
-                os.unlink(path)
-                removed += 1
-            else:
-                keep_from = keep_from or path
+        with self._mu:
+            keep_from: Optional[str] = None
+            last_by_path: dict = {}
+            for path, rec_seq, *_ in self._iter_records():
+                last_by_path[path] = rec_seq
+            for path in self._segments():
+                if path == (self._fh and self._fh.name):
+                    continue  # never unlink the open segment
+                if (last_by_path.get(path, seq + 1) <= seq
+                        and keep_from is None):
+                    os.unlink(path)
+                    removed += 1
+                else:
+                    keep_from = keep_from or path
         return removed
 
     @property

@@ -33,6 +33,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
+from repro.analysis.invariants import requires_lock
 from repro.core import mcprioq as mc
 from repro.core import sharded as sh
 from repro.core import speculative as spec
@@ -61,6 +62,14 @@ class ServeConfig:
 class Engine:
     """Host-side orchestration; all device work is jitted, static-shaped."""
 
+    # normative lock order + protection map (DESIGN.md §11, checked by
+    # tools/mcqlint): the learner lock is outermost, the stats lock a leaf
+    _MCQ_LOCK_ORDER = ("_learn_lock", "_stats_lock")
+    _MCQ_LOCK_PROTECTS = {
+        "_learn_lock": ("drafter_store.publish",),
+        "_stats_lock": ("stats",),
+    }
+
     def __init__(self, model: Model, params: PyTree, cfg: ServeConfig):
         self.model = model
         self.params = params
@@ -82,6 +91,10 @@ class Engine:
         # second silently discards the first's counts.  Readers (drafting)
         # stay lock-free; only the single-writer invariant is enforced.
         self._learn_lock = threading.Lock()
+        # concurrent generate() calls share the stats dict; an unguarded
+        # read-modify-write of its counters is the same silent-undercount
+        # race the PR-4 review caught on ShardedEngine.stats
+        self._stats_lock = threading.Lock()
         # model_calls counts decode+extend forwards (the latency metric);
         # plain greedy needs exactly max_new_tokens-1 of them
         self.stats = {"model_calls": 0, "accepted": 0, "drafted": 0,
@@ -125,7 +138,8 @@ class Engine:
             else:
                 logits, caches = self._decode(self.params, caches,
                                               cur[:, None], pos)
-                self.stats["model_calls"] += 1
+                with self._stats_lock:
+                    self.stats["model_calls"] += 1
                 cur = self._sample(logits, sub)
                 pos = pos + 1
 
@@ -148,11 +162,13 @@ class Engine:
             finally:
                 self.drafter_store.release(snap)
             self.drafter_store.publish(new_state)
-            # inside the lock: a stale snapshot's counters must not
+            # inside the learn lock: a stale snapshot's counters must not
             # overwrite a newer learner's in stats
-            self.stats.update(
-                {k: v for k, v in mc.maintenance_stats(new_state.chain).items()
-                 if k in self.stats})
+            with self._stats_lock:
+                self.stats.update(
+                    {k: v for k, v
+                     in mc.maintenance_stats(new_state.chain).items()
+                     if k in self.stats})
 
     # ------------------------------------------------------------------
     def _speculative_round(self, caches, cur, pos, history, k, rng
@@ -170,7 +186,8 @@ class Engine:
         try:
             ctx = jnp.asarray(history[:, -max(self.cfg.ngram.order, 2):])
             draft, ok = self._draft(snap.state, ctx)
-            self.stats["draft_calls"] += 1    # one fused dispatch per round
+            with self._stats_lock:
+                self.stats["draft_calls"] += 1  # one fused dispatch per round
         finally:
             self.drafter_store.release(snap)
         draft = (np.asarray(draft)[:, : k - 1] if k > 1
@@ -183,23 +200,27 @@ class Engine:
         if n_drafted == 0:  # nothing usable: plain decode step
             logits, self._caches = self._decode(self.params, caches,
                                                 cur[:, None], pos)
-            self.stats["model_calls"] += 1
+            with self._stats_lock:
+                self.stats["model_calls"] += 1
             nxt = self._sample(logits, rng)
             return nxt, pos + 1, []
 
-        self.stats["rounds"] += 1
-        self.stats["drafted"] += int(draft.size)
+        with self._stats_lock:
+            self.stats["rounds"] += 1
+            self.stats["drafted"] += int(draft.size)
         feed = jnp.concatenate(
             [cur[:, None], jnp.asarray(draft)], axis=1)       # [B, 1+n]
         logits, ext_caches = self._extend(self.params, caches, feed, pos)
-        self.stats["model_calls"] += 1
+        with self._stats_lock:
+            self.stats["model_calls"] += 1
         model_toks = np.asarray(self._sample_all(logits, rng))  # [B, 1+n]
 
         # longest batch-wide prefix where model agrees with the draft
         agree = ((model_toks[:, :-1] == draft).all(axis=0) if draft.size
                  else np.zeros((0,), bool))
         n_acc = int(np.cumprod(agree).sum()) if agree.size else 0
-        self.stats["accepted"] += n_acc * draft.shape[0]
+        with self._stats_lock:
+            self.stats["accepted"] += n_acc * draft.shape[0]
 
         emitted = [model_toks[:, j] for j in range(n_acc)]
         if n_acc == draft.shape[1]:
@@ -213,7 +234,8 @@ class Engine:
         accepted_feed = feed[:, : n_acc + 1]
         _, self._caches = self._extend(self.params, caches, accepted_feed,
                                        pos)
-        self.stats["model_calls"] += 1
+        with self._stats_lock:
+            self.stats["model_calls"] += 1
         nxt = jnp.asarray(model_toks[:, n_acc])
         return nxt, pos + n_acc + 1, emitted
 
@@ -276,6 +298,21 @@ class ShardedEngine:
     inactive (-1) items, which consume no bucket capacity.
     """
 
+    # Normative lock order + protection map (DESIGN.md §11; enforced by
+    # tools/mcqlint).  Outermost first; EpochStore._lock is a global leaf
+    # below all of these (it is only ever taken inside store calls).  The
+    # WAL append rides under the write lock so append-then-apply is atomic
+    # with respect to other writers (write-ahead ordering, invariant I3).
+    _MCQ_LOCK_ORDER = ("_write_lock", "_route_lock", "_compile_lock",
+                       "_stats_lock")
+    _MCQ_LOCK_PROTECTS = {
+        "_write_lock": ("store.publish", "wal.append", "_seq", "_io_threads"),
+        # the (program, snapshot) pairing: _rebind swaps all three together
+        "_route_lock": ("cfg", "_update", "_maintain"),
+        "_compile_lock": ("_query_fns", "_topn_fns"),
+        "_stats_lock": ("stats",),
+    }
+
     def __init__(self, cfg: ShardedServeConfig,
                  mesh: Optional[jax.sharding.Mesh] = None):
         scfg = cfg.sharded
@@ -331,7 +368,10 @@ class ShardedEngine:
         self._seq = -1
         self.wal = (WriteAheadLog(cfg.wal_dir, fsync=cfg.wal_fsync)
                     if cfg.wal_dir else None)
-        self._snapshot_thread: Optional[threading.Thread] = None
+        # outstanding background snapshot IO threads (non-daemon: a
+        # "committed" snapshot must never be torn by process exit); joined
+        # by close() and pruned as they finish
+        self._io_threads: list = []
         # straggler escalation -> checkpoint-now, so a kill after a stall
         # loses nothing (runtime/fault_tolerance.py contract)
         self.watchdog = (StepWatchdog(
@@ -397,6 +437,7 @@ class ShardedEngine:
         if self.watchdog is not None:
             self.watchdog.observe(time.monotonic() - t0)
 
+    @requires_lock("_write_lock")
     def _apply_locked(self, src, dst, w) -> None:
         """One learner cycle against the published state (caller holds the
         write lock).  Shared verbatim by observe() and WAL replay — the
@@ -483,13 +524,15 @@ class ShardedEngine:
         with self._write_lock:
             return self._snapshot_locked(step=step, sync=sync)
 
+    @requires_lock("_write_lock")
     def _snapshot_locked(self, step: Optional[int] = None,
                          sync: bool = True) -> str:
         scfg = self.cfg.sharded
         own = scfg.resolved_ownership()
-        step = self._seq + 1 if step is None else step
+        wal_seq = self._seq
+        step = wal_seq + 1 if step is None else step
         meta = {
-            "wal_seq": self._seq,
+            "wal_seq": wal_seq,
             "num_shards": scfg.num_shards,
             "bucket_factor": scfg.bucket_factor,
             "ownership": {"num_buckets": own.num_buckets,
@@ -497,14 +540,27 @@ class ShardedEngine:
             "base_cfg": dataclasses.asdict(scfg.base),
             "store_version": self.store.version,
         }
+        # WAL GC rides the snapshot cadence: once a snapshot at wal_seq is
+        # COMMITTED (manifest renamed), every record with seq <= wal_seq is
+        # redundant for recovery, so closed segments up to it are unlinked
+        # (truncate_through is conservative and internally locked).  For the
+        # async path the truncation must wait for the commit, not the
+        # capture — it runs as the worker's completion callback.
+        gc = (functools.partial(self.wal.truncate_through, wal_seq)
+              if self.wal is not None else None)
         snap = self.store.acquire()
         try:
             if sync:
                 path = snapshot_io.save_snapshot(
                     snap.state, self.cfg.snapshot_dir, step, meta)
+                if gc is not None:
+                    gc()
             else:
-                self._snapshot_thread = snapshot_io.save_snapshot_async(
-                    snap.state, self.cfg.snapshot_dir, step, meta)
+                self._io_threads = [t for t in self._io_threads
+                                    if t.is_alive()]
+                self._io_threads.append(snapshot_io.save_snapshot_async(
+                    snap.state, self.cfg.snapshot_dir, step, meta,
+                    on_complete=gc))
                 path = snapshot_io.step_dir(self.cfg.snapshot_dir, step)
         finally:
             self.store.release(snap)
@@ -516,6 +572,29 @@ class ShardedEngine:
         # watchdog escalation fires outside the write lock (observe() calls
         # watchdog.observe after releasing it), so taking it here is safe
         self.checkpoint()
+
+    def close(self) -> None:
+        """Shutdown path: drain outstanding snapshot IO and close the WAL.
+
+        Background snapshot workers are non-daemon threads, so even an
+        unclosed engine cannot tear a committed snapshot at interpreter
+        exit — but ``close()`` makes the drain explicit and bounded: it
+        joins every outstanding worker (their completion callbacks, e.g.
+        WAL truncation, included) and then flushes/fsyncs the open WAL
+        segment.  Idempotent; the engine object must not be used after.
+        """
+        with self._write_lock:
+            threads, self._io_threads = self._io_threads, []
+        for t in threads:
+            t.join()
+        if self.wal is not None:
+            self.wal.close()
+
+    def __enter__(self) -> "ShardedEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def restore(self, step: Optional[int] = None, replay: bool = True) -> dict:
         """Recover from the newest complete snapshot (+ WAL replay).
@@ -624,6 +703,7 @@ class ShardedEngine:
 
     # -- internals ------------------------------------------------------
 
+    @requires_lock("_route_lock")
     def _rebind(self, scfg: sh.ShardedConfig) -> None:
         """Swap the static sharded config and rebuild every routed program
         (ownership/base changes are baked into them as constants)."""

@@ -1,0 +1,146 @@
+"""mcqlint self-tests (DESIGN.md §11): the fixture corpus is the linter's
+own regression suite — every rule flags exactly its seeded violation and
+nothing else, and the real tree is clean.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO not in sys.path:  # tools/ lives at the repo root, not under src/
+    sys.path.insert(0, REPO)
+
+from tools.mcqlint import catalog, run_paths                  # noqa: E402
+from tools.mcqlint.core import all_rules                      # noqa: E402
+
+FIXTURES = os.path.join(REPO, "tools", "mcqlint", "fixtures")
+SRC = os.path.join(REPO, "src")
+TESTS = os.path.join(REPO, "tests")
+
+#: every rule has exactly one seeded-violation fixture
+RULE_TO_FIXTURE = {
+    "MCQ-L001": "fixture_l001.py",
+    "MCQ-L002": "fixture_l002.py",
+    "MCQ-L003": "fixture_l003.py",
+    "MCQ-L004": "fixture_l004.py",
+    "MCQ-O001": "fixture_o001.py",
+    "MCQ-O002": "fixture_o002.py",
+    "MCQ-P001": "fixture_p001.py",
+    "MCQ-C001": "fixture_c001.py",
+    "MCQ-U001": "fixture_u001.py",
+    "MCQ-F401": "fixture_f401.py",
+    "MCQ-E741": "fixture_e741.py",
+}
+
+
+def _fixture(name):
+    return os.path.join(FIXTURES, name)
+
+
+# ---------------------------------------------------------------------------
+# rule <-> fixture diagonal
+# ---------------------------------------------------------------------------
+
+
+def test_every_rule_has_a_fixture():
+    ids = {r.id for r in all_rules()}
+    assert ids == set(RULE_TO_FIXTURE), (
+        "rule set and fixture corpus diverged")
+
+
+@pytest.mark.parametrize("rule_id,fixture", sorted(RULE_TO_FIXTURE.items()))
+def test_fixture_trips_exactly_its_rule(rule_id, fixture):
+    """Standalone, a fixture produces findings for its own rule ONLY —
+    a seeded violation that also trips a neighbouring rule would make the
+    corpus useless for localising regressions."""
+    findings = run_paths([_fixture(fixture)])
+    assert findings, f"{fixture} produced no findings"
+    assert {f.rule for f in findings} == {rule_id}, (
+        f"{fixture} tripped {sorted({f.rule for f in findings})}, "
+        f"expected only {rule_id}")
+
+
+@pytest.mark.parametrize("rule_id,fixture", sorted(RULE_TO_FIXTURE.items()))
+def test_rule_selects_its_fixture_from_the_corpus(rule_id, fixture):
+    """Each rule, run alone over the whole corpus, flags its own fixture
+    (other fixtures may legitimately contain secondary matter for the same
+    rule, but the designated one must be found)."""
+    findings = run_paths([FIXTURES], select=[rule_id])
+    assert findings, f"{rule_id} found nothing in the corpus"
+    assert all(f.rule == rule_id for f in findings)
+    flagged = {os.path.basename(f.path) for f in findings}
+    assert fixture in flagged, (
+        f"{rule_id} flagged {sorted(flagged)} but not {fixture}")
+
+
+# ---------------------------------------------------------------------------
+# the real tree is clean (the CI gate's contract)
+# ---------------------------------------------------------------------------
+
+
+def test_real_tree_is_clean():
+    findings = run_paths([SRC], tests_dir=TESTS)
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# CLI behaviour (exit codes + junit artifact)
+# ---------------------------------------------------------------------------
+
+
+def _run_cli(*args):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "tools.mcqlint", *args],
+        cwd=REPO, env=env, capture_output=True, text=True)
+
+
+def test_cli_clean_tree_exits_zero(tmp_path):
+    junit = tmp_path / "lint.xml"
+    proc = _run_cli("src", "--junit", str(junit))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    xml = junit.read_text()
+    assert 'failures="0"' in xml
+    assert "MCQ-L001" in xml  # one testcase per rule, even when clean
+
+
+def test_cli_fixture_corpus_exits_nonzero(tmp_path):
+    junit = tmp_path / "lint.xml"
+    proc = _run_cli("tools/mcqlint/fixtures", "--tests-dir", "",
+                    "--junit", str(junit))
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    # every rule fires on the corpus -> every junit testcase fails
+    xml = junit.read_text()
+    assert xml.count("<failure") == len(RULE_TO_FIXTURE)
+
+
+@pytest.mark.parametrize("fixture", sorted(RULE_TO_FIXTURE.values()))
+def test_cli_each_fixture_exits_nonzero(fixture):
+    proc = _run_cli(os.path.join("tools", "mcqlint", "fixtures", fixture),
+                    "--tests-dir", "")
+    assert proc.returncode == 1, (
+        f"{fixture}: expected findings, got\n{proc.stdout}{proc.stderr}")
+
+
+# ---------------------------------------------------------------------------
+# catalog consistency
+# ---------------------------------------------------------------------------
+
+
+def test_catalog_covers_every_rule_and_assumption_links():
+    by_rule = catalog.by_rule()
+    for rule in all_rules():
+        inv = by_rule[rule.id]
+        if inv.key != "I-hygiene":  # pure style: no assumption to cite
+            assert inv.assumptions, f"{inv.id} cites no A-assumptions"
+        assert all(a.startswith("A") for a in inv.assumptions)
+
+
+def test_catalog_table_renders():
+    table = catalog.render_table()
+    for inv in catalog.CATALOG:
+        assert inv.id in table
+    assert "MCQ-L003" in table

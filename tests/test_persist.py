@@ -432,8 +432,7 @@ def test_engine_cadence_snapshots_in_background(tmp_path):
     src, dst = _distinct_count_batch(n_src=4)
     for _ in range(4):
         eng.observe(src, dst)
-    if eng._snapshot_thread is not None:
-        eng._snapshot_thread.join()
+    eng.close()                        # joins the async snapshot writers
     assert eng.stats["snapshots"] == 2
     assert snap_io.latest_complete_step(str(tmp_path / "snap")) == 4
 
@@ -448,6 +447,61 @@ def test_engine_watchdog_escalation_checkpoints(tmp_path):
     eng.observe(src, dst)                     # 2nd slow step escalates
     assert eng.stats["snapshots"] == 1
     assert snap_io.latest_complete_step(str(tmp_path / "snap")) is not None
+
+
+def test_snapshot_truncates_redundant_wal_segments(tmp_path):
+    """WAL GC rides the snapshot cadence: after a snapshot at wal_seq
+    commits, every closed segment holding only records with seq <= wal_seq
+    is unlinked — and recovery from what remains is still exact."""
+    eng = _engine(tmp_path)
+    eng.wal.segment_records = 1        # one batch per segment -> all closed
+    src, dst = _distinct_count_batch(n_src=4)
+    for _ in range(3):
+        eng.observe(src, dst)
+    wal_dir = tmp_path / "wal"
+    assert len(list(wal_dir.glob("wal_*.seg"))) == 3
+    eng.checkpoint()                   # sync: GC runs before return
+    assert len(list(wal_dir.glob("wal_*.seg"))) == 0
+    src2, dst2 = _distinct_count_batch(n_src=4, seed=1)
+    eng.observe(src2, dst2)            # post-snapshot: survives GC
+    assert len(list(wal_dir.glob("wal_*.seg"))) == 1
+
+    eng2 = _engine(tmp_path)
+    info = eng2.restore()
+    assert info["mode"] == "exact" and info["replayed"] == 1
+    snap_a, snap_b = eng.store.acquire(), eng2.store.acquire()
+    try:
+        _assert_states_equal(snap_a.state, snap_b.state)
+    finally:
+        eng.store.release(snap_a)
+        eng2.store.release(snap_b)
+
+
+def test_async_snapshot_gc_waits_for_commit_and_close_drains(tmp_path):
+    """Async-cadence snapshots truncate the WAL only once the manifest
+    commits (worker completion callback), and ``close()`` joins the
+    non-daemon writers so shutdown never abandons a half-written step."""
+    with _engine(tmp_path, snapshot_every=2) as eng:
+        eng.wal.segment_records = 1
+        src, dst = _distinct_count_batch(n_src=4)
+        for _ in range(4):
+            eng.observe(src, dst)
+    # context exit ran close(): workers joined, callbacks (GC) done
+    assert eng._io_threads == []
+    assert snap_io.latest_complete_step(str(tmp_path / "snap")) == 4
+    # snapshots landed at wal_seq=1 and wal_seq=3 -> all 4 segments GC'd
+    assert len(list((tmp_path / "wal").glob("wal_*.seg"))) == 0
+    eng.close()                        # idempotent
+
+    eng2 = _engine(tmp_path)
+    info = eng2.restore()
+    assert info["mode"] == "exact" and info["replayed"] == 0
+    snap_a, snap_b = eng.store.acquire(), eng2.store.acquire()
+    try:
+        _assert_states_equal(snap_a.state, snap_b.state)
+    finally:
+        eng.store.release(snap_a)
+        eng2.store.release(snap_b)
 
 
 def test_engine_restore_skips_torn_snapshot(tmp_path):

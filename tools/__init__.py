@@ -1,0 +1,1 @@
+"""Repo tooling namespace (not shipped with ``repro``)."""

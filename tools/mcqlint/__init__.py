@@ -1,0 +1,18 @@
+"""mcqlint: repo-specific static analyzer for the MCPrioQ engine.
+
+A general linter cannot know that ``self.stats`` is ``_stats_lock``-protected,
+that ``wal.append`` must precede ``_apply_locked``, or that every kernel
+dispatcher needs a bit-exact ref oracle.  mcqlint does: it parses the
+declaration conventions of ``repro.analysis.invariants`` (``@requires_lock``,
+``@kernel_op``, ``_MCQ_LOCK_ORDER``, ``_MCQ_LOCK_PROTECTS``) straight from the
+AST — never importing the checked code — and enforces the invariant catalog
+of DESIGN.md §11 (``tools/mcqlint/catalog.py``) across the tree.
+
+Run as ``python -m tools.mcqlint src/``; exits nonzero on any finding.
+The rules also absorb the two ruff checks CI used to want but cannot install
+in-container (F401 unused imports, E741 ambiguous names).
+"""
+
+from tools.mcqlint.core import Finding, run_paths
+
+__all__ = ["Finding", "run_paths"]

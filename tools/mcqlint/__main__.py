@@ -1,0 +1,5 @@
+import sys
+
+from tools.mcqlint.core import main
+
+sys.exit(main())

@@ -1,0 +1,115 @@
+"""Shared AST helpers for mcqlint rules (declaration-convention parsing)."""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Optional, Tuple
+
+REQUIRES_NAMES = ("requires_lock",)
+KERNEL_OP_NAMES = ("kernel_op",)
+LOCK_ORDER_ATTR = "_MCQ_LOCK_ORDER"
+LOCK_PROTECTS_ATTR = "_MCQ_LOCK_PROTECTS"
+
+
+def attr_chain(node: ast.AST) -> Optional[str]:
+    """Dotted name of a Name/Attribute chain: ``self.wal.append`` -> the
+    string, anything else (subscripts, calls in the chain) -> None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def str_tuple(node: ast.AST) -> Tuple[str, ...]:
+    """Literal tuple/list of strings -> the strings (else empty)."""
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for el in node.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                out.append(el.value)
+        return tuple(out)
+    return ()
+
+
+def decorator_call(fn: ast.AST, names: Tuple[str, ...]
+                   ) -> Optional[ast.Call]:
+    """The ``@name(...)`` decorator Call when present (matches a bare name
+    or the final attribute segment, so ``@invariants.requires_lock`` also
+    counts)."""
+    for dec in getattr(fn, "decorator_list", ()):
+        if not isinstance(dec, ast.Call):
+            continue
+        chain = attr_chain(dec.func)
+        if chain and chain.split(".")[-1] in names:
+            return dec
+    return None
+
+
+def requires_locks(fn: ast.AST) -> Tuple[str, ...]:
+    call = decorator_call(fn, REQUIRES_NAMES)
+    if call is None:
+        return ()
+    return tuple(a.value for a in call.args
+                 if isinstance(a, ast.Constant) and isinstance(a.value, str))
+
+
+def kernel_op_decl(fn: ast.AST) -> Optional[Dict[str, object]]:
+    call = decorator_call(fn, KERNEL_OP_NAMES)
+    if call is None:
+        return None
+    out: Dict[str, object] = {"ref": None, "pallas": None, "composes": ()}
+    for kw in call.keywords:
+        if kw.arg == "composes":
+            out["composes"] = str_tuple(kw.value)
+        elif kw.arg in ("ref", "pallas"):
+            if isinstance(kw.value, ast.Constant):
+                out[kw.arg] = kw.value.value
+    return out
+
+
+def class_lock_decls(cls: ast.ClassDef):
+    """(order, protects) parsed from the class-body literal assignments."""
+    order: Tuple[str, ...] = ()
+    protects: Dict[str, Tuple[str, ...]] = {}
+    for stmt in cls.body:
+        if not isinstance(stmt, ast.Assign) or len(stmt.targets) != 1:
+            continue
+        tgt = stmt.targets[0]
+        if not isinstance(tgt, ast.Name):
+            continue
+        if tgt.id == LOCK_ORDER_ATTR:
+            order = str_tuple(stmt.value)
+        elif tgt.id == LOCK_PROTECTS_ATTR and isinstance(stmt.value,
+                                                         ast.Dict):
+            for k, v in zip(stmt.value.keys, stmt.value.values):
+                if (isinstance(k, ast.Constant)
+                        and isinstance(k.value, str)):
+                    protects[k.value] = str_tuple(v)
+    return order, protects
+
+
+def owned_locks(cls: ast.ClassDef) -> Dict[str, int]:
+    """attr name -> lineno for every ``self.X = threading.Lock()`` (or
+    RLock) assignment anywhere in the class body."""
+    out: Dict[str, int] = {}
+    for node in ast.walk(cls):
+        if not (isinstance(node, ast.Assign) and isinstance(node.value,
+                                                            ast.Call)):
+            continue
+        chain = attr_chain(node.value.func)
+        if chain is None or chain.split(".")[-1] not in ("Lock", "RLock"):
+            continue
+        for tgt in node.targets:
+            t = attr_chain(tgt)
+            if t and t.startswith("self.") and t.count(".") == 1:
+                out[t.split(".")[1]] = node.lineno
+    return out
+
+
+def methods(cls: ast.ClassDef) -> Dict[str, ast.FunctionDef]:
+    return {stmt.name: stmt for stmt in cls.body
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef))}

@@ -1,0 +1,136 @@
+"""The typed invariant catalog (DESIGN.md §11).
+
+Each entry is one machine-checked invariant of the engine, cross-referenced
+to the DESIGN.md assumption log (A1-A12) it underwrites and to the mcqlint
+rule ids (and/or explorer scenarios) that enforce it.  DESIGN.md §11 renders
+this table in prose; ``python -m tools.mcqlint --catalog`` prints it; the
+test suite asserts every rule id maps back to exactly one invariant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Invariant:
+    id: str                    # I1..In
+    key: str                   # short family key (I-lock, I-order, ...)
+    statement: str             # one-sentence normative statement
+    assumptions: Tuple[str, ...]   # A1..A12 entries it underwrites
+    rules: Tuple[str, ...]         # mcqlint rule ids enforcing it
+    dynamic: Tuple[str, ...] = ()  # explorer scenarios exercising it
+
+
+CATALOG: Tuple[Invariant, ...] = (
+    Invariant(
+        id="I1", key="I-lock",
+        statement=(
+            "State a class declares lock-protected (_MCQ_LOCK_PROTECTS) — "
+            "EpochStore-published snapshots, Engine stats dicts, the WAL "
+            "seq — is mutated only with the declared lock held, either "
+            "lexically (with self.lock:) or by contract (@requires_lock)."),
+        assumptions=("A2", "A11"),
+        rules=("MCQ-L001", "MCQ-L002"),
+        dynamic=("stats_lost_update",),
+    ),
+    Invariant(
+        id="I2", key="I-lock",
+        statement=(
+            "Locks of one class are acquired only in the declared total "
+            "order (_MCQ_LOCK_ORDER, outermost first); every lock the "
+            "class owns appears in the order."),
+        assumptions=("A2",),
+        rules=("MCQ-L003", "MCQ-L004"),
+    ),
+    Invariant(
+        id="I3", key="I-order",
+        statement=(
+            "A batch is WAL-appended strictly before it is applied to the "
+            "chain (write-AHEAD: a torn append is a batch that never "
+            "happened)."),
+        assumptions=("A11",),
+        rules=("MCQ-O001",),
+        dynamic=("wal_double_replay",),
+    ),
+    Invariant(
+        id="I4", key="I-order",
+        statement=(
+            "Snapshot payload (chain.json sidecar, arrays.npz) is written "
+            "strictly before the manifest rename; nothing is written after "
+            "the rename — the rename IS the commit."),
+        assumptions=("A11",),
+        rules=("MCQ-O002",),
+    ),
+    Invariant(
+        id="I5", key="I-parity",
+        statement=(
+            "Every kernel dispatcher registers (@kernel_op) a bit-exact ref "
+            "oracle or a composition of registered ops; every *_pallas "
+            "kernel is reachable from a registration; every op is named by "
+            "an equivalence test."),
+        assumptions=("A9", "A2"),
+        rules=("MCQ-P001",),
+    ),
+    Invariant(
+        id="I6", key="I-counter",
+        statement=(
+            "Every MCState counter field initialised to int32(0) is "
+            "surfaced through mcprioq.counter_stats (_COUNTER_FIELDS) or "
+            "maintenance_stats — no silent drops."),
+        assumptions=("A4", "A6", "A10"),
+        rules=("MCQ-C001",),
+        dynamic=("counter_conservation",),
+    ),
+    Invariant(
+        id="I7", key="I-purity",
+        statement=(
+            "jit/shard_map bodies are pure: no wall-clock or host RNG "
+            "calls, no global/nonlocal writes, no mutation of self — "
+            "replay determinism (bit-exact recovery) depends on it."),
+        assumptions=("A9", "A12"),
+        rules=("MCQ-U001",),
+    ),
+    Invariant(
+        id="I8", key="I-route",
+        statement=(
+            "A routing program is only ever paired with the snapshot it "
+            "was compiled against: _rebind swaps (cfg, _update, _maintain) "
+            "and publishes under _route_lock; readers fetch the pair under "
+            "the same lock."),
+        assumptions=("A6", "A10", "A12"),
+        rules=("MCQ-L001", "MCQ-L002"),
+        dynamic=("route_snapshot_mispairing",),
+    ),
+    Invariant(
+        id="I9", key="I-hygiene",
+        statement=(
+            "Tree hygiene mcqlint absorbs from ruff (uninstallable "
+            "in-container): no unused imports (F401, __init__.py exempt), "
+            "no ambiguous l/O/I names (E741)."),
+        assumptions=(),
+        rules=("MCQ-F401", "MCQ-E741"),
+    ),
+)
+
+
+def by_rule() -> Dict[str, Invariant]:
+    """rule id -> invariant (first catalog entry naming the rule wins for
+    display; rules may underwrite several invariants)."""
+    out: Dict[str, Invariant] = {}
+    for inv in CATALOG:
+        for rule in inv.rules:
+            out.setdefault(rule, inv)
+    return out
+
+
+def render_table() -> str:
+    lines = ["| Id | Family | Invariant | Assumptions | Enforced by |",
+             "|----|--------|-----------|-------------|-------------|"]
+    for inv in CATALOG:
+        enforced = list(inv.rules) + [f"explorer:{s}" for s in inv.dynamic]
+        lines.append("| {} | {} | {} | {} | {} |".format(
+            inv.id, inv.key, inv.statement.replace("|", "\\|"),
+            " ".join(inv.assumptions) or "—", ", ".join(enforced)))
+    return "\n".join(lines)

@@ -1,0 +1,210 @@
+"""mcqlint runner: file discovery, rule dispatch, findings, junit, CLI.
+
+Rules never import the analyzed code — everything is AST-level, so linting
+``src/`` costs milliseconds and cannot be perturbed by import-time effects
+(jax initialisation, device discovery).  A rule sees the whole
+:class:`Project` (every parsed file plus, optionally, the raw text of the
+test tree) so cross-file invariants (kernel parity) are first-class.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import os
+import sys
+from typing import Dict, List, Optional, Sequence
+from xml.sax.saxutils import escape
+
+from tools.mcqlint import catalog
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+@dataclasses.dataclass
+class SourceFile:
+    path: str       # as given (repo-relative in CI)
+    text: str
+    tree: ast.Module
+
+    @property
+    def name(self) -> str:
+        return os.path.basename(self.path)
+
+
+class Project:
+    """Everything a rule may look at."""
+
+    def __init__(self, files: Sequence[SourceFile],
+                 tests_text: Optional[str] = None):
+        self.files = list(files)
+        #: concatenated text of tests/*.py when a test tree was scanned,
+        #: None when not (fixture runs) — rules must skip test-mention
+        #: checks in that case rather than flagging everything.
+        self.tests_text = tests_text
+
+
+class Rule:
+    """One invariant check.  Subclasses set ``id``/``summary`` and
+    implement :meth:`check`."""
+
+    id: str = ""
+    summary: str = ""
+
+    def check(self, project: Project) -> List[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+    def finding(self, sf: SourceFile, node, message: str) -> Finding:
+        return Finding(self.id, sf.path, getattr(node, "lineno", 0), message)
+
+
+def all_rules() -> List[Rule]:
+    from tools.mcqlint.rules import (counters, locks, ordering, parity,
+                                     purity, ruffish)
+    rules: List[Rule] = []
+    for mod in (locks, ordering, parity, counters, purity, ruffish):
+        rules.extend(mod.RULES)
+    ids = [r.id for r in rules]
+    assert len(ids) == len(set(ids)), f"duplicate rule ids: {ids}"
+    known = catalog.by_rule()
+    missing = [i for i in ids if i not in known]
+    assert not missing, f"rules missing from the catalog: {missing}"
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# discovery + run
+# ---------------------------------------------------------------------------
+
+
+def _iter_py(paths: Sequence[str]):
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+        else:
+            for root, dirs, names in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                for n in sorted(names):
+                    if n.endswith(".py"):
+                        yield os.path.join(root, n)
+
+
+def load_project(paths: Sequence[str],
+                 tests_dir: Optional[str] = None) -> Project:
+    files: List[SourceFile] = []
+    for path in _iter_py(paths):
+        with open(path, "r") as f:
+            text = f.read()
+        try:
+            tree = ast.parse(text, filename=path)
+        except SyntaxError as e:
+            raise SystemExit(f"mcqlint: cannot parse {path}: {e}")
+        files.append(SourceFile(path=path, text=text, tree=tree))
+    tests_text = None
+    if tests_dir and os.path.isdir(tests_dir):
+        chunks = []
+        for path in _iter_py([tests_dir]):
+            with open(path, "r") as f:
+                chunks.append(f.read())
+        tests_text = "\n".join(chunks)
+    return Project(files, tests_text=tests_text)
+
+
+def run_paths(paths: Sequence[str], select: Optional[Sequence[str]] = None,
+              tests_dir: Optional[str] = None) -> List[Finding]:
+    """Lint ``paths``; returns findings sorted by (path, line, rule).
+
+    ``select`` restricts to the given rule ids (fixture self-tests);
+    ``tests_dir`` enables the test-mention half of the parity rule.
+    """
+    project = load_project(paths, tests_dir=tests_dir)
+    findings: List[Finding] = []
+    for rule in all_rules():
+        if select and rule.id not in select:
+            continue
+        findings.extend(rule.check(project))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+# ---------------------------------------------------------------------------
+# junit + CLI
+# ---------------------------------------------------------------------------
+
+
+def write_junit(findings: List[Finding], rules: List[Rule],
+                path: str) -> None:
+    """One junit testcase per rule; a rule with findings fails with every
+    finding in its message (CI surfaces the XML as an artifact)."""
+    by_rule: Dict[str, List[Finding]] = {r.id: [] for r in rules}
+    for f in findings:
+        by_rule.setdefault(f.rule, []).append(f)
+    cases = []
+    for rule in rules:
+        got = by_rule.get(rule.id, [])
+        body = ""
+        if got:
+            text = escape("\n".join(f.render() for f in got))
+            body = (f'<failure message="{len(got)} finding(s)">'
+                    f"{text}</failure>")
+        cases.append(f'<testcase classname="mcqlint" name="{rule.id}">'
+                     f"{body}</testcase>")
+    xml = ('<?xml version="1.0" encoding="utf-8"?>\n'
+           f'<testsuite name="mcqlint" tests="{len(rules)}" '
+           f'failures="{sum(1 for c in cases if "<failure" in c)}">'
+           + "".join(cases) + "</testsuite>\n")
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        f.write(xml)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.mcqlint",
+        description="invariant-enforcing static analyzer (DESIGN.md §11)")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files/directories to lint (default: src)")
+    ap.add_argument("--select", action="append", default=None,
+                    metavar="RULE", help="run only these rule ids")
+    ap.add_argument("--junit", default=None, metavar="FILE",
+                    help="write a junit XML report")
+    ap.add_argument("--tests-dir", default="tests",
+                    help="test tree for the parity test-mention check "
+                         "(default: tests; pass '' to disable)")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--catalog", action="store_true",
+                    help="print the invariant catalog table and exit")
+    args = ap.parse_args(argv)
+
+    if args.catalog:
+        print(catalog.render_table())
+        return 0
+    rules = all_rules()
+    if args.list_rules:
+        inv = catalog.by_rule()
+        for r in rules:
+            print(f"{r.id}  [{inv[r.id].id}/{inv[r.id].key}]  {r.summary}")
+        return 0
+
+    paths = args.paths or ["src"]
+    tests_dir = args.tests_dir or None
+    findings = run_paths(paths, select=args.select, tests_dir=tests_dir)
+    for f in findings:
+        print(f.render())
+    if args.junit:
+        write_junit(findings, rules, args.junit)
+    if findings:
+        print(f"mcqlint: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    return 0

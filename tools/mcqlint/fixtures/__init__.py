@@ -1,0 +1,1 @@
+"""Lint self-test corpus: one seeded violation per rule (never imported)."""

@@ -1,0 +1,13 @@
+"""Seeded violation for MCQ-C001: counter field nobody surfaces."""
+import jax.numpy as jnp
+
+_COUNTER_FIELDS = ("n_rows",)
+
+
+def init(cls):
+    # VIOLATION: dropped_rows is int32(0)-initialised but unsurfaced
+    return cls(n_rows=jnp.int32(0), dropped_rows=jnp.int32(0))
+
+
+def maintenance_stats(state):
+    return {"n_rows": int(state.n_rows)}

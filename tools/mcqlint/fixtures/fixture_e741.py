@@ -1,0 +1,6 @@
+"""Seeded violation for MCQ-E741: ambiguous single-letter binding."""
+
+
+def confusing(xs):
+    l = len(xs)  # VIOLATION: ambiguous name
+    return l

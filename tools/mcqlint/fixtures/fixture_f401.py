@@ -1,0 +1,6 @@
+"""Seeded violation for MCQ-F401: unused import."""
+import os  # VIOLATION: imported but unused
+
+
+def nothing():
+    return 0

@@ -1,0 +1,14 @@
+"""Seeded violation for MCQ-L001: protected mutation without the lock."""
+import threading
+
+
+class BadStatsMutation:
+    _MCQ_LOCK_ORDER = ("_stats_lock",)
+    _MCQ_LOCK_PROTECTS = {"_stats_lock": ("stats",)}
+
+    def __init__(self):
+        self._stats_lock = threading.Lock()
+        self.stats = {"calls": 0}
+
+    def bump(self):
+        self.stats["calls"] += 1  # VIOLATION: _stats_lock not held

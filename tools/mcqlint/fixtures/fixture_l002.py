@@ -1,0 +1,19 @@
+"""Seeded violation for MCQ-L002: @requires_lock callee, lock not held."""
+import threading
+
+from repro.analysis.invariants import requires_lock
+
+
+class BadRequiresCall:
+    _MCQ_LOCK_ORDER = ("_lock",)
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.items = []
+
+    @requires_lock("_lock")
+    def _append_locked(self, x):
+        self.items.append(x)
+
+    def add(self, x):
+        self._append_locked(x)  # VIOLATION: _lock not held

@@ -1,0 +1,15 @@
+"""Seeded violation for MCQ-L003: lock-order inversion."""
+import threading
+
+
+class BadLockOrder:
+    _MCQ_LOCK_ORDER = ("_outer", "_inner")
+
+    def __init__(self):
+        self._outer = threading.Lock()
+        self._inner = threading.Lock()
+
+    def inverted(self):
+        with self._inner:
+            with self._outer:  # VIOLATION: inverts _MCQ_LOCK_ORDER
+                pass

@@ -1,0 +1,14 @@
+"""Seeded violation for MCQ-L004: owned lock missing from the order."""
+import threading
+
+
+class UndeclaredLockOwner:
+    _MCQ_LOCK_ORDER = ("_declared",)
+
+    def __init__(self):
+        self._declared = threading.Lock()
+        self._stealth = threading.Lock()  # VIOLATION: unranked lock
+
+    def use(self):
+        with self._stealth:
+            pass

@@ -1,0 +1,14 @@
+"""Seeded violation for MCQ-O001: apply before WAL append."""
+
+
+class ApplyBeforeAppend:
+    def __init__(self, wal, chain):
+        self.wal = wal
+        self.chain = chain
+
+    def observe(self, src, dst, w):
+        self._apply_locked(src, dst, w)  # VIOLATION: apply precedes append
+        self.wal.append(src, dst, w)
+
+    def _apply_locked(self, src, dst, w):
+        self.chain.update(src, dst, w)

@@ -1,0 +1,13 @@
+"""Seeded violation for MCQ-O002: payload write after the manifest rename."""
+import json
+import os
+
+import numpy as np
+
+
+def save(path, arrays, manifest):
+    tmp = os.path.join(path, "manifest.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, os.path.join(path, "manifest.json"))
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)  # VIOLATION

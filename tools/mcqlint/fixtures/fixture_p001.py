@@ -1,0 +1,7 @@
+"""Seeded violation for MCQ-P001: ref oracle that does not exist."""
+from repro.analysis.invariants import kernel_op
+
+
+@kernel_op(ref="missing_oracle")
+def broken_op(x):  # VIOLATION: 'missing_oracle' resolves nowhere
+    return x

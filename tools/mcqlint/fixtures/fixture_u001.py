@@ -1,0 +1,9 @@
+"""Seeded violation for MCQ-U001: wall clock inside a jit body."""
+import time
+
+import jax
+
+
+@jax.jit
+def impure(x):
+    return x * time.time()  # VIOLATION: trace-time nondeterminism

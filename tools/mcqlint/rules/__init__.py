@@ -1,0 +1,1 @@
+"""Rule modules; each exposes ``RULES = [...]``."""

@@ -1,0 +1,93 @@
+"""I-counter rule: every MCState counter is surfaced (invariant I6).
+
+Applies to modules that declare ``_COUNTER_FIELDS`` (i.e. ``core/mcprioq``
+and any future sibling).  Two directions:
+
+* every field initialised to ``int32(0)`` in ``init()`` must be listed in
+  ``_COUNTER_FIELDS`` or read by ``maintenance_stats`` (a counter nobody
+  can observe is a silent drop — A4/A6/A10 all rest on *counted* drops),
+* every ``_COUNTER_FIELDS`` entry must be such an init field (a typo'd
+  name would make ``counter_stats`` raise only at runtime).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from tools.mcqlint import astutil
+from tools.mcqlint.core import Finding, Project, Rule
+
+
+def _zero_init_fields(init_fn: ast.AST) -> dict:
+    """keyword args of any call in ``init`` whose value is ``*.int32(0)``
+    (or plain ``int32(0)``): name -> lineno."""
+    out = {}
+    for node in ast.walk(init_fn):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if kw.arg is None or not isinstance(kw.value, ast.Call):
+                continue
+            chain = astutil.attr_chain(kw.value.func)
+            if not (chain and chain.split(".")[-1] == "int32"):
+                continue
+            args = kw.value.args
+            if (len(args) == 1 and isinstance(args[0], ast.Constant)
+                    and args[0].value == 0):
+                out[kw.arg] = kw.value.lineno
+    return out
+
+
+def _read_attrs(fn: ast.AST) -> Set[str]:
+    return {node.attr for node in ast.walk(fn)
+            if isinstance(node, ast.Attribute)}
+
+
+class CounterSurfaced(Rule):
+    id = "MCQ-C001"
+    summary = ("every int32(0)-initialised MCState counter appears in "
+               "_COUNTER_FIELDS or maintenance_stats (and vice versa)")
+
+    def check(self, project: Project) -> List[Finding]:
+        out: List[Finding] = []
+        for sf in project.files:
+            fields: Optional[tuple] = None
+            fields_line = 0
+            init_fn = None
+            maint_fn = None
+            for node in sf.tree.body:
+                if (isinstance(node, ast.Assign)
+                        and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)
+                        and node.targets[0].id == "_COUNTER_FIELDS"):
+                    fields = astutil.str_tuple(node.value)
+                    fields_line = node.lineno
+                elif isinstance(node, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    if node.name == "init":
+                        init_fn = node
+                    elif node.name == "maintenance_stats":
+                        maint_fn = node
+            if fields is None or init_fn is None:
+                continue
+            zero = _zero_init_fields(init_fn)
+            maint = _read_attrs(maint_fn) if maint_fn is not None else set()
+            for name, lineno in sorted(zero.items()):
+                if name not in fields and name not in maint:
+                    out.append(Finding(
+                        self.id, sf.path, lineno,
+                        f"counter field '{name}' (int32(0) in init) is "
+                        f"surfaced by neither _COUNTER_FIELDS nor "
+                        f"maintenance_stats"))
+            for name in fields:
+                if name not in zero:
+                    out.append(Finding(
+                        self.id, sf.path, fields_line,
+                        f"_COUNTER_FIELDS entry '{name}' is not an "
+                        f"int32(0)-initialised field of init() — "
+                        f"counter_stats would fail on it"))
+        return out
+
+
+RULES = [CounterSurfaced()]

@@ -1,0 +1,327 @@
+"""I-lock rules: lock-protected mutation, @requires_lock contracts,
+lock-order inversion, undeclared locks (invariants I1/I2/I8).
+
+Analysis model: per class, per method, a lexical held-lock set tracked
+through ``with self.<lock>:`` blocks and seeded by ``@requires_lock``.  The
+engine only ever acquires locks with ``with`` (never bare ``.acquire()``),
+so the lexical set is exact.  Cross-method effects use an intra-class
+call-graph fixpoint: ``acquires(m)`` = locks ``m`` may take directly or via
+``self.`` calls, which is what lets the analyzer see that ``query()``
+(holding ``_route_lock``) reaching a compile-cache helper acquires
+``_compile_lock`` — and reject the inverted nesting.
+
+A class opts in by declaring ``_MCQ_LOCK_ORDER`` / ``_MCQ_LOCK_PROTECTS``;
+undeclared classes are not scanned (the convention is the contract).
+``__init__`` is exempt from the mutation rule: the object is pre-publication
+there, no other thread can hold a reference yet.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.mcqlint import astutil
+from tools.mcqlint.core import Finding, Project, Rule, SourceFile
+
+#: dict/list/set methods that mutate their receiver in place
+_MUTATORS = frozenset({
+    "update", "setdefault", "pop", "popitem", "clear", "append", "extend",
+    "insert", "remove", "add", "discard", "__setitem__",
+})
+
+_NESTED_SCOPES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+
+
+class _ClassInfo:
+    def __init__(self, sf: SourceFile, cls: ast.ClassDef):
+        self.sf = sf
+        self.cls = cls
+        self.order, self.protects = astutil.class_lock_decls(cls)
+        self.owned = astutil.owned_locks(cls)
+        self.methods = astutil.methods(cls)
+        self.requires = {name: astutil.requires_locks(fn)
+                         for name, fn in self.methods.items()}
+        # resource -> guarding lock (reverse of protects)
+        self.guard: Dict[str, str] = {}
+        for lock, resources in self.protects.items():
+            for res in resources:
+                self.guard[res] = lock
+        self.lock_names: Set[str] = (set(self.order)
+                                     | set(self.protects)
+                                     | set(self.owned))
+        self.acquires = self._acquires_fixpoint()
+
+    def rank(self, lock: str) -> Optional[int]:
+        try:
+            return self.order.index(lock)
+        except ValueError:
+            return None
+
+    def lock_of(self, expr: ast.AST) -> Optional[str]:
+        """Lock attr name when ``expr`` is ``self.<known lock>``."""
+        chain = astutil.attr_chain(expr)
+        if (chain and chain.startswith("self.") and chain.count(".") == 1
+                and chain[5:] in self.lock_names):
+            return chain[5:]
+        return None
+
+    def _direct(self, fn: ast.AST) -> Tuple[Set[str], Set[str]]:
+        """(locks acquired via ``with self.X``, self-methods called),
+        anywhere in the method including nested defs (a callback that
+        takes a lock still contributes to the caller's footprint)."""
+        locks: Set[str] = set()
+        calls: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.With):
+                for item in node.items:
+                    lock = self.lock_of(item.context_expr)
+                    if lock is not None:
+                        locks.add(lock)
+            elif isinstance(node, ast.Call):
+                chain = astutil.attr_chain(node.func)
+                if (chain and chain.startswith("self.")
+                        and chain.count(".") == 1
+                        and chain[5:] in self.methods):
+                    calls.add(chain[5:])
+        return locks, calls
+
+    def _acquires_fixpoint(self) -> Dict[str, Set[str]]:
+        direct: Dict[str, Set[str]] = {}
+        callees: Dict[str, Set[str]] = {}
+        for name, fn in self.methods.items():
+            direct[name], callees[name] = self._direct(fn)
+        acq = {name: set(locks) for name, locks in direct.items()}
+        changed = True
+        while changed:
+            changed = False
+            for name in acq:
+                for callee in callees[name]:
+                    extra = acq.get(callee, set()) - acq[name]
+                    if extra:
+                        acq[name] |= extra
+                        changed = True
+        return acq
+
+
+def _classes(project: Project):
+    for sf in project.files:
+        for node in sf.tree.body:
+            if isinstance(node, ast.ClassDef):
+                ci = _ClassInfo(sf, node)
+                if ci.order or ci.protects:
+                    yield ci
+
+
+def _mutated_resources(node: ast.AST) -> List[str]:
+    """Resources one node mutates, as dotted suffixes relative to self:
+    ``self.stats[k] += 1`` -> ``stats``; ``del self._readers[v]`` ->
+    ``_readers``; ``self.store.publish(x)`` -> ``store.publish`` (dotted
+    call pattern) and nothing else (publish is not an in-place mutator of
+    ``store``)."""
+    out: List[str] = []
+
+    def target_resource(t: ast.AST) -> None:
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for el in t.elts:
+                target_resource(el)
+            return
+        if isinstance(t, (ast.Subscript, ast.Starred)):
+            t = t.value
+        chain = astutil.attr_chain(t)
+        if chain and chain.startswith("self."):
+            out.append(chain[5:].split(".")[0])
+
+    if isinstance(node, ast.Assign):
+        for tgt in node.targets:
+            target_resource(tgt)
+    elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+        target_resource(node.target)
+    elif isinstance(node, ast.Delete):
+        for tgt in node.targets:
+            target_resource(tgt)
+    elif isinstance(node, ast.Call):
+        chain = astutil.attr_chain(node.func)
+        if chain and chain.startswith("self."):
+            suffix = chain[5:]
+            # only dotted patterns match calls: "store.publish" is a
+            # protected operation, but calling a bare attribute like
+            # self._update() is a READ of the attribute (the route-pair
+            # mutation is its assignment, checked above)
+            if "." in suffix:
+                out.append(suffix)
+            parts = suffix.split(".")
+            if len(parts) == 2 and parts[1] in _MUTATORS:
+                out.append(parts[0])  # self.stats.update -> mutates stats
+    return out
+
+
+class _MethodScan:
+    """One pass over one method, carrying the lexical held-lock list."""
+
+    def __init__(self, ci: _ClassInfo, name: str, out: List[Finding]):
+        self.ci = ci
+        self.name = name
+        self.fn = ci.methods[name]
+        self.out = out
+        self.is_init = name == "__init__"
+
+    def run(self) -> None:
+        self._walk_body(self.fn.body, list(self.ci.requires[self.name]))
+
+    # -- statement traversal (held set is per lexical position) ---------
+    def _walk_body(self, body, held) -> None:
+        for stmt in body or []:
+            self._walk_stmt(stmt, held)
+
+    def _walk_stmt(self, node, held) -> None:
+        if isinstance(node, ast.With):
+            new_held = list(held)
+            for item in node.items:
+                lock = self.ci.lock_of(item.context_expr)
+                if lock is not None:
+                    self._check_acquire(node, lock, new_held)
+                    new_held = new_held + [lock]
+                else:
+                    self._check_expr(item.context_expr, held)
+            self._walk_body(node.body, new_held)
+        elif isinstance(node, _NESTED_SCOPES):
+            pass  # deferred execution: checked under its own contract
+        elif isinstance(node, (ast.If, ast.While)):
+            self._check_expr(node.test, held)
+            self._walk_body(node.body, held)
+            self._walk_body(node.orelse, held)
+        elif isinstance(node, ast.For):
+            self._check_expr(node.iter, held)
+            self._walk_body(node.body, held)
+            self._walk_body(node.orelse, held)
+        elif isinstance(node, ast.Try):
+            self._walk_body(node.body, held)
+            for handler in node.handlers:
+                self._walk_body(handler.body, held)
+            self._walk_body(node.orelse, held)
+            self._walk_body(node.finalbody, held)
+        else:
+            # simple statement: the whole subtree is expressions
+            self._check_expr(node, held)
+
+    # -- checks ---------------------------------------------------------
+    def _check_acquire(self, node, lock: str, held) -> None:
+        ci = self.ci
+        if lock in held:
+            self.out.append(Finding(
+                LockOrderInversion.id, ci.sf.path, node.lineno,
+                f"{ci.cls.name}.{self.name} re-acquires {lock} while "
+                f"already holding it (threading.Lock self-deadlock)"))
+            return
+        r_new = ci.rank(lock)
+        for h in held:
+            r_h = ci.rank(h)
+            if r_new is not None and r_h is not None and r_new < r_h:
+                self.out.append(Finding(
+                    LockOrderInversion.id, ci.sf.path, node.lineno,
+                    f"{ci.cls.name}.{self.name} acquires {lock} while "
+                    f"holding {h}: inverts _MCQ_LOCK_ORDER {ci.order}"))
+
+    def _check_expr(self, node, held) -> None:
+        ci = self.ci
+        for sub in ast.walk(node):
+            if isinstance(sub, _NESTED_SCOPES):
+                continue  # (walk still descends; accepted imprecision)
+            if not self.is_init:
+                for res in _mutated_resources(sub):
+                    lock = ci.guard.get(res)
+                    if lock is not None and lock not in held:
+                        self.out.append(Finding(
+                            LockProtectedMutation.id, ci.sf.path,
+                            sub.lineno,
+                            f"{ci.cls.name}.{self.name} mutates '{res}' "
+                            f"without holding {lock} "
+                            f"(_MCQ_LOCK_PROTECTS)"))
+            if isinstance(sub, ast.Call):
+                self._check_call(sub, held)
+
+    def _check_call(self, call: ast.Call, held) -> None:
+        ci = self.ci
+        chain = astutil.attr_chain(call.func)
+        if not (chain and chain.startswith("self.")
+                and chain.count(".") == 1):
+            return
+        callee = chain[5:]
+        for need in ci.requires.get(callee, ()):
+            if need not in held:
+                self.out.append(Finding(
+                    RequiresLockCallSites.id, ci.sf.path, call.lineno,
+                    f"{ci.cls.name}.{self.name} calls {callee}() without "
+                    f"holding {need} (@requires_lock)"))
+        # cross-method lock-order: the callee's transitive acquisitions
+        # must all rank after every lock currently held
+        for acq in ci.acquires.get(callee, ()):
+            if acq in held:
+                continue  # guarded-variant call; @requires_lock covers it
+            r_a = ci.rank(acq)
+            for h in held:
+                r_h = ci.rank(h)
+                if r_a is not None and r_h is not None and r_a < r_h:
+                    self.out.append(Finding(
+                        LockOrderInversion.id, ci.sf.path, call.lineno,
+                        f"{ci.cls.name}.{self.name} holds {h} while "
+                        f"calling {callee}(), which may acquire {acq}: "
+                        f"inverts _MCQ_LOCK_ORDER {ci.order}"))
+
+
+def _scan(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    for ci in _classes(project):
+        for name in ci.methods:
+            _MethodScan(ci, name, out).run()
+    return out
+
+
+class LockProtectedMutation(Rule):
+    id = "MCQ-L001"
+    summary = ("mutations of _MCQ_LOCK_PROTECTS resources require the "
+               "declared lock (lexically or via @requires_lock)")
+
+    def check(self, project: Project) -> List[Finding]:
+        return [f for f in _scan(project) if f.rule == self.id]
+
+
+class RequiresLockCallSites(Rule):
+    id = "MCQ-L002"
+    summary = "@requires_lock methods are only called with the lock held"
+
+    def check(self, project: Project) -> List[Finding]:
+        return [f for f in _scan(project) if f.rule == self.id]
+
+
+class LockOrderInversion(Rule):
+    id = "MCQ-L003"
+    summary = ("lock acquisition (direct or via self-calls) never inverts "
+               "_MCQ_LOCK_ORDER; no self-deadlock re-acquisition")
+
+    def check(self, project: Project) -> List[Finding]:
+        return [f for f in _scan(project) if f.rule == self.id]
+
+
+class UndeclaredLock(Rule):
+    id = "MCQ-L004"
+    summary = ("every threading.Lock a declaring class owns appears in "
+               "_MCQ_LOCK_ORDER")
+
+    def check(self, project: Project) -> List[Finding]:
+        out: List[Finding] = []
+        for ci in _classes(project):
+            if not ci.order:
+                continue
+            for lock, lineno in sorted(ci.owned.items()):
+                if lock not in ci.order:
+                    out.append(Finding(
+                        self.id, ci.sf.path, lineno,
+                        f"{ci.cls.name} owns lock '{lock}' but "
+                        f"_MCQ_LOCK_ORDER {ci.order} does not rank it"))
+        return out
+
+
+RULES = [LockProtectedMutation(), RequiresLockCallSites(),
+         LockOrderInversion(), UndeclaredLock()]

@@ -1,0 +1,100 @@
+"""I-order rules: statement-ordering invariants of the durability layer
+(invariants I3/I4).
+
+Both rules are per-function, line-position checks over call sites — the
+ordering that matters is program order inside one function body (the WAL
+append and the apply happen in ``observe``; the payload writes and the
+manifest rename happen in ``save``/``work``), so a lexical check is exact
+for the shapes the code actually uses.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Tuple
+
+from tools.mcqlint import astutil
+from tools.mcqlint.core import Finding, Project, Rule
+
+#: call-chain suffixes meaning "append the batch to the WAL"
+_APPEND_SUFFIXES = ("wal.append",)
+#: callee names meaning "apply the batch to the chain"
+_APPLY_NAMES = ("_apply_locked", "apply_batch")
+#: callee names/suffixes that write snapshot payload (sidecar, arrays,
+#: manifest body) — all must precede the commit rename
+_PAYLOAD_NAMES = ("savez", "savez_compressed", "_write_meta", "dump")
+
+
+def _functions(tree: ast.Module):
+    """Every def in the module, at any nesting (methods, local workers)."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _calls(fn: ast.AST) -> List[Tuple[int, str]]:
+    """(lineno, dotted chain) for every call in ``fn`` body, in source
+    order; calls inside nested defs are attributed to the nested def by
+    the caller iterating ``_functions`` (so skip them here)."""
+    out = []
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node is not fn:
+            continue
+        if isinstance(node, ast.Call):
+            chain = astutil.attr_chain(node.func)
+            if chain:
+                out.append((node.lineno, chain))
+    return sorted(out)
+
+
+class WalAppendBeforeApply(Rule):
+    id = "MCQ-O001"
+    summary = ("in any function doing both, wal.append precedes the "
+               "apply call (write-AHEAD)")
+
+    def check(self, project: Project) -> List[Finding]:
+        out: List[Finding] = []
+        for sf in project.files:
+            for fn in _functions(sf.tree):
+                calls = _calls(fn)
+                appends = [ln for ln, c in calls
+                           if any(c.endswith(s) for s in _APPEND_SUFFIXES)]
+                applies = [ln for ln, c in calls
+                           if c.split(".")[-1] in _APPLY_NAMES]
+                if appends and applies and min(applies) < min(appends):
+                    out.append(Finding(
+                        self.id, sf.path, min(applies),
+                        f"{fn.name}: batch applied (line {min(applies)}) "
+                        f"before WAL append (line {min(appends)}) — "
+                        f"violates write-ahead ordering"))
+        return out
+
+
+class PayloadBeforeManifestRename(Rule):
+    id = "MCQ-O002"
+    summary = ("nothing is written after the manifest os.replace — the "
+               "rename is the snapshot commit point")
+
+    def check(self, project: Project) -> List[Finding]:
+        out: List[Finding] = []
+        for sf in project.files:
+            for fn in _functions(sf.tree):
+                calls = _calls(fn)
+                renames = [ln for ln, c in calls if c == "os.replace"]
+                if not renames:
+                    continue
+                commit = max(renames)
+                for ln, c in calls:
+                    if (ln > commit
+                            and c.split(".")[-1] in _PAYLOAD_NAMES):
+                        out.append(Finding(
+                            self.id, sf.path, ln,
+                            f"{fn.name}: payload write {c}() at line "
+                            f"{ln} after the manifest rename (line "
+                            f"{commit}) — the rename must be the last "
+                            f"write (commit point)"))
+        return out
+
+
+RULES = [WalAppendBeforeApply(), PayloadBeforeManifestRename()]

@@ -1,0 +1,125 @@
+"""I-parity rule: every kernel dispatcher registers its bit-exact oracle
+(invariant I5).
+
+The registration is the ``@kernel_op(ref=..., pallas=..., composes=...)``
+decorator in ``kernels/ops.py``; this rule checks — statically, across the
+whole scanned tree — that the declarations are complete and that nothing
+escapes them:
+
+* a module that registers any op registers every public def it exposes
+  (a new dispatcher cannot be added without declaring parity),
+* every declared ``ref``/``pallas`` name resolves to a def somewhere in
+  the scanned tree, and ``composes`` entries are registered ops,
+* every public ``*_pallas`` kernel def is reachable from some
+  registration (no unregistered TPU kernel),
+* when a test tree was scanned, every registered op name is mentioned by
+  it (the equivalence test exists).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List
+
+from tools.mcqlint import astutil
+from tools.mcqlint.core import Finding, Project, Rule
+
+
+class KernelParityRegistry(Rule):
+    id = "MCQ-P001"
+    summary = ("every kernel dispatcher has @kernel_op with a resolvable "
+               "ref oracle; every *_pallas def is registered; every op "
+               "has an equivalence test")
+
+    def check(self, project: Project) -> List[Finding]:
+        out: List[Finding] = []
+        # registry: op name -> (decl, sf, node); plus all top-level defs
+        registry: Dict[str, tuple] = {}
+        all_defs: Dict[str, List] = {}
+        for sf in project.files:
+            for node in sf.tree.body:
+                if isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    all_defs.setdefault(node.name, []).append((sf, node))
+                    decl = astutil.kernel_op_decl(node)
+                    if decl is not None:
+                        registry[node.name] = (decl, sf, node)
+                elif (isinstance(node, ast.Assign)
+                        and isinstance(node.value, (ast.Name,
+                                                    ast.Attribute))):
+                    # top-level aliases (dh_find_ref = probe_find_ref)
+                    # count as defs for name resolution
+                    for tgt in node.targets:
+                        if isinstance(tgt, ast.Name):
+                            all_defs.setdefault(tgt.id, []).append(
+                                (sf, node))
+
+        # (a) registering modules register everything public
+        for sf in project.files:
+            module_ops = [n for n in sf.tree.body
+                          if isinstance(n, (ast.FunctionDef,
+                                            ast.AsyncFunctionDef))
+                          and astutil.kernel_op_decl(n) is not None]
+            if not module_ops:
+                continue
+            for node in sf.tree.body:
+                if (isinstance(node, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef))
+                        and not node.name.startswith("_")
+                        and astutil.kernel_op_decl(node) is None):
+                    out.append(Finding(
+                        self.id, sf.path, node.lineno,
+                        f"public def {node.name} in a kernel-op module "
+                        f"has no @kernel_op registration"))
+
+        # (b) declared names resolve
+        pallas_referenced = set()
+        for op, (decl, sf, node) in sorted(registry.items()):
+            ref, pallas = decl["ref"], decl["pallas"]
+            composes = decl["composes"]
+            if ref is None and not composes:
+                out.append(Finding(
+                    self.id, sf.path, node.lineno,
+                    f"{op}: @kernel_op declares neither a ref oracle "
+                    f"nor a composes list"))
+            if ref is not None and ref not in all_defs:
+                out.append(Finding(
+                    self.id, sf.path, node.lineno,
+                    f"{op}: ref oracle '{ref}' not found in the "
+                    f"scanned tree"))
+            if pallas is not None:
+                pallas_referenced.add(pallas)
+                if pallas not in all_defs:
+                    out.append(Finding(
+                        self.id, sf.path, node.lineno,
+                        f"{op}: pallas kernel '{pallas}' not found in "
+                        f"the scanned tree"))
+            for comp in composes:
+                if comp not in registry:
+                    out.append(Finding(
+                        self.id, sf.path, node.lineno,
+                        f"{op}: composes '{comp}' which is not a "
+                        f"registered kernel op"))
+
+        # (c) every public *_pallas def is reachable from a registration
+        for name, sites in sorted(all_defs.items()):
+            if (name.endswith("_pallas") and not name.startswith("_")
+                    and name not in pallas_referenced):
+                for sf, node in sites:
+                    out.append(Finding(
+                        self.id, sf.path, node.lineno,
+                        f"pallas kernel {name} is not referenced by any "
+                        f"@kernel_op registration"))
+
+        # (d) every op is named by an equivalence test (when scanned)
+        if project.tests_text is not None:
+            for op, (decl, sf, node) in sorted(registry.items()):
+                if op not in project.tests_text:
+                    out.append(Finding(
+                        self.id, sf.path, node.lineno,
+                        f"{op}: no test mentions this kernel op "
+                        f"(equivalence test required)"))
+        return out
+
+
+RULES = [KernelParityRegistry()]

@@ -1,0 +1,129 @@
+"""I-purity rule: jit/shard_map bodies are pure (invariant I7).
+
+Bit-exact WAL replay (DESIGN.md §10) and kernel parity both assume traced
+computations are functions of their inputs alone.  This rule finds defs
+that are jit/shard_map-wrapped — ``@jax.jit``, ``@functools.partial(
+jax.jit, ...)``, ``@functools.partial(compat.shard_map, ...)``, or a plain
+``jax.jit(fn)``/``shard_map(fn)`` call on a local def — and flags, in
+their *own* bodies (helpers called from them are not chased):
+
+* wall-clock / host-RNG / environment calls (``time.*``, ``datetime.now``,
+  ``random.*``, ``np.random.*``, ``os.environ``, ``os.urandom``, ``open``,
+  ``input``) — trace-time nondeterminism baked into the program,
+* ``global`` / ``nonlocal`` statements — captured mutable Python state,
+* assignments to ``self.*`` — mutation escaping the trace.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Tuple
+
+from tools.mcqlint import astutil
+from tools.mcqlint.core import Finding, Project, Rule
+
+_JIT_TAILS = ("jit", "shard_map", "pmap")
+#: forbidden dotted-call prefixes/exacts inside traced bodies
+_FORBIDDEN_PREFIXES = ("time.", "random.", "np.random.", "numpy.random.")
+_FORBIDDEN_EXACT = ("open", "input", "os.urandom", "os.getenv")
+_FORBIDDEN_TAILS = ("now", "utcnow", "monotonic", "perf_counter")
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    chain = astutil.attr_chain(dec)
+    if chain and chain.split(".")[-1] in _JIT_TAILS:
+        return True
+    if isinstance(dec, ast.Call):
+        func_chain = astutil.attr_chain(dec.func)
+        if func_chain and func_chain.split(".")[-1] in _JIT_TAILS:
+            return True
+        if (func_chain and func_chain.split(".")[-1] == "partial"
+                and dec.args):
+            first = astutil.attr_chain(dec.args[0])
+            if first and first.split(".")[-1] in _JIT_TAILS:
+                return True
+    return False
+
+
+def _jitted_defs(tree: ast.Module) -> Iterator[Tuple[ast.AST, str]]:
+    # decorated defs, at any nesting
+    jit_wrapped = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            chain = astutil.attr_chain(node.func)
+            if (chain and chain.split(".")[-1] in _JIT_TAILS
+                    and node.args and isinstance(node.args[0], ast.Name)):
+                jit_wrapped.add(node.args[0].id)  # jax.jit(fn) on a name
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        how = None
+        if any(_is_jit_decorator(d) for d in node.decorator_list):
+            how = "decorated"
+        elif node.name in jit_wrapped:
+            how = "wrapped"
+        if how:
+            yield node, how
+
+
+class JitBodyPurity(Rule):
+    id = "MCQ-U001"
+    summary = ("jit/shard_map bodies: no wall-clock/RNG/env calls, no "
+               "global/nonlocal, no self mutation")
+
+    def check(self, project: Project) -> List[Finding]:
+        out: List[Finding] = []
+        for sf in project.files:
+            for fn, how in _jitted_defs(sf.tree):
+                for node in ast.walk(fn):
+                    if isinstance(node, (ast.Global, ast.Nonlocal)):
+                        out.append(Finding(
+                            self.id, sf.path, node.lineno,
+                            f"{fn.name} ({how} jit scope) uses "
+                            f"{'global' if isinstance(node, ast.Global) else 'nonlocal'}"
+                            f" — captured mutable Python state"))
+                    elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                        targets = (node.targets
+                                   if isinstance(node, ast.Assign)
+                                   else [node.target])
+                        for tgt in targets:
+                            chain = astutil.attr_chain(tgt)
+                            if chain and chain.startswith("self."):
+                                out.append(Finding(
+                                    self.id, sf.path, node.lineno,
+                                    f"{fn.name} ({how} jit scope) "
+                                    f"assigns {chain} — mutation "
+                                    f"escaping the trace"))
+                    elif isinstance(node, ast.Call):
+                        chain = astutil.attr_chain(node.func)
+                        if chain and self._forbidden(chain):
+                            out.append(Finding(
+                                self.id, sf.path, node.lineno,
+                                f"{fn.name} ({how} jit scope) calls "
+                                f"{chain}() — trace-time "
+                                f"nondeterminism"))
+                    elif (isinstance(node, ast.Subscript)
+                          and astutil.attr_chain(node.value)
+                          == "os.environ"):
+                        out.append(Finding(
+                            self.id, sf.path, node.lineno,
+                            f"{fn.name} ({how} jit scope) reads "
+                            f"os.environ — trace-time nondeterminism"))
+        return out
+
+    @staticmethod
+    def _forbidden(chain: str) -> bool:
+        if chain in _FORBIDDEN_EXACT:
+            return True
+        if any(chain.startswith(p) for p in _FORBIDDEN_PREFIXES):
+            return True
+        head, _, tail = chain.rpartition(".")
+        if tail in _FORBIDDEN_TAILS and head in ("time", "datetime",
+                                                 "datetime.datetime"):
+            return True
+        if chain.startswith("os.environ"):
+            return True
+        return False
+
+
+RULES = [JitBodyPurity()]

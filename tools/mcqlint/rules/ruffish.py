@@ -1,0 +1,100 @@
+"""Hygiene rules absorbed from ruff (invariant I9): the container cannot
+install ruff, so the two checks CI wants from it live here.
+
+* MCQ-F401 — unused imports, mirroring the repo's pyproject config:
+  ``**/__init__.py`` is exempt (re-export surface), ``from __future__``
+  never counts, and a name listed in ``__all__`` counts as used.
+* MCQ-E741 — ambiguous single-letter bindings ``l``/``O``/``I`` (as
+  assignment targets, function/lambda args, def names, for/with/except
+  targets), unreadable in most fonts.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from tools.mcqlint.core import Finding, Project, Rule
+
+_AMBIGUOUS = ("l", "O", "I")
+
+
+class UnusedImport(Rule):
+    id = "MCQ-F401"
+    summary = "no unused imports (ruff F401; __init__.py exempt)"
+
+    def check(self, project: Project) -> List[Finding]:
+        out: List[Finding] = []
+        for sf in project.files:
+            if sf.name == "__init__.py":
+                continue
+            imported = {}  # bound name -> (lineno, display)
+            for node in ast.walk(sf.tree):
+                if isinstance(node, ast.Import):
+                    for alias in node.names:
+                        bound = alias.asname or alias.name.split(".")[0]
+                        imported[bound] = (node.lineno, alias.name)
+                elif isinstance(node, ast.ImportFrom):
+                    if node.module == "__future__":
+                        continue
+                    for alias in node.names:
+                        if alias.name == "*":
+                            continue
+                        bound = alias.asname or alias.name
+                        imported[bound] = (node.lineno, alias.name)
+            used: Set[str] = set()
+            for node in ast.walk(sf.tree):
+                if isinstance(node, ast.Name):
+                    used.add(node.id)
+                elif (isinstance(node, ast.Constant)
+                        and isinstance(node.value, str)):
+                    pass  # string annotations don't occur (future import)
+            # __all__ re-exports count as usage
+            for node in sf.tree.body:
+                if (isinstance(node, ast.Assign)
+                        and any(isinstance(t, ast.Name)
+                                and t.id == "__all__"
+                                for t in node.targets)
+                        and isinstance(node.value, (ast.List, ast.Tuple))):
+                    for el in node.value.elts:
+                        if (isinstance(el, ast.Constant)
+                                and isinstance(el.value, str)):
+                            used.add(el.value)
+            for bound, (lineno, display) in sorted(imported.items(),
+                                                   key=lambda kv: kv[1]):
+                if bound not in used:
+                    out.append(Finding(
+                        self.id, sf.path, lineno,
+                        f"'{display}' imported but unused"))
+        return out
+
+
+class AmbiguousName(Rule):
+    id = "MCQ-E741"
+    summary = "no ambiguous l/O/I bindings (ruff E741)"
+
+    def check(self, project: Project) -> List[Finding]:
+        out: List[Finding] = []
+        for sf in project.files:
+            for node in ast.walk(sf.tree):
+                bad = []
+                if isinstance(node, ast.Name) and isinstance(
+                        node.ctx, ast.Store) and node.id in _AMBIGUOUS:
+                    bad.append(node.id)
+                elif isinstance(node, ast.arg) and node.arg in _AMBIGUOUS:
+                    bad.append(node.arg)
+                elif isinstance(node, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)) \
+                        and node.name in _AMBIGUOUS:
+                    bad.append(node.name)
+                elif (isinstance(node, ast.ExceptHandler)
+                        and node.name in _AMBIGUOUS):
+                    bad.append(node.name)
+                for name in bad:
+                    out.append(Finding(
+                        self.id, sf.path, node.lineno,
+                        f"ambiguous variable name '{name}'"))
+        return out
+
+
+RULES = [UnusedImport(), AmbiguousName()]
