@@ -18,6 +18,11 @@ has no numbered tables, so each benchmark validates one stated claim:
   B8 persist             durability subsystem (DESIGN.md §10): snapshot
                          save/restore, WAL append per fsync policy + replay
                          throughput, N -> M elastic reshard (8 fake devices)
+  B9 faults              crash soak (DESIGN.md §12): SIGKILL a serving
+                         worker in a loop (externally and from inside the
+                         persistence failpoints), assert bit-exact recovery
+                         vs the deterministic-replay oracle, record
+                         recovery time per kill (tools/chaos/soak.py)
 
 Prints ``name,us_per_call,derived`` CSV lines (harness contract) and writes
 ``BENCH_<bench>.json`` next to this file with the same rows in machine-
@@ -48,6 +53,7 @@ from repro.core import speculative as spec
 from repro.data.synthetic import MarkovGraphSampler
 
 _HERE = os.path.dirname(os.path.abspath(__file__))
+REPO_ROOT = os.path.dirname(_HERE)
 
 SMOKE = False  # set by --smoke: CI-scale sizes, full recorder coverage
 
@@ -647,6 +653,25 @@ def bench_persist():
     REC.write("persist")
 
 
+def bench_faults():
+    """B9: crash soak — kill/recover/verify loop from tools/chaos/soak.py
+    (external SIGKILLs interleaved with kills armed inside the persistence
+    failpoints), re-emitted through the recorder so the rows land in the
+    shared CSV + ``BENCH_faults.json`` schema."""
+    if REPO_ROOT not in sys.path:  # tools/ lives at the repo root
+        sys.path.insert(0, REPO_ROOT)
+    from tools.chaos.soak import run_soak
+    result = run_soak(6 if SMOKE else 20)
+    for row in result["rows"]:
+        extra = {k: v for k, v in row.items()
+                 if k not in ("name", "us_per_call", "derived")}
+        REC.emit("faults", row["name"], row["us_per_call"], row["derived"],
+                 **extra)
+    REC.write("faults")
+    if not result["ok"]:
+        print("B9_crash_soak: DIVERGED (see rows)", file=sys.stderr)
+
+
 # ---------------------------------------------------------------------------
 # schema validation (CI: BENCH_*.json must stay generatable + well-formed)
 # ---------------------------------------------------------------------------
@@ -675,6 +700,11 @@ BENCH_ROW_SCHEMAS = {
         "B8_snapshot": ("num_rows", "live_edges", "restore_us"),
         "B8_wal": ("fsync", "batches", "replay_edges_per_s"),
         "B8_reshard": ("from_shards", "to_shards", "edges", "edges_per_s"),
+    },
+    "faults": {
+        "B9_crash_soak": ("kill_mode", "steps", "replayed", "bitexact"),
+        "B9_recovery_summary": ("kills", "mean_recovery_us",
+                                "max_recovery_us", "bitexact"),
     },
 }
 
@@ -740,6 +770,7 @@ BENCHES = (
     ("drafter", bench_drafter),
     ("sharded_routing", bench_sharded_routing),
     ("persist", bench_persist),
+    ("faults", bench_faults),
 )
 
 

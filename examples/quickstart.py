@@ -9,7 +9,16 @@ sharded serving engine with snapshots and a write-ahead log — save, kill
 the "process", and restore **at a different shard count**, getting the
 same answers back.
 
+Part 3 is kill-under-load (DESIGN.md §12): arm fault-injection failpoints
+on the live write path and watch the retry ladder absorb a transient disk
+flake, a persistent ENOSPC poison writes while reads keep serving, and
+``restore()`` heal the poisoned engine bit-exactly.
+
     PYTHONPATH=src python examples/quickstart.py
+
+``--chaos`` additionally runs the real crash soak: a serving subprocess
+SIGKILLed mid-append/mid-snapshot a few times, each death verified
+bit-exact against a deterministic replay oracle (``tools/chaos/soak.py``).
 """
 
 import os
@@ -127,6 +136,89 @@ def part2_durable_elastic_serving():
     shutil.rmtree(wal_dir)
 
 
+def part3_kill_under_load():
+    """faults on the live write path: retry -> poison -> restore-heal
+    (DESIGN.md §12)."""
+    import errno
+
+    from repro import faults
+    from repro.runtime.fault_tolerance import (EngineWriteUnavailable,
+                                               RetryPolicy)
+
+    snap_dir = tempfile.mkdtemp(prefix="mcprioq-chaos-snap-")
+    wal_dir = tempfile.mkdtemp(prefix="mcprioq-chaos-wal-")
+    base = mc.MCConfig(num_rows=256, capacity=16, sort_passes=2)
+    graph = MarkovGraphSampler(num_nodes=200, out_degree=12, zipf_s=1.5,
+                               seed=7)
+
+    def engine():
+        return ShardedEngine(ShardedServeConfig(
+            sharded=sh.ShardedConfig(base=base, num_shards=1,
+                                     bucket_factor=4.0),
+            decay_threshold=1 << 30, snapshot_dir=snap_dir, wal_dir=wal_dir,
+            wal_fsync="always",
+            retry=RetryPolicy(max_attempts=3, base_delay_s=1e-3)))
+
+    eng = engine()
+    batches = [graph.sample_transitions(512) for _ in range(4)]
+    eng.observe(*batches[0])
+    eng.checkpoint()
+
+    # ---- a transient disk flake: the retry ladder absorbs it --------------
+    faults.arm("wal.append.write", faults.FaultInjected("wal.append.write"),
+               count=1)
+    eng.observe(*batches[1])
+    print(f"\ntransient WAL fault: retried {eng.stats['wal_retries']}x, "
+          f"batch applied (updates={eng.stats['updates']}), "
+          f"write_available={eng.write_available}")
+
+    # ---- persistent ENOSPC: writes poison, reads keep serving -------------
+    faults.arm("wal.append.write",
+               faults.FaultInjected("wal.append.write", errno.ENOSPC))
+    try:
+        eng.observe(*batches[2])
+    except EngineWriteUnavailable as e:
+        print(f"persistent fault escalated: {e}")
+    faults.reset()
+    queries = np.arange(32, dtype=np.int32)
+    before = eng.query(queries, threshold=0.9, max_items=16)
+    print(f"poisoned engine still answers reads "
+          f"(write_available={eng.write_available}, "
+          f"write_errors={eng.stats['write_errors']})")
+
+    # ---- kill + restore: replay heals the poison --------------------------
+    del eng
+    revived = engine()
+    info = revived.restore()
+    after = revived.query(queries, threshold=0.9, max_items=16)
+    same = all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(before, after))
+    print(f"restored step {info['step']}, replayed {info['replayed']} WAL "
+          f"batches: write_available={revived.write_available}, "
+          f"pre-kill answers match: {same}")
+    assert same and revived.write_available
+
+    shutil.rmtree(snap_dir)
+    shutil.rmtree(wal_dir)
+
+
+def chaos_soak_demo(kills=3):
+    """the real thing: SIGKILL a serving subprocess, verify bit-exact
+    recovery against the deterministic replay oracle (tools/chaos/soak.py)."""
+    import sys
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if repo not in sys.path:
+        sys.path.insert(0, repo)
+    from tools.chaos.soak import run_soak
+    result = run_soak(kills, rows=128, batch=64, snapshot_every=3)
+    assert result["ok"], "crash soak diverged"
+    print(f"\nchaos soak: {kills} kills, all recoveries bit-exact")
+
+
 if __name__ == "__main__":
+    import sys
     part1_the_data_structure()
     part2_durable_elastic_serving()
+    part3_kill_under_load()
+    if "--chaos" in sys.argv[1:]:
+        chaos_soak_demo()

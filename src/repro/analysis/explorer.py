@@ -49,8 +49,11 @@ import numpy as np
 
 # NOTE: jax (via the engine import) is needed only for jnp.asarray on tiny
 # host batches inside the engine's padding path; no device compute runs.
+from repro import faults
 from repro.core import mcprioq as mc
 from repro.core import sharded as sh
+from repro.runtime.fault_tolerance import (EngineWriteUnavailable,
+                                           RetryPolicy)
 from repro.serve import engine as engine_mod
 from repro.sharding.ownership import Ownership
 
@@ -428,7 +431,8 @@ class _FakeMesh:
 
 def build_engine(sched: Scheduler, *, wal_dir: Optional[str] = None,
                  snapshot_dir: Optional[str] = None,
-                 snapshot_every: int = 0) -> engine_mod.ShardedEngine:
+                 snapshot_every: int = 0,
+                 **cfg_kw) -> engine_mod.ShardedEngine:
     """A real ShardedEngine over the fake kernel layer, with every lock,
     the stats dict, and the EpochStore hand-offs under schedule control."""
     base = mc.MCConfig(num_rows=8, capacity=4)
@@ -436,7 +440,8 @@ def build_engine(sched: Scheduler, *, wal_dir: Optional[str] = None,
                             ownership=Ownership(num_shards=1))
     cfg = engine_mod.ShardedServeConfig(
         sharded=scfg, snapshot_dir=snapshot_dir,
-        snapshot_every=snapshot_every, wal_dir=wal_dir, wal_fsync="never")
+        snapshot_every=snapshot_every, wal_dir=wal_dir, wal_fsync="never",
+        **cfg_kw)
     eng = engine_mod.ShardedEngine(cfg, mesh=_FakeMesh())
     for name in eng._MCQ_LOCK_ORDER:
         setattr(eng, name, SchedLock(sched, name))
@@ -722,11 +727,145 @@ class MixedHeadScenario(Scenario):
         return ScenarioInstance(threads, check, cleanup)
 
 
+def _bridge_failpoints(sched: Scheduler) -> None:
+    """Make every failpoint site a schedule decision point: the registry
+    observer fires on each hit (DESIGN.md §12 — failpoints double as the
+    explorer's IO-edge yield points), so a fault can be interleaved with
+    readers at exactly the instant the IO edge runs."""
+    faults.set_observer(
+        lambda name, ctx: sched.yield_point(f"fault:{name}"))
+
+
+#: zero-delay ladder: retries are schedule steps, not wall-clock waits
+_NO_BACKOFF = RetryPolicy(max_attempts=2, base_delay_s=0.0, max_delay_s=0.0)
+
+
+class FaultTransientWrite(Scenario):
+    """A one-shot injected WAL fault races a concurrent query; invariants:
+    the retry ladder absorbs the fault invisibly (the batch lands exactly
+    once, ``wal_retries`` counts one round), the reader completes cleanly
+    whatever instant the fault fires, and no epoch reader leaks.  HEAD-only
+    — the dynamic side of the A14 retry contract."""
+
+    name = "fault_transient_write"
+    yield_tags = ("fault:", "lock:_write_lock", "store:")
+
+    def build(self, sched, reverted):
+        assert not reverted, "fault scenarios have no reverted variant"
+        tmp = tempfile.mkdtemp(prefix="mcq-explorer-")
+        eng = build_engine(sched, wal_dir=os.path.join(tmp, "wal"),
+                          retry=_NO_BACKOFF)
+        _bridge_failpoints(sched)
+        dst = np.array([0], np.int32)
+        eng.observe(np.array([1], np.int32), dst)   # seed state (atomic)
+        faults.arm("wal.append.write",
+                   faults.FaultInjected("wal.append.write"), count=1)
+
+        def check():
+            out = []
+            stats = dict(eng.stats)
+            for key, want in (("updates", 2), ("queries", 1),
+                              ("wal_retries", 1)):
+                if stats[key] != want:
+                    out.append(f"counter conservation: stats[{key!r}] == "
+                               f"{stats[key]}, expected {want}")
+            markers = sorted(int(m) for m in eng.store._snap.state.markers)
+            if markers != [1, 7]:
+                out.append(f"applied markers {markers}, expected [1, 7] "
+                           f"(retried batch must land exactly once)")
+            if eng._seq != 1:
+                out.append(f"wal position: _seq == {eng._seq}, expected 1")
+            if not eng.write_available:
+                out.append("transient fault escalated to poison")
+            if any(n != 0 for n in eng.store._readers.values()):
+                out.append(f"leaked epoch readers: {eng.store._readers}")
+            return out
+
+        def cleanup():
+            faults.reset()
+            faults.set_observer(None)
+            eng.wal.close()
+            shutil.rmtree(tmp, ignore_errors=True)
+
+        threads = OrderedDict((
+            ("writer", lambda: eng.observe(np.array([7], np.int32), dst)),
+            ("query", lambda: eng.query(np.array([1], np.int32))),
+        ))
+        return ScenarioInstance(threads, check, cleanup)
+
+
+class FaultPoisonedWrite(Scenario):
+    """A persistent injected WAL fault (ENOSPC) races a concurrent query;
+    invariants: the writer escalates to ``EngineWriteUnavailable`` without
+    publishing anything (markers unchanged, ``_seq`` parked), the write
+    lock is released (poison is a state, not a held lock), and the reader
+    serves the last published epoch cleanly at every interleaving — the
+    dynamic side of the A13 escalation contract."""
+
+    name = "fault_poisoned_write"
+    yield_tags = ("fault:", "lock:_write_lock", "store:")
+
+    def build(self, sched, reverted):
+        assert not reverted, "fault scenarios have no reverted variant"
+        tmp = tempfile.mkdtemp(prefix="mcq-explorer-")
+        eng = build_engine(sched, wal_dir=os.path.join(tmp, "wal"),
+                          retry=_NO_BACKOFF)
+        _bridge_failpoints(sched)
+        dst = np.array([0], np.int32)
+        eng.observe(np.array([1], np.int32), dst)   # seed state (atomic)
+        import errno as _errno
+        faults.arm("wal.append.write",
+                   faults.FaultInjected("wal.append.write", _errno.ENOSPC))
+        seen = {}
+
+        def writer():
+            try:
+                eng.observe(np.array([7], np.int32), dst)
+            except EngineWriteUnavailable:
+                seen["escalated"] = True
+
+        def check():
+            out = []
+            if not seen.get("escalated"):
+                out.append("persistent fault did not raise "
+                           "EngineWriteUnavailable")
+            if eng.write_available:
+                out.append("write path not poisoned after persistent fault")
+            markers = sorted(int(m) for m in eng.store._snap.state.markers)
+            if markers != [1]:
+                out.append(f"applied markers {markers}, expected [1] "
+                           f"(faulted batch must never publish)")
+            if eng._seq != 0:
+                out.append(f"wal position: _seq == {eng._seq}, expected 0")
+            if eng._write_lock.locked():
+                out.append("write lock still held after escalation")
+            if eng.stats["queries"] != 1:
+                out.append(f"reader did not complete: queries == "
+                           f"{eng.stats['queries']}")
+            if any(n != 0 for n in eng.store._readers.values()):
+                out.append(f"leaked epoch readers: {eng.store._readers}")
+            return out
+
+        def cleanup():
+            faults.reset()
+            faults.set_observer(None)
+            eng.wal.close()
+            shutil.rmtree(tmp, ignore_errors=True)
+
+        threads = OrderedDict((
+            ("writer", writer),
+            ("query", lambda: eng.query(np.array([1], np.int32))),
+        ))
+        return ScenarioInstance(threads, check, cleanup)
+
+
 RACE_SCENARIOS: Tuple[Scenario, ...] = (
     StatsLostUpdate(), RouteSnapshotMispairing(), WalDoubleReplay())
 
 SCENARIOS: Dict[str, Scenario] = {
-    s.name: s for s in RACE_SCENARIOS + (MixedHeadScenario(),)}
+    s.name: s for s in RACE_SCENARIOS + (MixedHeadScenario(),
+                                         FaultTransientWrite(),
+                                         FaultPoisonedWrite())}
 
 
 # ---------------------------------------------------------------------------

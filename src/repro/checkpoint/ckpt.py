@@ -20,6 +20,8 @@ from typing import Any, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.faults import failpoint
+
 PyTree = Any
 
 
@@ -42,6 +44,7 @@ def save(tree: PyTree, directory: str, step: int) -> str:
     os.makedirs(path, exist_ok=True)
     keys, leaves, _ = _paths_and_leaves(tree)
     arrays = {f"a{i}": _gather(x) for i, x in enumerate(leaves)}
+    failpoint("snapshot.arrays_write", path=path, step=step)
     np.savez(os.path.join(path, "arrays.npz"), **arrays)
     manifest = {
         "step": step,
@@ -53,17 +56,23 @@ def save(tree: PyTree, directory: str, step: int) -> str:
     tmp = os.path.join(path, "manifest.json.tmp")
     with open(tmp, "w") as f:
         json.dump(manifest, f)
+    failpoint("snapshot.manifest_commit", path=path, step=step)
     os.replace(tmp, os.path.join(path, "manifest.json"))  # atomic commit
     return path
 
 
 def save_async(tree: PyTree, directory: str, step: int,
-               on_complete: Optional[Any] = None) -> threading.Thread:
+               on_complete: Optional[Any] = None,
+               on_error: Optional[Any] = None) -> threading.Thread:
     """Non-blocking save: device->host copy happens on the caller thread
     (cheap, overlapped with the next step's compile/dispatch), file IO on a
     worker thread.  ``on_complete`` (a zero-arg callable) runs on the worker
     thread strictly after the manifest rename commits — the hook for actions
     that are only safe once the checkpoint is durable, e.g. WAL truncation.
+    ``on_error`` receives any exception the worker hits (IO faults, a
+    failing ``on_complete``); without it the exception propagates and the
+    thread dies with a stderr traceback — a *silently* dead IO thread would
+    leave an aborted step directory that looks like progress.
 
     The thread is deliberately NOT a daemon: interpreter shutdown must wait
     for the commit rather than abandoning a half-written step (the owner —
@@ -72,19 +81,27 @@ def save_async(tree: PyTree, directory: str, step: int,
     host = [(k, _gather(x)) for k, x in zip(keys, leaves)]
 
     def work():
-        path = os.path.join(directory, f"step_{step:08d}")
-        os.makedirs(path, exist_ok=True)
-        np.savez(os.path.join(path, "arrays.npz"),
-                 **{f"a{i}": a for i, (_, a) in enumerate(host)})
-        manifest = {"step": step, "keys": [k for k, _ in host],
-                    "dtypes": [str(a.dtype) for _, a in host],
-                    "shapes": [list(a.shape) for _, a in host]}
-        tmp = os.path.join(path, "manifest.json.tmp")
-        with open(tmp, "w") as f:
-            json.dump(manifest, f)
-        os.replace(tmp, os.path.join(path, "manifest.json"))
-        if on_complete is not None:
-            on_complete()
+        try:
+            failpoint("snapshot.io_thread", step=step)
+            path = os.path.join(directory, f"step_{step:08d}")
+            os.makedirs(path, exist_ok=True)
+            failpoint("snapshot.arrays_write", path=path, step=step)
+            np.savez(os.path.join(path, "arrays.npz"),
+                     **{f"a{i}": a for i, (_, a) in enumerate(host)})
+            manifest = {"step": step, "keys": [k for k, _ in host],
+                        "dtypes": [str(a.dtype) for _, a in host],
+                        "shapes": [list(a.shape) for _, a in host]}
+            tmp = os.path.join(path, "manifest.json.tmp")
+            with open(tmp, "w") as f:
+                json.dump(manifest, f)
+            failpoint("snapshot.manifest_commit", path=path, step=step)
+            os.replace(tmp, os.path.join(path, "manifest.json"))
+            if on_complete is not None:
+                on_complete()
+        except Exception as exc:
+            if on_error is None:
+                raise
+            on_error(exc)
 
     t = threading.Thread(target=work, daemon=False)
     t.start()
@@ -111,6 +128,7 @@ def restore(tree_like: PyTree, directory: str, step: Optional[int] = None,
         if step is None:
             raise FileNotFoundError(f"no checkpoint under {directory}")
     path = os.path.join(directory, f"step_{step:08d}")
+    failpoint("snapshot.restore_read", path=path, step=step)
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))

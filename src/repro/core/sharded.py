@@ -137,6 +137,51 @@ def _build_buckets(vals_list, owner: jax.Array, num_shards: int, cap: int,
     return outs, pos, dropped
 
 
+def predict_route_overflow(scfg: ShardedConfig, src) -> "np.ndarray":
+    """Host-side mirror of :func:`_build_buckets`'s capacity drop decision.
+
+    ``src`` must already be padded to a multiple of ``num_shards`` (the
+    engine's ``_pad`` contract): the sharded batch splits into
+    ``num_shards`` contiguous sender slices of length ``B/num_shards``,
+    and each slice independently drops the items ranked ``>= cap`` within
+    their owner group (stable order).  Returns a bool mask, True exactly
+    where the device update/query path would drop the item — the overflow
+    retry tier masks those items out *before* dispatch and resubmits them
+    next step, so ``route_dropped`` stays 0 while the tier is on.
+
+    Must stay bit-faithful to ``_build_buckets`` (same stable sort, same
+    searchsorted starts, same ``bucket_capacity``); the fault-matrix test
+    asserts prediction == device behaviour over random skewed batches.
+    """
+    import numpy as np  # host-only helper; keep the module's jnp surface
+
+    src = np.asarray(src)
+    n = scfg.num_shards
+    if src.size % n:
+        raise ValueError(f"batch of {src.size} not padded to a multiple "
+                         f"of num_shards={n}")
+    local = src.size // n
+    cap = scfg.bucket_capacity(local)
+    owner = np.asarray(scfg.resolved_ownership().owner_of(
+        jnp.asarray(src, jnp.int32)))
+    active = src >= 0
+    owner = np.where(active, owner, n)
+    out = np.zeros(src.size, dtype=bool)
+    for s in range(n):
+        sl = slice(s * local, (s + 1) * local)
+        own_s = owner[sl]
+        sort_idx = np.argsort(own_s, kind="stable")
+        owner_sorted = own_s[sort_idx]
+        starts = np.searchsorted(owner_sorted, np.arange(n))
+        pos_s = (np.arange(local)
+                 - starts[np.minimum(owner_sorted, n - 1)])
+        drop_sorted = (pos_s >= cap) & (owner_sorted < n)
+        drop = np.zeros(local, dtype=bool)
+        drop[sort_idx] = drop_sorted
+        out[sl] = drop
+    return out
+
+
 def _src_of_row(state: mc.MCState, num_rows: int) -> jax.Array:
     """Reverse map row -> src node id, rebuilt from the src hash table by one
     scatter (invalid table lanes fall off via an out-of-range index)."""

@@ -1,0 +1,26 @@
+"""Fault injection for the persist/serving stack (DESIGN.md §12).
+
+Public surface::
+
+    from repro.faults import failpoint          # the injection site
+    from repro import faults                    # arming / test control
+    with faults.armed("wal.append.fsync", OSError(28, "no space")):
+        ...
+
+See :mod:`repro.faults.registry` for the catalog and semantics.
+"""
+
+from repro.faults.registry import (  # noqa: F401
+    FAILPOINT_CATALOG,
+    FaultInjected,
+    arm,
+    arm_from_env,
+    armed,
+    disarm,
+    failpoint,
+    fired,
+    hits,
+    reset,
+    set_observer,
+    snapshot,
+)

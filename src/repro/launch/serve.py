@@ -85,13 +85,21 @@ def run_sharded(num_shards: int, bucket_factor: float, requests: int,
                 route_batch: int, topn: int, seed: int = 0,
                 decay_threshold: int = 1 << 18, decay_block_rows: int = 1024,
                 snapshot_dir: str = "", snapshot_every: int = 0,
-                wal_dir: str = "", restore: bool = False):
+                wal_dir: str = "", restore: bool = False,
+                route_retry_budget: int = 0, query_retry_budget: int = 0,
+                health_strikes: int = 3, failpoints: str = ""):
     """Shard-parallel chain serving: route synthetic Zipf transition traffic
     through the ShardedEngine (observe + query per request) and report
     throughput plus the routing/overflow counters.  With a snapshot dir the
     engine checkpoints on cadence (and a WAL makes recovery exact);
     ``restore=True`` recovers from the newest complete snapshot first —
-    elastically, if it was taken at a different shard count (DESIGN.md §10)."""
+    elastically, if it was taken at a different shard count (DESIGN.md §10).
+    ``failpoints`` arms injection sites (same spec as ``MCQ_FAILPOINTS``,
+    DESIGN.md §12) so the retry/degradation ladder can be driven live."""
+    if failpoints:
+        from repro.faults import arm_from_env
+        n = arm_from_env(failpoints)
+        print(f"armed {n} failpoint(s): {failpoints}")
     base = mc.MCConfig(num_rows=4096, capacity=64, sort_passes=1,
                        decay_block_rows=decay_block_rows)
     scfg = sh.ShardedConfig(base=base, num_shards=num_shards,
@@ -99,7 +107,10 @@ def run_sharded(num_shards: int, bucket_factor: float, requests: int,
     engine = ShardedEngine(ShardedServeConfig(
         sharded=scfg, decay_threshold=decay_threshold, topn=topn,
         snapshot_dir=snapshot_dir or None, snapshot_every=snapshot_every,
-        wal_dir=wal_dir or None))
+        wal_dir=wal_dir or None,
+        route_retry_budget=route_retry_budget,
+        query_retry_budget=query_retry_budget,
+        health_strikes=health_strikes))
     if restore:
         info = engine.restore()
         print(f"restored step {info['step']} ({info['mode']}), "
@@ -127,6 +138,15 @@ def run_sharded(num_shards: int, bucket_factor: float, requests: int,
           f"query_dropped={st['query_dropped']} "
           f"dropped_rows={st['dropped_rows']} "
           f"deferred_new={st['deferred_new']}")
+    print(f"faults: wal_retries={st['wal_retries']} "
+          f"apply_retries={st['apply_retries']} "
+          f"dispatch_retries={st['dispatch_retries']} "
+          f"write_errors={st['write_errors']} "
+          f"degraded_answers={st['degraded_answers']} "
+          f"route_retried={st['route_retried']}/"
+          f"lost={st['route_lost']} "
+          f"shards_down={st['shards_down']} "
+          f"write_available={engine.write_available}")
     print(f"maintenance: decay_steps={st['decay_steps']} "
           f"n_rows={st['n_rows']} snapshots={st['snapshots']}")
     if snapshot_dir:
@@ -179,6 +199,19 @@ def main():
                     help="recover from the newest complete snapshot before "
                          "serving (elastic if the snapshot's shard count "
                          "differs from --num-shards)")
+    ap.add_argument("--route-retry-budget", type=int, default=0,
+                    help="bounded re-submission budget for skew-dropped "
+                         "routed items (0 = count them as route_dropped)")
+    ap.add_argument("--query-retry-budget", type=int, default=0,
+                    help="in-call re-dispatch rounds for skew-dropped "
+                         "query items (0 = count them as query_dropped)")
+    ap.add_argument("--health-strikes", type=int, default=3,
+                    help="consecutive dispatch failures before a shard is "
+                         "marked down (reads degrade, writes defer)")
+    ap.add_argument("--failpoints", default="",
+                    help="arm fault-injection sites, e.g. "
+                         "'wal.append.fsync=raise:28@nth:5'; same spec as "
+                         "the MCQ_FAILPOINTS env var (DESIGN.md §12)")
     args = ap.parse_args()
     if args.num_shards > 0:
         run_sharded(args.num_shards, args.bucket_factor, args.requests,
@@ -187,7 +220,11 @@ def main():
                     decay_block_rows=args.decay_block_rows,
                     snapshot_dir=args.snapshot_dir,
                     snapshot_every=args.snapshot_every,
-                    wal_dir=args.wal_dir, restore=args.restore)
+                    wal_dir=args.wal_dir, restore=args.restore,
+                    route_retry_budget=args.route_retry_budget,
+                    query_retry_budget=args.query_retry_budget,
+                    health_strikes=args.health_strikes,
+                    failpoints=args.failpoints)
         return
     run(args.arch, args.smoke, args.requests, args.prompt_len,
         args.new_tokens, args.draft_len,

@@ -31,6 +31,7 @@ from typing import Any, Optional, Tuple
 import numpy as np
 
 from repro.checkpoint import ckpt
+from repro.faults import failpoint
 
 PyTree = Any
 
@@ -42,6 +43,7 @@ def step_dir(directory: str, step: int) -> str:
 
 
 def _write_meta(path: str, meta: dict) -> None:
+    failpoint("snapshot.meta_write", path=path)
     tmp = os.path.join(path, META_NAME + ".tmp")
     with open(tmp, "w") as f:
         json.dump(meta, f, indent=1)
@@ -63,17 +65,20 @@ def save_snapshot(state: PyTree, directory: str, step: int,
 
 def save_snapshot_async(state: PyTree, directory: str, step: int,
                         meta: dict,
-                        on_complete: Optional[Any] = None) -> threading.Thread:
+                        on_complete: Optional[Any] = None,
+                        on_error: Optional[Any] = None) -> threading.Thread:
     """Background-cadence variant: the device->host gather happens on the
     caller thread (under the Engine's writer lock, so the captured epoch is
     exact), file IO on a worker thread with the same commit ordering.
     ``on_complete`` runs on the worker thread after the manifest commits —
     the engine hangs WAL truncation off it, so segments are only GC'd once
-    the snapshot that supersedes them is durable."""
+    the snapshot that supersedes them is durable.  ``on_error`` receives IO
+    faults from the worker (see ``ckpt.save_async``)."""
     path = step_dir(directory, step)
     os.makedirs(path, exist_ok=True)
     _write_meta(path, meta)
-    return ckpt.save_async(state, directory, step, on_complete=on_complete)
+    return ckpt.save_async(state, directory, step, on_complete=on_complete,
+                           on_error=on_error)
 
 
 # ---------------------------------------------------------------------------

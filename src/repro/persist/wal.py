@@ -42,6 +42,8 @@ from typing import Iterator, Optional, Tuple
 
 import numpy as np
 
+from repro.faults import failpoint
+
 _MAGIC = b"MCWL"
 _HEADER = struct.Struct("<4sIqi")
 
@@ -54,6 +56,22 @@ def _fsync_dir(directory: str) -> None:
         os.fsync(fd)
     finally:
         os.close(fd)
+
+
+def _valid_prefix(data: bytes) -> int:
+    """Byte length of the structurally-valid record prefix of a segment
+    (whole header, magic, whole payload, CRC agrees).  Everything past it
+    is a torn tail or garbage from an aborted append."""
+    off = 0
+    while off + _HEADER.size <= len(data):
+        magic, crc, _, n = _HEADER.unpack_from(data, off)
+        end = off + _HEADER.size + 3 * 4 * n
+        if magic != _MAGIC or n < 0 or end > len(data):
+            break
+        if zlib.crc32(data[off + _HEADER.size:end]) != crc:
+            break
+        off = end
+    return off
 
 
 class WriteAheadLog:
@@ -76,6 +94,9 @@ class WriteAheadLog:
         # writer keeps appending (appends themselves stay serialised by the
         # engine's write lock; this mutex only makes GC safe against them)
         self._mu = threading.Lock()
+        #: swallowed IO faults (rotate/close failures after the record was
+        #: already durable) — surfaced into engine stats, never raised
+        self.io_errors = 0
         self._next_seq = self._scan_next_seq()
 
     # -- discovery ------------------------------------------------------
@@ -109,23 +130,75 @@ class WriteAheadLog:
             record = _HEADER.pack(_MAGIC, zlib.crc32(payload), seq,
                                   src.size) + payload
             if self._fh is None:
-                path = os.path.join(self.directory, f"wal_{seq:016d}.seg")
-                self._fh = open(path, "ab")
-                if self.fsync != "never":
-                    _fsync_dir(self.directory)
-            self._fh.write(record)
-            self._fh.flush()
-            if self.fsync == "always":
-                os.fsync(self._fh.fileno())
+                self._open_segment_locked(seq)
+            start = self._fh.tell()
+            try:
+                failpoint("wal.append.write", fh=self._fh, record=record,
+                          seq=seq)
+                self._fh.write(record)
+                self._fh.flush()
+                if self.fsync == "always":
+                    failpoint("wal.append.fsync", fh=self._fh, seq=seq)
+                    os.fsync(self._fh.fileno())
+            except Exception:
+                # the record was NOT acknowledged: scrub whatever partial
+                # bytes landed so a retry (same seq) or a later append
+                # never writes after garbage mid-segment.  If even the
+                # truncate fails, abandon the handle — the next append
+                # opens a fresh segment at this seq, which replay accepts
+                # (same contiguity rule as crash-resume).
+                try:
+                    self._fh.truncate(start)
+                    self._fh.seek(start)
+                except Exception:
+                    self._abandon_segment_locked()
+                raise
             self._fh_records += 1
             self._next_seq = seq + 1
             if self._fh_records >= self.segment_records:
-                self._rotate_locked()
+                # rotation failures are swallowed: the record above is
+                # already durable and acknowledged, so raising here would
+                # make the caller retry an applied batch under a new seq
+                # (double apply on replay).  Abandon the segment instead;
+                # the next append starts a new one.
+                try:
+                    self._rotate_locked()
+                except Exception:
+                    self.io_errors += 1
+                    self._abandon_segment_locked()
         return seq
+
+    def _open_segment_locked(self, seq: int) -> None:
+        path = os.path.join(self.directory, f"wal_{seq:016d}.seg")
+        failpoint("wal.segment_open", path=path)
+        if os.path.exists(path) and os.path.getsize(path):
+            # crash-resume collision: a previous run tore this segment's
+            # FIRST record (otherwise our resume seq would be past it).
+            # Appending after the torn bytes would hide every new record
+            # from replay, so cut the file back to its valid prefix.
+            with open(path, "rb") as f:
+                data = f.read()
+            keep = _valid_prefix(data)
+            if keep < len(data):
+                with open(path, "r+b") as f:
+                    f.truncate(keep)
+        self._fh = open(path, "ab")
+        self._fh_records = 0
+        if self.fsync != "never":
+            _fsync_dir(self.directory)
+
+    def _abandon_segment_locked(self) -> None:
+        fh, self._fh, self._fh_records = self._fh, None, 0
+        if fh is not None:
+            try:
+                fh.close()
+            except Exception:
+                self.io_errors += 1
 
     def _rotate_locked(self) -> None:
         if self._fh is None:
             return
+        failpoint("wal.rotate", fh=self._fh)
         if self.fsync in ("always", "rotate"):
             os.fsync(self._fh.fileno())
         self._fh.close()
@@ -134,7 +207,14 @@ class WriteAheadLog:
 
     def close(self) -> None:
         with self._mu:
-            self._rotate_locked()
+            try:
+                self._rotate_locked()
+            except Exception:
+                # every acknowledged record is already as durable as the
+                # fsync policy promises; a failing close must not mask
+                # the caller's shutdown path
+                self.io_errors += 1
+                self._abandon_segment_locked()
 
     def __enter__(self):
         return self
@@ -168,7 +248,13 @@ class WriteAheadLog:
                 payload = data[off + _HEADER.size:end]
                 if zlib.crc32(payload) != crc:
                     break
-                if expected is not None and seq != expected:
+                if expected is not None and seq < expected:
+                    # duplicate from a retried append whose first write
+                    # was durable but unacknowledged (fsync raised after
+                    # the data landed): same seq, same payload — skip it
+                    off = end
+                    continue
+                if expected is not None and seq > expected:
                     return  # gap: records lost, stop trusting the log
                 src = np.frombuffer(payload, dtype="<i4", count=n)
                 dst = np.frombuffer(payload, dtype="<i4", count=n,

@@ -14,8 +14,13 @@ resumes within one checkpoint interval (DESIGN.md §4).
 from __future__ import annotations
 
 import dataclasses
+import errno as _errno
+import random
+import threading
 import time
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, FrozenSet, List, Optional, Tuple
+
+import numpy as np
 
 
 @dataclasses.dataclass
@@ -96,3 +101,201 @@ class FailurePolicy:
 
     def on_preemption_notice(self) -> str:
         return "checkpoint_now"
+
+
+# ---------------------------------------------------------------------------
+# retry / escalation layer (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+class RetryBudgetExceeded(RuntimeError):
+    """A transient fault survived every retry attempt; escalate."""
+
+
+class EngineWriteUnavailable(RuntimeError):
+    """The engine's write path is poisoned after an escalated persistent
+    fault; reads keep serving the last published epoch, writes raise this
+    until ``restore()`` heals the WAL position (DESIGN.md §12, A13)."""
+
+
+#: errnos that retrying cannot fix: the disk is full/read-only/over quota
+#: or the file is unreachable — escalate immediately (checkpoint-now /
+#: degraded mode), never spin (A13).
+PERSISTENT_ERRNOS = frozenset({
+    _errno.ENOSPC, _errno.EROFS, _errno.EDQUOT, _errno.EACCES,
+    _errno.EPERM, _errno.ENAMETOOLONG,
+})
+
+
+def classify_io_error(exc: BaseException) -> str:
+    """``"persistent"`` (retry cannot help) or ``"transient"``.
+
+    OSErrors are classified by errno; anything non-OSError coming out of
+    an IO edge (a dead thread, a device dispatch failure) is treated as
+    transient — one retry round is cheap and device hiccups recover.
+    """
+    if isinstance(exc, OSError) and exc.errno in PERSISTENT_ERRNOS:
+        return "persistent"
+    return "transient"
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Capped exponential backoff with deterministic jitter.
+
+    ``max_attempts`` counts total tries (first call included).  The delay
+    before retry ``k`` (1-based) is ``base * 2**(k-1)`` capped at
+    ``max_delay_s``, scaled by a jitter factor drawn uniformly from
+    ``[1 - jitter, 1]`` out of a stream seeded by ``seed`` — two engines
+    retrying the same fault decorrelate, one engine replays exactly.
+    """
+
+    max_attempts: int = 4
+    base_delay_s: float = 0.005
+    max_delay_s: float = 0.5
+    jitter: float = 0.5
+    seed: int = 0
+
+    def delays(self):
+        rng = random.Random(self.seed)
+        for k in range(1, self.max_attempts):
+            raw = min(self.base_delay_s * (2.0 ** (k - 1)),
+                      self.max_delay_s)
+            yield raw * (1.0 - self.jitter * rng.random())
+
+
+def call_with_retry(fn: Callable[[], object], *,
+                    policy: Optional[RetryPolicy] = None,
+                    classify: Callable[[BaseException], str]
+                    = classify_io_error,
+                    retry_on: Tuple[type, ...] = (Exception,),
+                    on_retry: Optional[Callable[[int, BaseException],
+                                                None]] = None,
+                    sleep: Callable[[float], None] = time.sleep):
+    """Run ``fn`` under the retry ladder.
+
+    Transient faults back off and retry up to ``policy.max_attempts``
+    total tries; a persistent fault re-raises immediately (escalation is
+    the caller's job); an exhausted budget raises
+    :class:`RetryBudgetExceeded` from the last fault.  ``on_retry`` is
+    called with ``(attempt_index, exc)`` before each backoff sleep —
+    the engine counts these into ``stats``.
+    """
+    policy = policy or RetryPolicy()
+    last: Optional[BaseException] = None
+    delays = policy.delays()
+    for attempt in range(policy.max_attempts):
+        try:
+            return fn()
+        except retry_on as exc:
+            if classify(exc) == "persistent":
+                raise
+            last = exc
+            try:
+                delay = next(delays)
+            except StopIteration:
+                break
+            if on_retry is not None:
+                on_retry(attempt + 1, exc)
+            sleep(delay)
+    raise RetryBudgetExceeded(
+        f"{policy.max_attempts} attempts exhausted: {last!r}") from last
+
+
+class ShardHealth:
+    """Per-shard health map for graceful degradation (DESIGN.md §12).
+
+    Writers mark a shard down after ``strike_limit`` consecutive
+    dispatch failures; routed reads exclude down shards via
+    :meth:`healthy_mask` (answers stay sorted-descending from the
+    survivors, ``degraded_answers`` counted by the engine); writes bound
+    for a down shard queue here (bounded by ``deferred_cap`` items
+    total) and drain on :meth:`heal`.  Readers never take the mutex: the
+    down-set is an immutable frozenset swapped atomically, so a query
+    thread observes either the old or the new set, never a torn one —
+    the same publish idiom as the epoch store.
+    """
+
+    _MCQ_LOCK_ORDER = ("_mu",)
+    _MCQ_LOCK_PROTECTS = {
+        "_mu": ("_down", "_strikes", "_deferred", "_deferred_items"),
+    }
+
+    def __init__(self, num_shards: int, *, strike_limit: int = 3,
+                 deferred_cap: int = 4096):
+        self.num_shards = int(num_shards)
+        self.strike_limit = int(strike_limit)
+        self.deferred_cap = int(deferred_cap)
+        self._mu = threading.Lock()
+        self._down: FrozenSet[int] = frozenset()
+        self._strikes: Dict[int, int] = {}
+        self._deferred: Dict[int, list] = {}
+        self._deferred_items = 0
+
+    # -- read side (lock-free) -----------------------------------------
+    @property
+    def down(self) -> FrozenSet[int]:
+        return self._down
+
+    @property
+    def degraded(self) -> bool:
+        return bool(self._down)
+
+    def healthy_mask(self) -> np.ndarray:
+        """bool[num_shards], True where the shard serves reads."""
+        mask = np.ones(self.num_shards, dtype=bool)
+        for s in self._down:
+            mask[s] = False
+        return mask
+
+    # -- write side ----------------------------------------------------
+    def record_failure(self, shard: int) -> bool:
+        """One dispatch failure against ``shard``; returns True when this
+        strike marks it down (caller escalates to degraded mode)."""
+        with self._mu:
+            if shard in self._down:
+                return False
+            n = self._strikes.get(shard, 0) + 1
+            self._strikes[shard] = n
+            if n < self.strike_limit:
+                return False
+            self._down = self._down | {shard}
+            self._strikes.pop(shard, None)
+            return True
+
+    def record_success(self, shard: int) -> None:
+        with self._mu:
+            self._strikes.pop(shard, None)
+
+    def mark_down(self, shard: int) -> None:
+        with self._mu:
+            self._down = self._down | {shard}
+            self._strikes.pop(shard, None)
+
+    def defer(self, shard: int, src, dst, w) -> bool:
+        """Queue one write batch for a down shard; False = cap reached
+        and the batch is dropped (counted by the caller)."""
+        with self._mu:
+            n = int(np.asarray(src).size)
+            if self._deferred_items + n > self.deferred_cap:
+                return False
+            self._deferred.setdefault(shard, []).append(
+                (np.asarray(src).copy(), np.asarray(dst).copy(),
+                 np.asarray(w).copy() if w is not None else None))
+            self._deferred_items += n
+            return True
+
+    def heal(self, shard: int) -> List[tuple]:
+        """Re-admit ``shard``; returns its deferred write batches in
+        arrival order for the caller to re-apply."""
+        with self._mu:
+            self._down = self._down - {shard}
+            self._strikes.pop(shard, None)
+            batches = self._deferred.pop(shard, [])
+            self._deferred_items -= sum(int(b[0].size) for b in batches)
+            return batches
+
+    def stats(self) -> Dict[str, int]:
+        with self._mu:
+            return {"shards_down": len(self._down),
+                    "deferred_writes": self._deferred_items}

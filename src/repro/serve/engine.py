@@ -38,11 +38,15 @@ from repro.core import mcprioq as mc
 from repro.core import sharded as sh
 from repro.core import speculative as spec
 from repro.core.epoch import EpochStore
+from repro.faults import arm_from_env, failpoint
 from repro.models.model import Model
 from repro.persist import reshard as rs
 from repro.persist import snapshot as snapshot_io
 from repro.persist.wal import WriteAheadLog
-from repro.runtime.fault_tolerance import StepWatchdog, WatchdogConfig
+from repro.runtime.fault_tolerance import (EngineWriteUnavailable,
+                                           RetryPolicy, ShardHealth,
+                                           StepWatchdog, WatchdogConfig,
+                                           call_with_retry)
 from repro.serve import sampling
 from repro.sharding.ownership import Ownership
 
@@ -155,6 +159,7 @@ class Engine:
         publish, and surface the maintenance counters in ``stats``."""
         toks = jnp.asarray(history)
         with self._learn_lock:
+            failpoint("engine.learn", tokens=int(toks.shape[-1]))
             snap = self.drafter_store.acquire()
             try:
                 new_state = self._observe(snap.state, toks)
@@ -278,6 +283,17 @@ class ShardedServeConfig:
     wal_fsync: str = "rotate"        # always | rotate | never (A11)
     observe_deadline_s: float = 60.0  # StepWatchdog budget per observe()
     reingest_slice_len: int = 256    # per-shard batch slice during reshard
+    # fault model (DESIGN.md §12): retry ladder for transient IO/dispatch
+    # faults, bounded re-route of skew-dropped routed items, degradation
+    # knobs.  The retry budgets default to 0 (tier off) so the fault-free
+    # pipeline — and WAL-replay determinism against logs written without
+    # the tier — is unchanged unless explicitly enabled.
+    retry: RetryPolicy = RetryPolicy()
+    route_retry_budget: int = 0      # re-route attempts per dropped update
+    route_retry_slice: int = 128     # retry items drained per observe()
+    query_retry_budget: int = 0      # in-call re-dispatch rounds per query
+    health_strikes: int = 3          # consecutive failures -> shard down
+    deferred_cap: int = 4096         # max deferred write items (total)
 
 
 class ShardedEngine:
@@ -306,7 +322,8 @@ class ShardedEngine:
     _MCQ_LOCK_ORDER = ("_write_lock", "_route_lock", "_compile_lock",
                        "_stats_lock")
     _MCQ_LOCK_PROTECTS = {
-        "_write_lock": ("store.publish", "wal.append", "_seq", "_io_threads"),
+        "_write_lock": ("store.publish", "wal.append", "_seq", "_io_threads",
+                        "_retry_queue", "_poisoned"),
         # the (program, snapshot) pairing: _rebind swaps all three together
         "_route_lock": ("cfg", "_update", "_maintain"),
         "_compile_lock": ("_query_fns", "_topn_fns"),
@@ -355,7 +372,16 @@ class ShardedEngine:
         # contract the counters exist for
         self._stats_lock = threading.Lock()
         self.stats = {"updates": 0, "queries": 0, "topn_calls": 0,
-                      "query_dropped": 0, "topn_dropped": 0, "snapshots": 0}
+                      "query_dropped": 0, "topn_dropped": 0, "snapshots": 0,
+                      # fault-model counters (DESIGN.md §12): the retry
+                      # ladder, the overflow-retry tier and degraded reads
+                      # are only observable through these
+                      "route_retried": 0, "route_lost": 0,
+                      "query_retried": 0, "query_lost": 0,
+                      "degraded_answers": 0, "deferred_writes": 0,
+                      "shards_down": 0, "wal_errors": 0, "wal_retries": 0,
+                      "apply_retries": 0, "dispatch_retries": 0,
+                      "write_errors": 0, "snapshot_failures": 0}
         snap = self.store.acquire()
         try:
             self.stats.update(mc.counter_stats(snap.state))
@@ -378,6 +404,23 @@ class ShardedEngine:
             WatchdogConfig(deadline_s=cfg.observe_deadline_s),
             on_escalate=self._escalate_snapshot)
             if cfg.snapshot_dir else None)
+        # graceful degradation (DESIGN.md §12): per-shard health map — down
+        # shards are excluded from routed reads, their writes defer bounded
+        self.health = ShardHealth(scfg.num_shards,
+                                  strike_limit=cfg.health_strikes,
+                                  deferred_cap=cfg.deferred_cap)
+        # write-path poisoning (A13): set when an escalated WAL/apply fault
+        # leaves durability and applied state out of agreement; observe()
+        # raises EngineWriteUnavailable until restore() heals
+        self._poisoned: Optional[str] = None
+        # carry-over of skew-dropped update items (route_retry_budget > 0):
+        # chunks of (src, dst, w, tries) arrays drained at the head of
+        # later observe() calls, bounded by the per-item retry budget
+        self._retry_queue: list = []
+        # failpoints armed via MCQ_FAILPOINTS follow the process, not the
+        # engine: arming here makes subprocess harnesses (tools/chaos) work
+        # without an API call into the serving process
+        arm_from_env()
 
     # ------------------------------------------------------------------
     def _cached_fn(self, cache: Dict, key, build):
@@ -418,6 +461,18 @@ class ShardedEngine:
         all_to_all dispatch) -> maintain (rolling per-shard decay) ->
         publish -> cadence snapshot.  The watchdog observes the step
         duration outside the lock; escalation checkpoints immediately.
+
+        Fault ladder (DESIGN.md §12): transient IO/dispatch faults retry
+        under ``cfg.retry`` (capped exponential backoff + jitter);
+        persistent faults and exhausted budgets escalate — the write path
+        poisons (readers keep serving the last published epoch, writes
+        raise :class:`EngineWriteUnavailable` until ``restore()`` heals)
+        and a best-effort checkpoint-now captures what is already
+        consistent.  ``_seq`` only advances once the batch is both durable
+        AND applied, so a mid-step fault can never leave the WAL position
+        pointing past unapplied state.  Cadence-snapshot failures are
+        counted, never raised: a lost snapshot costs replay time, not
+        correctness.
         """
         src = np.asarray(src, np.int32)
         dst = np.asarray(dst, np.int32)
@@ -425,45 +480,230 @@ class ShardedEngine:
              else np.asarray(weights, np.int32))
         t0 = time.monotonic()
         with self._write_lock:
+            if self._poisoned is not None:
+                raise EngineWriteUnavailable(self._poisoned)
             if self.wal is not None:
-                self._seq = self.wal.append(src, dst, w)
+                seq = self._append_wal_locked(src, dst, w)
+                if self.wal.io_errors:
+                    with self._stats_lock:
+                        self.stats["wal_errors"] = self.wal.io_errors
             else:
-                self._seq += 1
-            self._apply_locked(src, dst, w)
+                seq = self._seq + 1
+            self._apply_with_retry_locked(src, dst, w)
+            self._seq = seq
             every = self.cfg.snapshot_every
             if (every and self.cfg.snapshot_dir
                     and (self._seq + 1) % every == 0):
-                self._snapshot_locked(sync=False)
+                try:
+                    self._snapshot_locked(sync=False)
+                except Exception:
+                    with self._stats_lock:
+                        self.stats["snapshot_failures"] += 1
         if self.watchdog is not None:
             self.watchdog.observe(time.monotonic() - t0)
+
+    def _count_retry(self, key: str):
+        """An ``on_retry`` hook that tallies backoff rounds into stats."""
+        def bump(attempt, exc):
+            with self._stats_lock:
+                self.stats[key] += 1
+        return bump
+
+    @requires_lock("_write_lock")
+    def _append_wal_locked(self, src, dst, w) -> int:
+        """Durably log one batch under the retry ladder.
+
+        On escalation (persistent errno or exhausted budget) nothing is
+        durable and nothing was applied — the engine state is still
+        consistent, so poison the write path (checkpoint-now inside) and
+        surface :class:`EngineWriteUnavailable` to the caller."""
+        try:
+            return call_with_retry(
+                lambda: self.wal.append(src, dst, w),
+                policy=self.cfg.retry,
+                on_retry=self._count_retry("wal_retries"))
+        except Exception as exc:
+            self._poison_locked(f"WAL append failed: {exc!r}")
+            raise EngineWriteUnavailable(
+                f"write path poisoned: WAL append failed: {exc!r}") from exc
+
+    @requires_lock("_write_lock")
+    def _apply_with_retry_locked(self, src, dst, w) -> None:
+        """Dispatch one batch under the retry ladder.
+
+        ``_apply_locked`` commits nothing host-side until its publish
+        succeeds, so re-invoking it after a fault re-runs an identical
+        plan.  Exhausted WITH a WAL, the batch is durable but unapplied —
+        letting callers continue would fork the chain from its own log,
+        so poison; ``restore()`` replays the ghost record and heals.
+        Without a WAL the state is simply unchanged: re-raise."""
+        try:
+            call_with_retry(
+                lambda: self._apply_locked(src, dst, w),
+                policy=self.cfg.retry,
+                on_retry=self._count_retry("apply_retries"))
+        except Exception as exc:
+            if self.wal is not None:
+                self._poison_locked(
+                    f"apply failed after durable append: {exc!r}")
+                raise EngineWriteUnavailable(
+                    f"write path poisoned: apply failed: {exc!r}") from exc
+            raise
+
+    @requires_lock("_write_lock")
+    def _poison_locked(self, reason: str) -> None:
+        """Escalation terminus for write-path faults (A13): writes raise
+        until ``restore()`` heals, readers keep serving the last published
+        epoch, and a best-effort checkpoint-now preserves everything that
+        is already consistent (its failure is counted, not raised — the
+        disk that poisoned us is likely still broken)."""
+        self._poisoned = reason
+        with self._stats_lock:
+            self.stats["write_errors"] += 1
+        if self.cfg.snapshot_dir:
+            try:
+                self._snapshot_locked(sync=False)
+            except Exception:
+                with self._stats_lock:
+                    self.stats["snapshot_failures"] += 1
+
+    @property
+    def write_available(self) -> bool:
+        """False while the write path is poisoned (reads still serve)."""
+        return self._poisoned is None
+
+    def _drain_plan(self, queue):
+        """FIFO split of the retry queue into ``(drained, remaining)``
+        chunk lists, taking at most ``route_retry_slice`` items.  Pure —
+        the caller commits the remainder only after its dispatch succeeds,
+        so a retried dispatch re-plans identically."""
+        take, rest = [], []
+        room = max(1, self.cfg.route_retry_slice)
+        for chunk in queue:
+            size = int(chunk[0].size)
+            if room >= size:
+                take.append(chunk)
+                room -= size
+            elif room > 0:
+                take.append(tuple(a[:room] for a in chunk))
+                rest.append(tuple(a[room:] for a in chunk))
+                room = 0
+            else:
+                rest.append(chunk)
+        return take, rest
 
     @requires_lock("_write_lock")
     def _apply_locked(self, src, dst, w) -> None:
         """One learner cycle against the published state (caller holds the
-        write lock).  Shared verbatim by observe() and WAL replay — the
-        recovery determinism contract is 'same batches through the same
-        pipeline', so there must only be one pipeline."""
-        src, dst, w, _ = self._pad(jnp.asarray(src, jnp.int32),
-                                   jnp.asarray(dst, jnp.int32),
-                                   jnp.asarray(w, jnp.int32))
+        write lock).  Shared verbatim by observe(), WAL replay and
+        heal_shard() — the recovery determinism contract is 'same batches
+        through the same pipeline', so there must only be one pipeline.
+
+        Failure atomicity: every host-side plan (retry-queue drain,
+        down-shard deferral, overflow prediction) is computed into locals
+        and committed only after the publish succeeds, so a raising
+        dispatch leaves the queue, the health map and the published state
+        exactly as they were — the caller's retry re-runs an identical
+        plan, and a non-retried fault changes nothing.
+        """
+        scfg = self.cfg.sharded
+        n_shards = scfg.num_shards
+        src = np.asarray(src, np.int32).reshape(-1)
+        dst = np.asarray(dst, np.int32).reshape(-1)
+        w = np.asarray(w, np.int32).reshape(-1)
+        tries = np.zeros(src.shape, np.int32)
+        budget = self.cfg.route_retry_budget
+        remaining = self._retry_queue
+        if budget > 0 and remaining:
+            drained, remaining = self._drain_plan(remaining)
+            src = np.concatenate([src] + [c[0] for c in drained])
+            dst = np.concatenate([dst] + [c[1] for c in drained])
+            w = np.concatenate([w] + [c[2] for c in drained])
+            tries = np.concatenate([tries] + [c[3] for c in drained])
+        defer_plan, lost_down = [], 0
+        down = self.health.down
+        if down:
+            owner = np.asarray(scfg.resolved_ownership().owner_of(
+                jnp.asarray(src, jnp.int32)))
+            hit = np.isin(owner, list(down)) & (src >= 0)
+            if hit.any():
+                for s_id in sorted(int(x) for x in set(owner[hit])):
+                    sel = hit & (owner == s_id)
+                    defer_plan.append((s_id, src[sel].copy(),
+                                       dst[sel].copy(), w[sel].copy()))
+                src = np.where(hit, -1, src).astype(np.int32)
+                dst = np.where(hit, 0, dst).astype(np.int32)
+                w = np.where(hit, 0, w).astype(np.int32)
+        pad = (-src.size) % n_shards
+        if pad:
+            src = np.concatenate([src, np.full(pad, -1, np.int32)])
+            dst = np.concatenate([dst, np.zeros(pad, np.int32)])
+            w = np.concatenate([w, np.zeros(pad, np.int32)])
+            tries = np.concatenate([tries, np.zeros(pad, np.int32)])
+        requeue, retried, lost_skew = None, 0, 0
+        if budget > 0:
+            drop = sh.predict_route_overflow(scfg, src)
+            if drop.any():
+                again = drop & (tries < budget)
+                dead = drop & ~again
+                retried = int(again.sum())
+                lost_skew = int(dead.sum())
+                if retried:
+                    requeue = (src[again].copy(), dst[again].copy(),
+                               w[again].copy(), tries[again] + 1)
+                src = np.where(drop, -1, src).astype(np.int32)
+                dst = np.where(drop, 0, dst).astype(np.int32)
+                w = np.where(drop, 0, w).astype(np.int32)
+        failpoint("engine.apply", items=int(src.size))
         snap = self.store.acquire()
         try:
-            state = self._update(snap.state, src, dst, w)
+            state = self._update(snap.state, jnp.asarray(src),
+                                 jnp.asarray(dst), jnp.asarray(w))
             state = self._maintain(state)
         finally:
             self.store.release(snap)
+        failpoint("engine.publish")
         self.store.publish(state)
+        # the dispatch succeeded: commit the host-side plans
+        if budget > 0:
+            self._retry_queue = remaining + (
+                [requeue] if requeue is not None else [])
+        deferred = 0
+        for s_id, qsrc, qdst, qw in defer_plan:
+            if self.health.defer(s_id, qsrc, qdst, qw):
+                deferred += int(qsrc.size)
+            else:
+                lost_down += int(qsrc.size)
         counters = mc.counter_stats(state)
         with self._stats_lock:
             self.stats["updates"] += 1
             self.stats.update(counters)
+            if retried:
+                self.stats["route_retried"] += retried
+            if lost_skew or lost_down:
+                self.stats["route_lost"] += lost_skew + lost_down
+            if deferred or down:
+                health = self.health.stats()
+                self.stats["deferred_writes"] = health["deferred_writes"]
+                self.stats["shards_down"] = health["shards_down"]
 
     # ------------------------------------------------------------------
     def query(self, src, threshold: Optional[float] = None,
               max_items: Optional[int] = None):
         """Per-src cumulative-threshold read (the paper's §II.B query),
         answered by the owner shards.  Returns ``(dsts[B, k], probs[B, k],
-        n_needed[B])``; routing drops land in ``stats['query_dropped']``."""
+        n_needed[B])``; routing drops land in ``stats['query_dropped']``.
+
+        Degraded reads (DESIGN.md §12): items owned by a down shard are
+        masked out before dispatch and answered empty (counted in
+        ``degraded_answers``); a faulting dispatch retries under
+        ``cfg.retry`` and, exhausted, the whole call degrades to empty
+        answers instead of failing the read path.  With
+        ``query_retry_budget > 0``, items the router would drop for skew
+        re-dispatch against the same snapshot (spread round-robin across
+        sender slices, so each round shrinks the per-slice owner groups);
+        items still dropped after the budget count into ``query_lost``.
+        """
         t = float(self.cfg.threshold if threshold is None else threshold)
         k = int(self.cfg.max_items if max_items is None else max_items)
         with self._route_lock:   # pair the program with its snapshot
@@ -474,15 +714,97 @@ class ShardedEngine:
             snap = self.store.acquire()
         src = jnp.asarray(src, jnp.int32)
         src, b = self._pad(src)
+        degraded = retried = lost = 0
+        down = self.health.down
+        if down:
+            src_np = np.asarray(src)
+            owner = np.asarray(self.cfg.sharded.resolved_ownership()
+                               .owner_of(jnp.asarray(src_np)))
+            hit = np.isin(owner, list(down)) & (src_np >= 0)
+            if hit.any():
+                degraded = int(hit[:b].sum())
+                src = jnp.asarray(np.where(hit, -1, src_np).astype(np.int32))
         try:
-            d, p, n, dropped = fn(snap.state, src)
+            try:
+                d, p, n, dropped = call_with_retry(
+                    lambda: self._dispatch_query(fn, snap, src),
+                    policy=self.cfg.retry,
+                    on_retry=self._count_retry("dispatch_retries"))
+                n_dropped = int(jnp.sum(dropped))
+            except Exception:
+                # the read path never raises for dispatch faults: the
+                # whole call degrades to empty answers from zero shards
+                # (counted) — still sorted-descending, trivially
+                bpad = int(np.asarray(src).shape[0])
+                d = jnp.full((bpad, k), -1, jnp.int32)
+                p = jnp.zeros((bpad, k), jnp.float32)
+                n = jnp.zeros((bpad,), jnp.int32)
+                n_dropped = 0
+                degraded = b
+            if self.cfg.query_retry_budget > 0 and n_dropped:
+                d, p, n, retried, lost = self._query_overflow_retry(
+                    fn, snap, src, b, d, p, n)
         finally:
             self.store.release(snap)
-        n_dropped = int(jnp.sum(dropped))
         with self._stats_lock:
             self.stats["queries"] += 1
             self.stats["query_dropped"] += n_dropped
+            if degraded:
+                self.stats["degraded_answers"] += degraded
+            if retried:
+                self.stats["query_retried"] += retried
+            if lost:
+                self.stats["query_lost"] += lost
         return d[:b], p[:b], n[:b]
+
+    def _dispatch_query(self, fn, snap, src):
+        """Single routed query dispatch; the failpoint sits inside so a
+        retry round re-traverses it (nth-hit triggers model transients)."""
+        failpoint("engine.query_dispatch", items=int(src.shape[0]))
+        return fn(snap.state, src)
+
+    def _query_overflow_retry(self, fn, snap, src, b, d, p, n):
+        """In-call overflow retry: re-dispatch the items the router would
+        drop for skew against the SAME snapshot.  Retry item j lands at
+        slice ``j % S``, slot ``j // S`` — round-robin across sender
+        slices, so every round splits the over-capacity owner groups.
+        Returns merged ``(d, p, n, retried, lost)``."""
+        scfg = self.cfg.sharded
+        n_shards = scfg.num_shards
+        src_np = np.asarray(src)
+        total = src_np.size
+        local = total // n_shards
+        d_np, p_np, n_np = (np.asarray(d).copy(), np.asarray(p).copy(),
+                            np.asarray(n).copy())
+        drop = sh.predict_route_overflow(scfg, src_np)
+        drop[b:] = False
+        retried = 0
+        rounds = self.cfg.query_retry_budget
+        while rounds > 0 and drop.any():
+            idx = np.flatnonzero(drop)
+            j = np.arange(idx.size)
+            pos = (j % n_shards) * local + (j // n_shards)
+            retry_src = np.full(total, -1, np.int32)
+            retry_src[pos] = src_np[idx]
+            try:
+                rd, rp, rn, _ = call_with_retry(
+                    lambda: self._dispatch_query(fn, snap,
+                                                 jnp.asarray(retry_src)),
+                    policy=self.cfg.retry,
+                    on_retry=self._count_retry("dispatch_retries"))
+            except Exception:
+                break   # keep what we have; the rest counts as lost
+            retried += int(idx.size)
+            rdrop = sh.predict_route_overflow(scfg, retry_src)
+            ok = ~rdrop[pos]
+            d_np[idx[ok]] = np.asarray(rd)[pos[ok]]
+            p_np[idx[ok]] = np.asarray(rp)[pos[ok]]
+            n_np[idx[ok]] = np.asarray(rn)[pos[ok]]
+            drop = np.zeros_like(drop)
+            drop[idx[~ok]] = True
+            rounds -= 1
+        return (jnp.asarray(d_np), jnp.asarray(p_np), jnp.asarray(n_np),
+                retried, int(drop.sum()))
 
     # ------------------------------------------------------------------
     def topn(self, n: Optional[int] = None):
@@ -490,22 +812,67 @@ class ShardedEngine:
         cross-shard merge read).  Returns ``(srcs[n], dsts[n], probs[n])``;
         candidates the shards could not expose are counted in
         ``stats['topn_dropped']`` (last call's value is kept — it is a
-        property of the current state, not a running total)."""
+        property of the current state, not a running total).  Rows owned
+        by down shards are filtered from the merge (degraded reads,
+        DESIGN.md §12); a dispatch fault retries and, exhausted, the call
+        degrades to an empty merge rather than raising."""
         n = int(self.cfg.topn if n is None else n)
         with self._route_lock:   # pair the program with its snapshot
             fn = self._cached_fn(
                 self._topn_fns, n,
                 lambda: sh.make_topn_fn(self.cfg.sharded, self.mesh, n))
             snap = self.store.acquire()
+        degraded = 0
         try:
-            srcs, dsts, probs, dropped = fn(snap.state)
+            try:
+                srcs, dsts, probs, dropped = call_with_retry(
+                    lambda: self._dispatch_topn(fn, snap),
+                    policy=self.cfg.retry,
+                    on_retry=self._count_retry("dispatch_retries"))
+                n_dropped = int(dropped)
+            except Exception:
+                # read path never raises for dispatch faults: empty merge
+                srcs = jnp.full((n,), -1, jnp.int32)
+                dsts = jnp.full((n,), -1, jnp.int32)
+                probs = jnp.zeros((n,), jnp.float32)
+                n_dropped = 0
+                degraded = n
         finally:
             self.store.release(snap)
-        n_dropped = int(dropped)
+        down = self.health.down
+        if down and not degraded:
+            # degraded merge: filter rows owned by down shards out of the
+            # answer (order among survivors preserved — still globally
+            # descending), pad the tail with empties and count the holes
+            s_np, d_np, p_np = (np.asarray(srcs), np.asarray(dsts),
+                                np.asarray(probs))
+            owner = np.asarray(self.cfg.sharded.resolved_ownership()
+                               .owner_of(jnp.asarray(s_np)))
+            hit = np.isin(owner, list(down)) & (s_np >= 0)
+            if hit.any():
+                degraded = int(hit.sum())
+                keep = ~hit
+                kept = int(keep.sum())
+                out_s = np.full_like(s_np, -1)
+                out_d = np.full_like(d_np, -1)
+                out_p = np.zeros_like(p_np)
+                out_s[:kept] = s_np[keep]
+                out_d[:kept] = d_np[keep]
+                out_p[:kept] = p_np[keep]
+                srcs, dsts, probs = (jnp.asarray(out_s), jnp.asarray(out_d),
+                                     jnp.asarray(out_p))
         with self._stats_lock:
             self.stats["topn_calls"] += 1
             self.stats["topn_dropped"] = n_dropped
+            if degraded:
+                self.stats["degraded_answers"] += degraded
         return srcs, dsts, probs
+
+    def _dispatch_topn(self, fn, snap):
+        """Single cross-shard merge dispatch (failpoint inside: retries
+        re-traverse it)."""
+        failpoint("engine.topn_dispatch")
+        return fn(snap.state)
 
     # ------------------------------------------------------------------
     # durability & elasticity (DESIGN.md §10)
@@ -539,6 +906,11 @@ class ShardedEngine:
                           "assignment": list(own.resolved_assignment())},
             "base_cfg": dataclasses.asdict(scfg.base),
             "store_version": self.store.version,
+            # the overflow-retry carry-over is part of the recovery state:
+            # replay determinism is 'same batches through the same
+            # pipeline', and the pipeline's plan depends on the queue
+            "retry_queue": [[c[0].tolist(), c[1].tolist(), c[2].tolist(),
+                             c[3].tolist()] for c in self._retry_queue],
         }
         # WAL GC rides the snapshot cadence: once a snapshot at wal_seq is
         # COMMITTED (manifest renamed), every record with seq <= wal_seq is
@@ -560,7 +932,7 @@ class ShardedEngine:
                                     if t.is_alive()]
                 self._io_threads.append(snapshot_io.save_snapshot_async(
                     snap.state, self.cfg.snapshot_dir, step, meta,
-                    on_complete=gc))
+                    on_complete=gc, on_error=self._snapshot_io_error))
                 path = snapshot_io.step_dir(self.cfg.snapshot_dir, step)
         finally:
             self.store.release(snap)
@@ -568,10 +940,57 @@ class ShardedEngine:
             self.stats["snapshots"] += 1
         return path
 
+    def _snapshot_io_error(self, exc) -> None:
+        """Worker-thread snapshot IO fault: count it and move on — the
+        cadence retries at the next interval, and an aborted step directory
+        is invisible to ``latest_complete_step``.  Without this hook the
+        worker would die with only a stderr traceback (a silently dead IO
+        thread that looks like progress)."""
+        with self._stats_lock:
+            self.stats["snapshot_failures"] += 1
+
     def _escalate_snapshot(self) -> None:
         # watchdog escalation fires outside the write lock (observe() calls
         # watchdog.observe after releasing it), so taking it here is safe
         self.checkpoint()
+
+    # ------------------------------------------------------------------
+    # graceful degradation (DESIGN.md §12)
+    # ------------------------------------------------------------------
+
+    def mark_shard_down(self, shard: int) -> None:
+        """Administratively exclude ``shard``: routed reads mask its items
+        (counted in ``degraded_answers``), its share of the top-n merge is
+        filtered, and its writes defer (bounded by ``deferred_cap``) until
+        :meth:`heal_shard` re-admits it.  The strike path
+        (``health.record_failure``) reaches the same state automatically
+        after ``health_strikes`` consecutive dispatch failures."""
+        if not 0 <= shard < self.cfg.sharded.num_shards:
+            raise ValueError(
+                f"shard {shard} out of range for "
+                f"{self.cfg.sharded.num_shards} shards")
+        self.health.mark_down(shard)
+        with self._stats_lock:
+            self.stats["shards_down"] = self.health.stats()["shards_down"]
+
+    def heal_shard(self, shard: int) -> int:
+        """Re-admit ``shard`` and re-apply its deferred writes through the
+        one observe pipeline.  Deferred batches are NOT re-logged: their
+        original records are already in the WAL (append ran before the
+        deferral), and a post-crash replay starts with an empty health map
+        so it applies them directly — recovery supersedes degradation
+        (A15).  Returns the number of re-applied batches."""
+        with self._write_lock:
+            batches = self.health.heal(shard)
+            for bsrc, bdst, bw in batches:
+                self._apply_locked(
+                    bsrc, bdst,
+                    bw if bw is not None else np.ones_like(bsrc))
+            health = self.health.stats()
+            with self._stats_lock:
+                self.stats["shards_down"] = health["shards_down"]
+                self.stats["deferred_writes"] = health["deferred_writes"]
+        return len(batches)
 
     def close(self) -> None:
         """Shutdown path: drain outstanding snapshot IO and close the WAL.
@@ -606,7 +1025,9 @@ class ShardedEngine:
         through the pre-aggregated update path under this engine's
         ownership map (``persist/reshard.py``), then the order settles
         exactly.  Either way, WAL records with ``seq > wal_seq`` replay
-        through the one observe pipeline.
+        through the one observe pipeline.  A successful restore also
+        heals a poisoned write path (DESIGN.md §12): durable-but-unapplied
+        ghost records are replayed here, re-aligning log and state.
         """
         directory = self.cfg.snapshot_dir
         if not directory:
@@ -660,14 +1081,26 @@ class ShardedEngine:
                     self._rebind(new_scfg)
                 self.store.publish(state)
             self._seq = int(meta["wal_seq"])
+            # the overflow-retry carry-over is recovery state: the replay
+            # below re-plans each step from the same queue the pre-crash
+            # pipeline saw (snapshots from older builds simply have none)
+            self._retry_queue = [
+                tuple(np.asarray(a, np.int32) for a in chunk)
+                for chunk in meta.get("retry_queue", [])]
             with self._stats_lock:
                 self.stats.update(mc.counter_stats(state))
             if replay and self.wal is not None:
                 for seq, src, dst, w in self.wal.replay(
                         after_seq=self._seq):
-                    self._seq = seq
+                    # apply BEFORE advancing: a fault mid-replay must not
+                    # leave _seq past unapplied records (same contract as
+                    # observe)
                     self._apply_locked(src, dst, w)
+                    self._seq = seq
                     replayed += 1
+            # restore is the escalation ladder's terminus: snapshot + log
+            # agree with the published state again, so writes re-open
+            self._poisoned = None
         return {"step": step, "mode": mode, "replayed": replayed,
                 "wal_seq": self._seq}
 

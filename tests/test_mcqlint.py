@@ -33,6 +33,7 @@ RULE_TO_FIXTURE = {
     "MCQ-U001": "fixture_u001.py",
     "MCQ-F401": "fixture_f401.py",
     "MCQ-E741": "fixture_e741.py",
+    "MCQ-R001": "fixture_r001.py",
 }
 
 

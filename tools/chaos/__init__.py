@@ -1,0 +1,2 @@
+"""Crash-soak chaos harness (DESIGN.md §12): SIGKILL a serving worker in
+a loop and assert bit-exact recovery against a WAL-replay oracle."""

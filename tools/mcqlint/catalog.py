@@ -104,6 +104,17 @@ CATALOG: Tuple[Invariant, ...] = (
         dynamic=("route_snapshot_mispairing",),
     ),
     Invariant(
+        id="I10", key="I-fault",
+        statement=(
+            "The failpoint surface is closed and exercised: every "
+            "failpoint() site uses a literal name registered in "
+            "FAILPOINT_CATALOG, every catalog entry keeps a call site, "
+            "and the fault-matrix tests inject every site (retry, "
+            "escalation or degraded-mode behaviour asserted)."),
+        assumptions=("A13", "A14"),
+        rules=("MCQ-R001",),
+    ),
+    Invariant(
         id="I9", key="I-hygiene",
         statement=(
             "Tree hygiene mcqlint absorbs from ruff (uninstallable "

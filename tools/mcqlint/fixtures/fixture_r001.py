@@ -1,0 +1,17 @@
+"""Seeded MCQ-R001 violations: a failpoint site that is not registered in
+the module's FAILPOINT_CATALOG, an orphan catalog entry with no call site,
+and a site named by a computed (non-literal) string."""
+
+FAILPOINT_CATALOG = {
+    "demo.registered_but_orphaned": "an entry whose call site was deleted",
+}
+
+
+def failpoint(name, **ctx):
+    pass
+
+
+def risky_write(fh, name):
+    failpoint("demo.unregistered_site", fh=fh)
+    failpoint("demo." + name)
+    fh.write(b"payload")

@@ -1,0 +1,112 @@
+"""I-fault rule: the failpoint surface is closed and fully exercised
+(invariant I10).
+
+Failpoints only earn their keep if every site is (a) registered — arming
+validates names against ``FAILPOINT_CATALOG``, so a typo'd site would be
+armable never and hit always — and (b) actually injected by the fault
+matrix, otherwise an IO edge's failure path ships untested.  Statically,
+across the scanned tree:
+
+* every ``failpoint("name")`` call passes a literal string (sites must be
+  statically enumerable; a computed name cannot be audited),
+* every site name appears in a ``FAILPOINT_CATALOG`` literal found in the
+  scanned tree (unknown names are dead switches: disarmed forever),
+* every catalog entry has at least one call site (an orphan entry is a
+  fault edge that silently lost its instrumentation),
+* when a test tree was scanned, every site name is mentioned by it — the
+  fault-matrix table in ``tests/test_faults.py`` must inject each one.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Tuple
+
+from tools.mcqlint.core import Finding, Project, Rule
+
+
+def _catalog_names(sf) -> List[Tuple[str, ast.AST]]:
+    """``FAILPOINT_CATALOG = {"name": ..., ...}`` literal entries, if the
+    module declares one."""
+    out: List[Tuple[str, ast.AST]] = []
+    for node in sf.tree.body:
+        if not isinstance(node, ast.Assign):
+            continue
+        targets = [t.id for t in node.targets if isinstance(t, ast.Name)]
+        if "FAILPOINT_CATALOG" not in targets:
+            continue
+        if isinstance(node.value, (ast.Dict, ast.Set)):
+            keys = (node.value.keys if isinstance(node.value, ast.Dict)
+                    else node.value.elts)
+            for key in keys:
+                if (isinstance(key, ast.Constant)
+                        and isinstance(key.value, str)):
+                    out.append((key.value, key))
+    return out
+
+
+def _is_failpoint_call(node: ast.Call) -> bool:
+    fn = node.func
+    if isinstance(fn, ast.Name):
+        return fn.id == "failpoint"
+    if isinstance(fn, ast.Attribute):
+        return fn.attr == "failpoint"
+    return False
+
+
+class FailpointCoverage(Rule):
+    id = "MCQ-R001"
+    summary = ("every failpoint() site uses a literal name registered in "
+               "FAILPOINT_CATALOG; every catalog entry has a site; every "
+               "site is injected by the fault-matrix tests")
+
+    def check(self, project: Project) -> List[Finding]:
+        out: List[Finding] = []
+        catalog: Dict[str, tuple] = {}
+        sites: Dict[str, List[tuple]] = {}
+        for sf in project.files:
+            for name, node in _catalog_names(sf):
+                catalog.setdefault(name, (sf, node))
+            for node in ast.walk(sf.tree):
+                if not (isinstance(node, ast.Call)
+                        and _is_failpoint_call(node)):
+                    continue
+                if not node.args or not (
+                        isinstance(node.args[0], ast.Constant)
+                        and isinstance(node.args[0].value, str)):
+                    out.append(Finding(
+                        self.id, sf.path, node.lineno,
+                        "failpoint() site name must be a literal string "
+                        "(sites are audited statically)"))
+                    continue
+                sites.setdefault(node.args[0].value, []).append((sf, node))
+        if not catalog and not sites:
+            return out   # tree has no failpoint surface at all
+
+        for name, hits in sorted(sites.items()):
+            if catalog and name not in catalog:
+                for sf, node in hits:
+                    out.append(Finding(
+                        self.id, sf.path, node.lineno,
+                        f"failpoint site '{name}' is not registered in "
+                        f"FAILPOINT_CATALOG (unarmable: a dead switch)"))
+        for name, (sf, node) in sorted(catalog.items()):
+            if name not in sites:
+                out.append(Finding(
+                    self.id, sf.path, node.lineno,
+                    f"FAILPOINT_CATALOG entry '{name}' has no "
+                    f"failpoint() call site in the scanned tree"))
+        # fault-matrix coverage: each site injected by at least one test
+        if project.tests_text is not None:
+            for name, hits in sorted(sites.items()):
+                if name not in project.tests_text:
+                    sf, node = hits[0]
+                    out.append(Finding(
+                        self.id, sf.path, node.lineno,
+                        f"failpoint site '{name}' is not exercised by "
+                        f"the fault-matrix tests (inject it in "
+                        f"tests/test_faults.py)"))
+        return out
+
+
+RULES = [FailpointCoverage()]
