@@ -30,6 +30,15 @@ append (strongest; one fsync per batch), ``rotate`` (default) fsyncs on
 segment close and relies on the OS for the open segment (bounded loss: at
 most one segment of batches), ``never`` leaves it all to the OS.  Directory
 entries are fsynced on segment create/close under ``always``/``rotate``.
+Because rotation is the durability point under ``rotate``, a failed
+rotation fsync there raises :class:`SegmentRotationError` (persistent, no
+retry) so the caller escalates instead of trusting a segment that may not
+survive power loss; under ``always`` the same failure is swallowed and
+counted (``io_errors``) — every record is already individually durable.
+``close()`` always swallows (counted): it must not mask the caller's
+shutdown path, so under ``rotate`` the final segment's durability after a
+failing close is best-effort — an engine that needs better runs
+``checkpoint()`` before ``close()``.
 """
 
 from __future__ import annotations
@@ -43,11 +52,22 @@ from typing import Iterator, Optional, Tuple
 import numpy as np
 
 from repro.faults import failpoint
+from repro.runtime.fault_tolerance import UnretryableIOError
 
 _MAGIC = b"MCWL"
 _HEADER = struct.Struct("<4sIqi")
 
 FSYNC_POLICIES = ("always", "rotate", "never")
+
+
+class SegmentRotationError(UnretryableIOError):
+    """Rotation failed under policy ``rotate`` — the rotation fsync IS the
+    segment's durability point there, so every acknowledged record of the
+    segment may be lost on power failure.  Classified persistent (no
+    retry: the failed append-side retry would re-log the just-written
+    record under a new seq and double-apply it on replay); the engine's
+    escalation ladder poisons the write path instead and ``restore()``
+    re-aligns state with whatever actually survived."""
 
 
 def _fsync_dir(directory: str) -> None:
@@ -156,16 +176,26 @@ class WriteAheadLog:
             self._fh_records += 1
             self._next_seq = seq + 1
             if self._fh_records >= self.segment_records:
-                # rotation failures are swallowed: the record above is
-                # already durable and acknowledged, so raising here would
-                # make the caller retry an applied batch under a new seq
-                # (double apply on replay).  Abandon the segment instead;
-                # the next append starts a new one.
+                # Rotation failure handling depends on where durability
+                # lives (A11).  Under 'always' every record is already
+                # fsynced, so a failed close costs nothing durable:
+                # swallow, count, abandon the segment (raising would make
+                # the caller retry an acknowledged record under a new seq
+                # — double apply on replay).  Under 'rotate' the rotation
+                # fsync IS the durability point of the whole segment:
+                # swallowing would acknowledge records that may vanish on
+                # power loss, so escalate with an unretryable error — the
+                # engine poisons its write path and restore() re-aligns.
+                # Under 'never' durability is best-effort by contract.
                 try:
                     self._rotate_locked()
-                except Exception:
+                except Exception as exc:
                     self.io_errors += 1
                     self._abandon_segment_locked()
+                    if self.fsync == "rotate":
+                        raise SegmentRotationError(
+                            0, f"segment rotation failed under policy "
+                               f"'rotate': {exc!r}") from exc
         return seq
 
     def _open_segment_locked(self, seq: int) -> None:
@@ -298,6 +328,15 @@ class WriteAheadLog:
                 else:
                     keep_from = keep_from or path
         return removed
+
+    def resume_at(self, next_seq: int) -> None:
+        """Fast-forward the writer's sequence counter (restore path).
+        After :meth:`truncate_through` unlinked every segment, a fresh
+        process's scan finds an empty directory and would restart at 0 —
+        colliding with records the snapshot already covers.  The snapshot
+        meta's ``wal_seq`` is the durable authority; never rewinds."""
+        with self._mu:
+            self._next_seq = max(self._next_seq, int(next_seq))
 
     @property
     def next_seq(self) -> int:

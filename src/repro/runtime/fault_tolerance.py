@@ -118,6 +118,42 @@ class EngineWriteUnavailable(RuntimeError):
     until ``restore()`` heals the WAL position (DESIGN.md §12, A13)."""
 
 
+class UnretryableIOError(OSError):
+    """An IO fault that must escalate WITHOUT retry even though its errno
+    looks transient — the operation is not idempotent from where it
+    failed.  Canonical case: a rotation fsync failing under WAL policy
+    ``rotate`` (the durability point of the whole segment); retrying the
+    *append* there would re-log an already-written record under a new
+    seq and double-apply it on replay."""
+
+
+class ShardDispatchError(RuntimeError):
+    """A dispatch failure attributable to ONE shard (a per-shard RPC
+    timing out, a device owned by that shard lost).  Carries ``.shard``
+    so the engine's strike path can take that shard down automatically
+    after ``health_strikes`` consecutive escalations; unattributable
+    dispatch faults degrade the call but strike nobody."""
+
+    def __init__(self, shard: int, message: str = ""):
+        super().__init__(
+            message or f"dispatch failed against shard {shard}")
+        self.shard = int(shard)
+
+
+def shard_from_exception(exc: Optional[BaseException]) -> Optional[int]:
+    """Extract the striking shard id from an exception's cause/context
+    chain (``RetryBudgetExceeded`` chains the last fault as its cause);
+    None when no link carries a ``.shard``."""
+    hops = 0
+    while exc is not None and hops < 8:
+        shard = getattr(exc, "shard", None)
+        if isinstance(shard, int):
+            return shard
+        exc = exc.__cause__ or exc.__context__
+        hops += 1
+    return None
+
+
 #: errnos that retrying cannot fix: the disk is full/read-only/over quota
 #: or the file is unreachable — escalate immediately (checkpoint-now /
 #: degraded mode), never spin (A13).
@@ -133,7 +169,12 @@ def classify_io_error(exc: BaseException) -> str:
     OSErrors are classified by errno; anything non-OSError coming out of
     an IO edge (a dead thread, a device dispatch failure) is treated as
     transient — one retry round is cheap and device hiccups recover.
+    :class:`UnretryableIOError` is persistent whatever its errno: the
+    raiser is telling us the operation cannot be retried from where it
+    failed (see the class docstring).
     """
+    if isinstance(exc, UnretryableIOError):
+        return "persistent"
     if isinstance(exc, OSError) and exc.errno in PERSISTENT_ERRNOS:
         return "persistent"
     return "transient"
@@ -214,6 +255,11 @@ class ShardHealth:
     down-set is an immutable frozenset swapped atomically, so a query
     thread observes either the old or the new set, never a torn one —
     the same publish idiom as the epoch store.
+
+    The down-set and deferred queue are recovery state (A15): they ride
+    snapshot meta via :meth:`dump`/:meth:`load` because snapshot-cadence
+    WAL GC may unlink the deferred batches' original log records.
+    Strikes are transient and never persisted.
     """
 
     _MCQ_LOCK_ORDER = ("_mu",)
@@ -267,6 +313,15 @@ class ShardHealth:
         with self._mu:
             self._strikes.pop(shard, None)
 
+    def record_success_all(self) -> None:
+        """A whole-mesh dispatch succeeded: every shard answered, so all
+        strike streaks break (the down-set is untouched).  Cheap racy
+        emptiness peek first — the common healthy path takes no lock."""
+        if not self._strikes:
+            return
+        with self._mu:
+            self._strikes.clear()
+
     def mark_down(self, shard: int) -> None:
         with self._mu:
             self._down = self._down | {shard}
@@ -294,6 +349,50 @@ class ShardHealth:
             batches = self._deferred.pop(shard, [])
             self._deferred_items -= sum(int(b[0].size) for b in batches)
             return batches
+
+    def requeue(self, shard: int, batches: List[tuple]) -> None:
+        """Push back batches :meth:`heal` popped but the caller could not
+        apply, at the FRONT of the shard's queue (arrival order holds) and
+        cap-exempt — they were admitted under the cap once already, so a
+        failed heal must not convert them into drops."""
+        if not batches:
+            return
+        with self._mu:
+            self._deferred[shard] = (list(batches)
+                                     + self._deferred.get(shard, []))
+            self._deferred_items += sum(int(b[0].size) for b in batches)
+
+    def dump(self) -> dict:
+        """JSON-serialisable image of the recovery-relevant state (the
+        down-set and the deferred queue; strikes are transient and omitted)
+        for snapshot meta.  ``deferred`` is a flat ``[shard, src, dst, w]``
+        list in per-shard arrival order."""
+        with self._mu:
+            return {
+                "down": sorted(self._down),
+                "deferred": [
+                    [shard, b[0].tolist(), b[1].tolist(),
+                     None if b[2] is None else b[2].tolist()]
+                    for shard in sorted(self._deferred)
+                    for b in self._deferred[shard]],
+            }
+
+    def load(self, image: dict) -> None:
+        """Replace the health state with a :meth:`dump` image (restore
+        path): the live down-set, strikes and deferred queue are discarded
+        — recovery state comes from the snapshot, never from the
+        pre-restore process (A15)."""
+        with self._mu:
+            self._down = frozenset(int(s) for s in image.get("down", ()))
+            self._strikes = {}
+            self._deferred = {}
+            self._deferred_items = 0
+            for shard, src, dst, w in image.get("deferred", ()):
+                src = np.asarray(src, np.int32)
+                self._deferred.setdefault(int(shard), []).append(
+                    (src, np.asarray(dst, np.int32),
+                     None if w is None else np.asarray(w, np.int32)))
+                self._deferred_items += int(src.size)
 
     def stats(self) -> Dict[str, int]:
         with self._mu:

@@ -46,7 +46,8 @@ from repro.persist.wal import WriteAheadLog
 from repro.runtime.fault_tolerance import (EngineWriteUnavailable,
                                            RetryPolicy, ShardHealth,
                                            StepWatchdog, WatchdogConfig,
-                                           call_with_retry)
+                                           call_with_retry,
+                                           shard_from_exception)
 from repro.serve import sampling
 from repro.sharding.ownership import Ownership
 
@@ -509,6 +510,22 @@ class ShardedEngine:
                 self.stats[key] += 1
         return bump
 
+    def _record_dispatch_failure(self, exc: BaseException) -> None:
+        """Strike the owning shard when an escalated dispatch fault names
+        one (a :class:`ShardDispatchError` anywhere in the cause chain —
+        per-shard RPC timeout, lost device).  After ``health_strikes``
+        consecutive escalations the shard goes down automatically: reads
+        mask it, writes defer — the same state ``mark_shard_down``
+        reaches administratively.  Unattributable faults strike nobody
+        (one bad dispatch says nothing about WHICH shard is sick)."""
+        shard = shard_from_exception(exc)
+        if shard is None or not 0 <= shard < self.cfg.sharded.num_shards:
+            return
+        if self.health.record_failure(shard):
+            with self._stats_lock:
+                self.stats["shards_down"] = \
+                    self.health.stats()["shards_down"]
+
     @requires_lock("_write_lock")
     def _append_wal_locked(self, src, dst, w) -> int:
         """Durably log one batch under the retry ladder.
@@ -542,7 +559,9 @@ class ShardedEngine:
                 lambda: self._apply_locked(src, dst, w),
                 policy=self.cfg.retry,
                 on_retry=self._count_retry("apply_retries"))
+            self.health.record_success_all()
         except Exception as exc:
+            self._record_dispatch_failure(exc)
             if self.wal is not None:
                 self._poison_locked(
                     f"apply failed after durable append: {exc!r}")
@@ -731,10 +750,15 @@ class ShardedEngine:
                     policy=self.cfg.retry,
                     on_retry=self._count_retry("dispatch_retries"))
                 n_dropped = int(jnp.sum(dropped))
-            except Exception:
+                self.health.record_success_all()
+            except Exception as exc:
                 # the read path never raises for dispatch faults: the
                 # whole call degrades to empty answers from zero shards
-                # (counted) — still sorted-descending, trivially
+                # (counted) — still sorted-descending, trivially.  A
+                # shard-attributable fault strikes its shard: after
+                # health_strikes consecutive escalations it goes down
+                # and later reads degrade without paying the dispatch.
+                self._record_dispatch_failure(exc)
                 bpad = int(np.asarray(src).shape[0])
                 d = jnp.full((bpad, k), -1, jnp.int32)
                 p = jnp.zeros((bpad, k), jnp.float32)
@@ -792,7 +816,8 @@ class ShardedEngine:
                                                  jnp.asarray(retry_src)),
                     policy=self.cfg.retry,
                     on_retry=self._count_retry("dispatch_retries"))
-            except Exception:
+            except Exception as exc:
+                self._record_dispatch_failure(exc)
                 break   # keep what we have; the rest counts as lost
             retried += int(idx.size)
             rdrop = sh.predict_route_overflow(scfg, retry_src)
@@ -830,8 +855,10 @@ class ShardedEngine:
                     policy=self.cfg.retry,
                     on_retry=self._count_retry("dispatch_retries"))
                 n_dropped = int(dropped)
-            except Exception:
+                self.health.record_success_all()
+            except Exception as exc:
                 # read path never raises for dispatch faults: empty merge
+                self._record_dispatch_failure(exc)
                 srcs = jnp.full((n,), -1, jnp.int32)
                 dsts = jnp.full((n,), -1, jnp.int32)
                 probs = jnp.zeros((n,), jnp.float32)
@@ -911,6 +938,11 @@ class ShardedEngine:
             # pipeline', and the pipeline's plan depends on the queue
             "retry_queue": [[c[0].tolist(), c[1].tolist(), c[2].tolist(),
                              c[3].tolist()] for c in self._retry_queue],
+            # so is the health map (A15): the down-set and deferred queue
+            # must survive the crash, because WAL GC below may unlink the
+            # deferred batches' original records — after this commit the
+            # snapshot meta is their only durable copy
+            "health": self.health.dump(),
         }
         # WAL GC rides the snapshot cadence: once a snapshot at wal_seq is
         # COMMITTED (manifest renamed), every record with seq <= wal_seq is
@@ -975,21 +1007,37 @@ class ShardedEngine:
 
     def heal_shard(self, shard: int) -> int:
         """Re-admit ``shard`` and re-apply its deferred writes through the
-        one observe pipeline.  Deferred batches are NOT re-logged: their
-        original records are already in the WAL (append ran before the
-        deferral), and a post-crash replay starts with an empty health map
-        so it applies them directly — recovery supersedes degradation
-        (A15).  Returns the number of re-applied batches."""
+        one observe pipeline.  Deferred batches are NOT re-logged: they
+        are recovery state already — their original WAL records exist
+        until snapshot GC, and every snapshot persists the health map
+        (down-set + deferred queue) in its meta, which ``restore()``
+        reinstates before replay — so heal-vs-crash never double-counts a
+        batch (A15).  Each batch re-applies under the ``cfg.retry``
+        ladder; if one still fails, the shard is re-marked down and the
+        unapplied remainder (failed batch included) is requeued before
+        the fault propagates — a mid-heal fault never drops writes.
+        Returns the number of re-applied batches."""
         with self._write_lock:
             batches = self.health.heal(shard)
-            for bsrc, bdst, bw in batches:
-                self._apply_locked(
-                    bsrc, bdst,
-                    bw if bw is not None else np.ones_like(bsrc))
-            health = self.health.stats()
-            with self._stats_lock:
-                self.stats["shards_down"] = health["shards_down"]
-                self.stats["deferred_writes"] = health["deferred_writes"]
+            done = 0
+            try:
+                for bsrc, bdst, bw in batches:
+                    call_with_retry(
+                        functools.partial(
+                            self._apply_locked, bsrc, bdst,
+                            bw if bw is not None else np.ones_like(bsrc)),
+                        policy=self.cfg.retry,
+                        on_retry=self._count_retry("apply_retries"))
+                    done += 1
+            except Exception:
+                self.health.mark_down(shard)
+                self.health.requeue(shard, batches[done:])
+                raise
+            finally:
+                health = self.health.stats()
+                with self._stats_lock:
+                    self.stats["shards_down"] = health["shards_down"]
+                    self.stats["deferred_writes"] = health["deferred_writes"]
         return len(batches)
 
     def close(self) -> None:
@@ -1087,8 +1135,32 @@ class ShardedEngine:
             self._retry_queue = [
                 tuple(np.asarray(a, np.int32) for a in chunk)
                 for chunk in meta.get("retry_queue", [])]
+            # so is the health map (A15): the snapshot's down-set and
+            # deferred queue replace the live one BEFORE replay — an
+            # in-process restore must not replay down-shard records on
+            # top of deferrals the snapshot already captured (that would
+            # double-apply them on heal), and the deferred batches'
+            # original WAL records may be GC'd, so the meta image is
+            # authoritative.  Replayed tail records owned by a restored
+            # down shard re-defer exactly as they did pre-crash.
+            health_image = meta.get("health", {})
+            self.health.load(health_image if mode == "exact" else {})
+            hstats = self.health.stats()
             with self._stats_lock:
                 self.stats.update(mc.counter_stats(state))
+                self.stats["shards_down"] = hstats["shards_down"]
+                self.stats["deferred_writes"] = hstats["deferred_writes"]
+            if mode != "exact":
+                # reshard: old shard ids are meaningless under the new
+                # topology — start healthy (loaded empty above) and fold
+                # the snapshot's deferred batches straight into the state
+                # (they precede every tail record in seq order)
+                for _, dsrc, ddst, dw in health_image.get("deferred", ()):
+                    dsrc = np.asarray(dsrc, np.int32)
+                    self._apply_locked(
+                        dsrc, np.asarray(ddst, np.int32),
+                        np.ones_like(dsrc) if dw is None
+                        else np.asarray(dw, np.int32))
             if replay and self.wal is not None:
                 for seq, src, dst, w in self.wal.replay(
                         after_seq=self._seq):
@@ -1098,6 +1170,12 @@ class ShardedEngine:
                     self._apply_locked(src, dst, w)
                     self._seq = seq
                     replayed += 1
+            if self.wal is not None:
+                # snapshot GC may have unlinked every segment: a fresh
+                # process's WAL scan then restarts at 0, colliding with
+                # seqs the snapshot covers — the meta wal_seq is the
+                # durable authority
+                self.wal.resume_at(self._seq + 1)
             # restore is the escalation ladder's terminus: snapshot + log
             # agree with the published state again, so writes re-open
             self._poisoned = None

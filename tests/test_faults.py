@@ -27,11 +27,13 @@ from repro.checkpoint import ckpt
 from repro.core import mcprioq as mc
 from repro.core import sharded as sh
 from repro.persist import snapshot as snapshot_io
-from repro.persist.wal import WriteAheadLog
+from repro.persist.wal import SegmentRotationError, WriteAheadLog
 from repro.runtime.fault_tolerance import (EngineWriteUnavailable,
                                            RetryBudgetExceeded, RetryPolicy,
-                                           ShardHealth, call_with_retry,
-                                           classify_io_error)
+                                           ShardDispatchError, ShardHealth,
+                                           call_with_retry,
+                                           classify_io_error,
+                                           shard_from_exception)
 from repro.serve.engine import (Engine, ServeConfig, ShardedEngine,
                                 ShardedServeConfig)
 
@@ -45,7 +47,7 @@ FAULT_MATRIX = {
     "wal.segment_open": "test_wal_segment_open_transient_is_retried",
     "wal.append.write": "test_wal_append_enospc_poisons_write_path",
     "wal.append.fsync": "test_wal_fsync_failure_truncates_then_same_seq",
-    "wal.rotate": "test_wal_rotate_failure_keeps_record_durable",
+    "wal.rotate": "test_wal_rotate_failure_policy_dependent",
     "snapshot.meta_write": "test_checkpoint_fault_is_exception_safe",
     "snapshot.arrays_write": "test_checkpoint_fault_is_exception_safe",
     "snapshot.manifest_commit": "test_checkpoint_fault_is_exception_safe",
@@ -68,14 +70,15 @@ def _clean_registry():
     faults.set_observer(None)
 
 
-def _engine(tmp, *, wal=True, snap=True, shards=1, factor=2.0, **kw):
+def _engine(tmp, *, wal=True, snap=True, shards=1, factor=2.0,
+            fsync="always", **kw):
     scfg = sh.ShardedConfig(base=mc.MCConfig(num_rows=64, capacity=8),
                             num_shards=shards, bucket_factor=factor)
     cfg = ShardedServeConfig(
         sharded=scfg,
         snapshot_dir=os.path.join(tmp, "snap") if snap else None,
         wal_dir=os.path.join(tmp, "wal") if wal else None,
-        wal_fsync="always", retry=FAST, **kw)
+        wal_fsync=fsync, retry=FAST, **kw)
     return ShardedEngine(cfg)
 
 
@@ -255,6 +258,39 @@ def test_shard_health_strikes_defer_and_heal():
     assert h.stats() == {"shards_down": 0, "deferred_writes": 0}
 
 
+def test_shard_health_dump_load_requeue_round_trip():
+    """The health map is recovery state (A15): dump() -> JSON -> load()
+    must reproduce the down-set and the deferred queue in order, and
+    requeue() must put a failed heal's remainder back at the FRONT,
+    cap-exempt."""
+    import json
+
+    h = ShardHealth(4, deferred_cap=64)
+    h.mark_down(1)
+    h.mark_down(3)
+    a = np.arange(3, dtype=np.int32)
+    assert h.defer(1, a, a + 1, None)
+    assert h.defer(1, a + 10, a + 11, a * 0 + 2)
+    assert h.defer(3, a, a, a)
+    image = json.loads(json.dumps(h.dump()))   # must survive JSON
+
+    h2 = ShardHealth(4, deferred_cap=64)
+    h2.load(image)
+    assert h2.down == frozenset({1, 3})
+    assert h2.stats() == {"shards_down": 2, "deferred_writes": 9}
+    b1 = h2.heal(1)
+    assert len(b1) == 2
+    np.testing.assert_array_equal(b1[0][0], a)       # arrival order kept
+    assert b1[0][2] is None                          # None w round-trips
+    np.testing.assert_array_equal(b1[1][2], a * 0 + 2)
+
+    h2.requeue(1, b1[1:])                      # un-applied remainder back
+    assert h2.stats()["deferred_writes"] == 6
+    again = h2.heal(1)
+    assert len(again) == 1
+    np.testing.assert_array_equal(again[0][0], a + 10)
+
+
 # ---------------------------------------------------------------------------
 # WAL fsync-failure modes (satellite: replay stops at last durable record)
 # ---------------------------------------------------------------------------
@@ -320,17 +356,63 @@ def test_wal_append_enospc_abandons_segment_and_recovers(tmp_path):
     wal.close()
 
 
-def test_wal_rotate_failure_keeps_record_durable(tmp_path):
-    """Rotation failing after an acknowledged append is swallowed (raising
-    would make the engine retry an applied batch under a new seq) and
-    counted; the record stays durable."""
-    wal = WriteAheadLog(str(tmp_path), segment_records=1, fsync="rotate")
+def test_wal_rotate_failure_policy_dependent(tmp_path):
+    """Rotation failing after an acknowledged append: under 'always' every
+    record is already individually durable, so the failure is swallowed
+    and counted (raising would make the engine retry an applied batch
+    under a new seq); under 'rotate' the rotation fsync IS the segment's
+    durability point, so it escalates unretryably instead of silently
+    acknowledging a segment that may vanish on power loss."""
+    wal = WriteAheadLog(str(tmp_path / "a"), segment_records=1,
+                        fsync="always")
     faults.arm("wal.rotate", OSError(errno.EIO, "close failed"), count=1)
     assert wal.append([1], [1]) == 0           # no raise
     assert wal.io_errors == 1
     assert wal.append([2], [2]) == 1
     assert [r[0] for r in wal.replay()] == [0, 1]
     wal.close()
+    faults.reset()
+
+    wal = WriteAheadLog(str(tmp_path / "r"), segment_records=1,
+                        fsync="rotate")
+    faults.arm("wal.rotate", OSError(errno.EIO, "fsync failed"), count=1)
+    with pytest.raises(SegmentRotationError) as ei:
+        wal.append([1], [1])
+    # no retry: the ladder must escalate, never re-log under a new seq
+    assert classify_io_error(ei.value) == "persistent"
+    assert wal.io_errors == 1
+    # the in-cache record is still readable and the seq chain continues
+    assert wal.append([2], [2]) == 1
+    assert [r[0] for r in wal.replay()] == [0, 1]
+    wal.close()
+
+
+def test_wal_rotate_escalation_poisons_engine_under_rotate_policy(tmp_path):
+    """Engine end to end under policy 'rotate': a failed rotation poisons
+    the write path (the batch is NOT applied past an uncertain durability
+    point) and restore() re-aligns state with what actually survived."""
+    src0, dst0 = _batch(0)
+    eng = _engine(str(tmp_path), fsync="rotate")
+    eng.wal.segment_records = 1
+    faults.arm("wal.rotate", OSError(errno.EIO, "fsync failed"), count=1)
+    with pytest.raises(EngineWriteUnavailable):
+        eng.observe(src0, dst0)
+    faults.reset()
+    assert not eng.write_available
+    assert eng._seq == -1                      # never advanced
+    assert eng.stats["updates"] == 0           # nothing applied
+    for t in list(eng._io_threads):            # poison checkpoint-now
+        t.join()
+    eng.restore()                              # replays the durable record
+    assert eng.write_available and eng._seq == 0
+    healed = _query_state(eng)
+    eng.close()
+
+    oracle = _engine(str(tmp_path) + "_oracle")
+    oracle.observe(src0, dst0)
+    for a, b in zip(healed, _query_state(oracle)):
+        np.testing.assert_array_equal(a, b)
+    oracle.close()
 
 
 def test_wal_segment_open_transient_is_retried(tmp_path):
@@ -667,6 +749,156 @@ def test_mark_shard_down_degrades_reads_and_defers_writes(tmp_path):
     assert eng.stats["shards_down"] == 0
     d2, p2, n2 = eng.query(src)
     assert (np.asarray(n2) > 0).all()          # everything serves again
+    eng.close()
+
+
+def test_deferred_writes_survive_snapshot_gc_and_crash(tmp_path):
+    """A15 regression: a snapshot committing while a shard is down
+    persists the deferred queue in its meta; WAL GC may then unlink the
+    deferred batches' only log records, and a post-crash restore must
+    still reinstate and heal them — never lose them."""
+    src0, dst0 = _batch(0)
+    src1, dst1 = _batch(1)
+    eng = _engine(str(tmp_path))
+    eng.wal.segment_records = 1                # every record GC-able
+    eng.observe(src0, dst0)
+    eng.mark_shard_down(0)
+    eng.observe(src1, dst1)                    # defers; WAL seq 1
+    assert eng.stats["deferred_writes"] == src1.size
+    eng.checkpoint()                           # commit + GC through seq 1
+    assert not os.listdir(eng.cfg.wal_dir)     # the WAL copy is GONE
+    eng.close()
+
+    eng2 = _engine(str(tmp_path))              # "fresh process"
+    eng2.restore()
+    assert eng2.stats["shards_down"] == 1      # down-set reinstated
+    assert eng2.stats["deferred_writes"] == src1.size
+    assert eng2.heal_shard(0) == 1             # the deferred batch healed
+    healed = _query_state(eng2)
+    # seq authority survives a fully-GC'd WAL: new records must continue
+    # after the snapshot's wal_seq, not restart at 0 under it
+    eng2.observe(*_batch(2))
+    assert eng2.wal.last_seq == 2
+    eng2.close()
+
+    oracle = _engine(str(tmp_path) + "_oracle")
+    oracle.observe(src0, dst0)
+    oracle.observe(src1, dst1)
+    for a, b in zip(healed, _query_state(oracle)):
+        np.testing.assert_array_equal(a, b)
+    oracle.close()
+
+
+def test_restore_resets_health_map_before_replay(tmp_path):
+    """In-process restore(): the live health map is replaced by the
+    snapshot's image BEFORE replay, so a tail record owned by a live-down
+    shard is applied directly (the snapshot never saw its deferral) —
+    keeping it deferred on top of the snapshot image would double-apply
+    it on the eventual heal."""
+    src0, dst0 = _batch(0)
+    src1, dst1 = _batch(1)
+    eng = _engine(str(tmp_path))
+    eng.observe(src0, dst0)
+    eng.checkpoint()                           # healthy image, wal_seq 0
+    eng.mark_shard_down(0)
+    eng.observe(src1, dst1)                    # defers in memory; seq 1
+    assert eng.stats["deferred_writes"] == src1.size
+
+    result = eng.restore()                     # in-process, same engine
+    assert result["replayed"] == 1             # seq 1 applied directly
+    assert eng.stats["shards_down"] == 0       # snapshot image: healthy
+    assert eng.stats["deferred_writes"] == 0
+    assert eng.heal_shard(0) == 0              # nothing left to heal
+    healed = _query_state(eng)
+    eng.close()
+
+    oracle = _engine(str(tmp_path) + "_oracle")
+    oracle.observe(src0, dst0)
+    oracle.observe(src1, dst1)                 # applied exactly once
+    for a, b in zip(healed, _query_state(oracle)):
+        np.testing.assert_array_equal(a, b)
+    oracle.close()
+
+
+def test_heal_shard_fault_requeues_remainder(tmp_path):
+    """A dispatch fault mid-heal must not drop the already-popped
+    remainder: the shard re-marks down, the unapplied batches (failed one
+    included) requeue in order, and a clean retry heals them."""
+    src0, dst0 = _batch(0)
+    src1, dst1 = _batch(1)
+    eng = _engine(str(tmp_path), wal=False, snap=False)
+    eng.mark_shard_down(0)
+    eng.observe(src0, dst0)
+    eng.observe(src1, dst1)
+    assert eng.stats["deferred_writes"] == src0.size + src1.size
+
+    # first deferred batch applies; the second exhausts the ladder
+    faults.arm("engine.apply", RuntimeError("device lost"),
+               trigger=lambda hit: hit > 1)
+    with pytest.raises(RetryBudgetExceeded):
+        eng.heal_shard(0)
+    faults.reset()
+    assert eng.stats["shards_down"] == 1       # re-marked down
+    assert eng.stats["deferred_writes"] == src1.size   # remainder kept
+
+    assert eng.heal_shard(0) == 1              # clean retry applies it
+    assert eng.stats["shards_down"] == 0
+    assert eng.stats["deferred_writes"] == 0
+    healed = _query_state(eng)
+    eng.close()
+
+    oracle = _engine(str(tmp_path) + "_oracle", wal=False, snap=False)
+    oracle.observe(src0, dst0)
+    oracle.observe(src1, dst1)
+    for a, b in zip(healed, _query_state(oracle)):
+        np.testing.assert_array_equal(a, b)
+    oracle.close()
+
+
+def test_dispatch_strikes_mark_shard_down_automatically(tmp_path):
+    """The automatic path to down (no admin call): shard-attributable
+    dispatch escalations (ShardDispatchError in the fault chain) strike
+    the owner; after health_strikes consecutive escalations the shard is
+    down — reads mask it without dispatching into it, writes defer — and
+    heal_shard re-admits it."""
+    eng = _engine(str(tmp_path), wal=False, snap=False, health_strikes=2)
+    eng.observe(*_batch(0))
+    assert shard_from_exception(None) is None
+
+    faults.arm("engine.query_dispatch", ShardDispatchError(0, "rpc lost"))
+    eng.query(np.arange(8))                    # escalates: strike 1
+    assert eng.stats["shards_down"] == 0
+    eng.query(np.arange(8))                    # strike 2: auto-down
+    faults.reset()
+    assert eng.stats["shards_down"] == 1
+    assert eng.health.down == frozenset({0})
+
+    d, p, n = eng.query(np.arange(8))          # masked: no dispatch fault
+    assert (np.asarray(n) == 0).all()
+    eng.observe(*_batch(1))                    # writes defer, not fail
+    assert eng.stats["deferred_writes"] > 0
+    assert eng.heal_shard(0) == 1
+    assert (np.asarray(eng.query(np.arange(8))[2]) > 0).any()
+    eng.close()
+
+
+def test_dispatch_success_breaks_strike_streak(tmp_path):
+    """Strikes are CONSECUTIVE failures: a healthy whole-mesh dispatch
+    between two escalations resets the streak, so flapping faults never
+    accumulate to a spurious down."""
+    eng = _engine(str(tmp_path), wal=False, snap=False, health_strikes=2)
+    eng.observe(*_batch(0))
+    faults.arm("engine.query_dispatch", ShardDispatchError(0, "flap"),
+               count=FAST.max_attempts)        # exactly one escalation
+    eng.query(np.arange(8))                    # strike 1
+    faults.reset()
+    eng.query(np.arange(8))                    # healthy: streak broken
+    faults.arm("engine.query_dispatch", ShardDispatchError(0, "flap"),
+               count=FAST.max_attempts)
+    eng.query(np.arange(8))                    # strike 1 again, not 2
+    faults.reset()
+    assert eng.stats["shards_down"] == 0
+    assert not eng.health.down
     eng.close()
 
 
