@@ -23,6 +23,10 @@ has no numbered tables, so each benchmark validates one stated claim:
                          persistence failpoints), assert bit-exact recovery
                          vs the deterministic-replay oracle, record
                          recovery time per kill (tools/chaos/soak.py)
+  B10 obs                telemetry overhead (DESIGN.md §13): armed vs
+                         disarmed on the observe/query hot paths plus the
+                         disarmed gate cost in isolation — disarmed must
+                         be ~free, armed must stay within budget
 
 Prints ``name,us_per_call,derived`` CSV lines (harness contract) and writes
 ``BENCH_<bench>.json`` next to this file with the same rows in machine-
@@ -672,6 +676,84 @@ def bench_faults():
         print("B9_crash_soak: DIVERGED (see rows)", file=sys.stderr)
 
 
+def bench_obs():
+    """B10: telemetry overhead (DESIGN.md §13).
+
+    Armed-vs-disarmed A/B on the serving hot paths (``_time_paired`` so
+    drift hits both arms equally): the armed delta buys spans, histograms
+    and traffic vectors; the disarmed path must cost one bool gate.  The
+    disarmed gate is also timed in isolation (a tight span+hist loop) so
+    the "disarmed is ~free" claim is a measured number, not an inference
+    from two large nearly-equal latencies.
+    """
+    from repro.core import sharded as sh
+    from repro.obs import metrics as obs
+    from repro.serve.engine import ShardedEngine, ShardedServeConfig
+
+    rows = 512 if SMOKE else 2048
+    batch = 256 if SMOKE else 1024
+    scfg = sh.ShardedConfig(
+        base=mc.MCConfig(num_rows=rows, capacity=32, sort_passes=1),
+        num_shards=1, bucket_factor=2.0)
+    eng = ShardedEngine(ShardedServeConfig(sharded=scfg,
+                                           decay_threshold=1 << 30))
+    graph = MarkovGraphSampler(num_nodes=rows, out_degree=16, seed=11)
+    s, d = graph.sample_transitions(batch)
+    q = (np.arange(256, dtype=np.int32) % rows).astype(np.int32)
+    eng.observe(s, d)   # compile both paths before timing
+    eng.query(q)
+
+    def observe_with(armed):
+        def fn():
+            (obs.arm if armed else obs.disarm)()
+            eng.observe(s, d)
+        return fn
+
+    def query_with(armed):
+        def fn():
+            (obs.arm if armed else obs.disarm)()
+            return eng.query(q)
+        return fn
+
+    n = 10 if SMOKE else 40
+    try:
+        for path, maker in (("observe", observe_with), ("query", query_with)):
+            us_dis, us_arm = _time_paired([maker(False), maker(True)], n=n)
+            pct = (us_arm - us_dis) / us_dis * 100.0
+            REC.emit("obs", f"B10_{path}", us_arm,
+                     f"armed {us_arm:.0f} us vs disarmed {us_dis:.0f} us "
+                     f"({pct:+.1f}%)",
+                     us_armed=round(us_arm, 3), us_disarmed=round(us_dis, 3),
+                     overhead_pct=round(pct, 2), batch=batch)
+
+        # the disarmed gate in isolation: per-record cost of a span + a
+        # histogram sample while disarmed (both exit on the module bool)
+        obs.disarm()
+        reg = eng.metrics
+        loops = 2000
+
+        def gate():
+            for _ in range(loops):
+                reg.span("engine.observe")
+                reg.hist_record("engine.observe", 0.0)
+
+        us_loop = _time(gate, n=5)
+        ns_per_record = us_loop * 1e3 / (2 * loops)
+        # an observe() crosses the gate a handful of times (span, traffic
+        # check, gauge); express that against the disarmed hot-path cost
+        ops_per_observe = 4
+        us_dis_obs = _time_paired([observe_with(False)], n=n)[0]
+        gate_pct = (ops_per_observe * ns_per_record / 1e3) / us_dis_obs * 100
+        REC.emit("obs", "B10_disarmed_gate", us_loop,
+                 f"{ns_per_record:.0f} ns/record disarmed -> "
+                 f"{gate_pct:.4f}% of a disarmed observe()",
+                 ns_per_record=round(ns_per_record, 2),
+                 overhead_pct=round(gate_pct, 4))
+    finally:
+        obs.disarm()
+    REC.write("obs")
+
+
 # ---------------------------------------------------------------------------
 # schema validation (CI: BENCH_*.json must stay generatable + well-formed)
 # ---------------------------------------------------------------------------
@@ -705,6 +787,11 @@ BENCH_ROW_SCHEMAS = {
         "B9_crash_soak": ("kill_mode", "steps", "replayed", "bitexact"),
         "B9_recovery_summary": ("kills", "mean_recovery_us",
                                 "max_recovery_us", "bitexact"),
+    },
+    "obs": {
+        "B10_observe": ("us_armed", "us_disarmed", "overhead_pct"),
+        "B10_query": ("us_armed", "us_disarmed", "overhead_pct"),
+        "B10_disarmed_gate": ("ns_per_record", "overhead_pct"),
     },
 }
 
@@ -771,6 +858,7 @@ BENCHES = (
     ("sharded_routing", bench_sharded_routing),
     ("persist", bench_persist),
     ("faults", bench_faults),
+    ("obs", bench_obs),
 )
 
 

@@ -14,6 +14,11 @@ on the live write path and watch the retry ladder absorb a transient disk
 flake, a persistent ENOSPC poison writes while reads keep serving, and
 ``restore()`` heal the poisoned engine bit-exactly.
 
+Part 4 is telemetry (DESIGN.md §13): arm the lock-free metrics registry,
+scrape the Prometheus surface ``launch/serve.py --metrics-port`` serves
+(latency quantiles, per-bucket traffic), provoke a write-path poison, and
+read the flight recorder's incident dump.
+
     PYTHONPATH=src python examples/quickstart.py
 
 ``--chaos`` additionally runs the real crash soak: a serving subprocess
@@ -202,6 +207,80 @@ def part3_kill_under_load():
     shutil.rmtree(wal_dir)
 
 
+def part4_telemetry_and_flight_recorder():
+    """armed telemetry: scrape the /metrics surface, provoke a poison,
+    read the flight-recorder incident dump (DESIGN.md §13)."""
+    import errno
+    import json
+    import urllib.request
+
+    from repro import faults
+    from repro.obs import metrics as obs
+    from repro.obs.export import MetricsServer
+    from repro.runtime.fault_tolerance import (EngineWriteUnavailable,
+                                               RetryPolicy)
+
+    wal_dir = tempfile.mkdtemp(prefix="mcprioq-obs-wal-")
+    incident_dir = tempfile.mkdtemp(prefix="mcprioq-obs-inc-")
+    base = mc.MCConfig(num_rows=256, capacity=16, sort_passes=2)
+    graph = MarkovGraphSampler(num_nodes=200, out_degree=12, zipf_s=1.5,
+                               seed=11)
+
+    obs.arm()               # histograms/spans/vectors/incidents on
+    try:
+        eng = ShardedEngine(ShardedServeConfig(
+            sharded=sh.ShardedConfig(base=base, num_shards=1,
+                                     bucket_factor=4.0),
+            decay_threshold=1 << 30, wal_dir=wal_dir, wal_fsync="always",
+            incident_dir=incident_dir,
+            retry=RetryPolicy(max_attempts=3, base_delay_s=1e-3)))
+        for _ in range(4):
+            eng.observe(*graph.sample_transitions(512))
+        eng.query(np.arange(32, dtype=np.int32), threshold=0.9,
+                  max_items=16)
+
+        # ---- scrape the same surface `launch/serve.py --metrics-port`
+        # serves: latency quantiles + per-virtual-bucket traffic ----------
+        server = MetricsServer(eng.metrics, port=0).start()
+        try:
+            with urllib.request.urlopen(
+                    f"http://127.0.0.1:{server.port}/metrics") as resp:
+                text = resp.read().decode()
+        finally:
+            server.close()
+        shown = [ln for ln in text.splitlines()
+                 if ln.startswith(("mcq_engine_observe_seconds{",
+                                   "mcq_engine_query_seconds{",
+                                   "mcq_bucket_traffic{"))]
+        print("\nscraped /metrics (observe/query quantiles, bucket "
+              "traffic):")
+        for ln in shown[:8]:
+            print("  " + ln)
+
+        # ---- provoke a fault: persistent ENOSPC poisons the write path --
+        faults.arm("wal.append.write",
+                   faults.FaultInjected("wal.append.write", errno.ENOSPC))
+        try:
+            eng.observe(*graph.sample_transitions(512))
+        except EngineWriteUnavailable:
+            pass
+        faults.reset()
+
+        # ---- the flight recorder dumped the incident --------------------
+        dumps = sorted(os.listdir(incident_dir))
+        with open(os.path.join(incident_dir, dumps[0])) as fh:
+            incident = json.load(fh)
+        print(f"incident dump {dumps[0]}: reason={incident['reason']!r}, "
+              f"{len(incident['spans'])} flight-recorder spans, "
+              f"{len(incident['deltas'])} scalar deltas since baseline")
+        assert incident["schema"] == "mcq-incident-v1" and incident["spans"]
+    finally:
+        obs.disarm()
+        faults.reset()
+    shutil.rmtree(wal_dir)
+    shutil.rmtree(incident_dir)
+
+
 def chaos_soak_demo(kills=3):
     """the real thing: SIGKILL a serving subprocess, verify bit-exact
     recovery against the deterministic replay oracle (tools/chaos/soak.py)."""
@@ -220,5 +299,6 @@ if __name__ == "__main__":
     part1_the_data_structure()
     part2_durable_elastic_serving()
     part3_kill_under_load()
+    part4_telemetry_and_flight_recorder()
     if "--chaos" in sys.argv[1:]:
         chaos_soak_demo()

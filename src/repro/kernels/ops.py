@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.analysis.invariants import kernel_op
+from repro.obs import tracing as _obs_tracing
 from repro.kernels import cdf_gather as _cg
 from repro.kernels import cdf_query as _cdf
 from repro.kernels import oddeven as _oe
@@ -47,9 +48,29 @@ def _pad_rows(x: jax.Array, mult: int, fill) -> Tuple[jax.Array, int]:
     return x, n
 
 
+def _annotate(fn):
+    """Opt-in profiler annotation around a jitted dispatcher (DESIGN.md
+    §13).  This wrapper stays OUTSIDE the jit (the jitted body must remain
+    pure — no module-global reads inside the trace), so the module-bool
+    gate costs one branch per call when disarmed.  When
+    ``obs.tracing.KERNEL_ANNOTATE`` is on, the dispatch traces under
+    ``jax.named_scope("mcq.<op>")`` and the op name lands in the HLO
+    metadata every profiler timeline shows.  Enable BEFORE the first
+    dispatch: jit caches the traced program, so already-compiled
+    signatures keep whatever scopes they were traced with."""
+    @functools.wraps(fn)
+    def dispatch(*args, **kwargs):
+        if _obs_tracing.KERNEL_ANNOTATE:
+            with jax.named_scope(f"mcq.{fn.__name__}"):
+                return fn(*args, **kwargs)
+        return fn(*args, **kwargs)
+    return dispatch
+
+
 # ---------------------------------------------------------------------------
 
 
+@_annotate
 @functools.partial(jax.jit, static_argnames=("passes", "impl"))
 @kernel_op(ref="oddeven_ref", pallas="oddeven_pallas")
 def oddeven_sort(cnt: jax.Array, order: jax.Array, *, passes: int = 1,
@@ -72,6 +93,7 @@ def oddeven_sort(cnt: jax.Array, order: jax.Array, *, passes: int = 1,
     return new_order[:n]
 
 
+@_annotate
 @functools.partial(jax.jit, static_argnames=("impl",))
 @kernel_op(ref="slab_update_ref", pallas="slab_update_pallas")
 def slab_update(rows: jax.Array, dsts: jax.Array, w: jax.Array,
@@ -92,6 +114,7 @@ def slab_update(rows: jax.Array, dsts: jax.Array, w: jax.Array,
     return cnt2[:n], tot2[:n]
 
 
+@_annotate
 @functools.partial(jax.jit, static_argnames=("impl",))
 @kernel_op(ref="oddeven_ref", composes=("oddeven_sort",))
 def decay_sort(cnt: jax.Array, dst: jax.Array, order: jax.Array,
@@ -111,6 +134,7 @@ def decay_sort(cnt: jax.Array, dst: jax.Array, order: jax.Array,
     return new_cnt, new_dst, new_order, new_tot
 
 
+@_annotate
 @functools.partial(jax.jit, static_argnames=("max_probes", "impl"))
 @kernel_op(ref="dh_find_ref", pallas="probe_find_pallas")
 def dh_find(rows: jax.Array, dsts: jax.Array,
@@ -135,6 +159,7 @@ def dh_find(rows: jax.Array, dsts: jax.Array,
     return slots, found.astype(bool)
 
 
+@_annotate
 @functools.partial(jax.jit, static_argnames=("max_probes", "impl"))
 @kernel_op(ref="probe_find_ref", pallas="probe_find_pallas")
 def ht_find(keys_q: jax.Array, tab_keys: jax.Array, tab_vals: jax.Array,
@@ -156,6 +181,7 @@ def ht_find(keys_q: jax.Array, tab_keys: jax.Array, tab_vals: jax.Array,
     return slots, found.astype(bool)
 
 
+@_annotate
 @functools.partial(jax.jit,
                    static_argnames=("max_items", "chunks", "topk", "impl"))
 @kernel_op(ref="cdf_query_ref", pallas="cdf_query_pallas")
@@ -185,6 +211,7 @@ def cdf_query(c_ord: jax.Array, d_ord: jax.Array, tot: jax.Array,
     return dk[:b], pk[:b], nn[:b]
 
 
+@_annotate
 @functools.partial(jax.jit,
                    static_argnames=("max_items", "chunks", "topk", "impl"))
 @kernel_op(ref="cdf_query_fused_ref", pallas="cdf_query_fused_pallas")
@@ -211,6 +238,7 @@ def cdf_query_fused(rows: jax.Array, found: jax.Array,
         interpret=not _on_tpu())
 
 
+@_annotate
 @functools.partial(jax.jit, static_argnames=("n", "impl"))
 @kernel_op(ref="topn_merge_ref", pallas=None)
 def topn_merge(probs: jax.Array, dsts: jax.Array, srcs: jax.Array,
@@ -229,6 +257,7 @@ def topn_merge(probs: jax.Array, dsts: jax.Array, srcs: jax.Array,
     return _ref.topn_merge_ref(probs, dsts, srcs, n)
 
 
+@_annotate
 @functools.partial(jax.jit,
                    static_argnames=("k", "max_probes", "impl"))
 @kernel_op(ref="draft_walk_ref", pallas="draft_walk_pallas")

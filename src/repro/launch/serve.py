@@ -35,6 +35,8 @@ from repro.core import sharded as sh
 from repro.core import speculative as spec
 from repro.data.synthetic import MarkovGraphSampler
 from repro.models.model import Model
+from repro.obs import metrics as obs_metrics
+from repro.obs.export import MetricsDumper, MetricsServer
 from repro.serve.engine import (Engine, ServeConfig, ShardedEngine,
                                 ShardedServeConfig)
 
@@ -87,7 +89,10 @@ def run_sharded(num_shards: int, bucket_factor: float, requests: int,
                 snapshot_dir: str = "", snapshot_every: int = 0,
                 wal_dir: str = "", restore: bool = False,
                 route_retry_budget: int = 0, query_retry_budget: int = 0,
-                health_strikes: int = 3, failpoints: str = ""):
+                health_strikes: int = 3, failpoints: str = "",
+                metrics_port: int = -1, metrics_dump: str = "",
+                metrics_every: float = 5.0, incident_dir: str = "",
+                metrics_linger: float = 0.0):
     """Shard-parallel chain serving: route synthetic Zipf transition traffic
     through the ShardedEngine (observe + query per request) and report
     throughput plus the routing/overflow counters.  With a snapshot dir the
@@ -95,11 +100,17 @@ def run_sharded(num_shards: int, bucket_factor: float, requests: int,
     ``restore=True`` recovers from the newest complete snapshot first —
     elastically, if it was taken at a different shard count (DESIGN.md §10).
     ``failpoints`` arms injection sites (same spec as ``MCQ_FAILPOINTS``,
-    DESIGN.md §12) so the retry/degradation ladder can be driven live."""
+    DESIGN.md §12) so the retry/degradation ladder can be driven live.
+    ``metrics_port >= 0`` serves Prometheus text at ``/metrics`` (0 picks an
+    ephemeral port, printed at startup); ``metrics_dump`` writes JSONL images
+    on a ``metrics_every`` cadence (DESIGN.md §13)."""
     if failpoints:
         from repro.faults import arm_from_env
         n = arm_from_env(failpoints)
         print(f"armed {n} failpoint(s): {failpoints}")
+    telemetry = metrics_port >= 0 or bool(metrics_dump) or bool(incident_dir)
+    if telemetry:
+        obs_metrics.arm()
     base = mc.MCConfig(num_rows=4096, capacity=64, sort_passes=1,
                        decay_block_rows=decay_block_rows)
     scfg = sh.ShardedConfig(base=base, num_shards=num_shards,
@@ -110,7 +121,15 @@ def run_sharded(num_shards: int, bucket_factor: float, requests: int,
         wal_dir=wal_dir or None,
         route_retry_budget=route_retry_budget,
         query_retry_budget=query_retry_budget,
-        health_strikes=health_strikes))
+        health_strikes=health_strikes,
+        incident_dir=incident_dir or None))
+    server = dumper = None
+    if metrics_port >= 0:
+        server = MetricsServer(engine.metrics, port=metrics_port).start()
+        print(f"metrics: http://127.0.0.1:{server.port}/metrics", flush=True)
+    if metrics_dump:
+        dumper = MetricsDumper(engine.metrics, metrics_dump,
+                               every_s=metrics_every).start()
     if restore:
         info = engine.restore()
         print(f"restored step {info['step']} ({info['mode']}), "
@@ -131,7 +150,7 @@ def run_sharded(num_shards: int, bucket_factor: float, requests: int,
     dt = time.time() - t0
     edges = requests * route_batch
     srcs, dsts, probs = engine.topn()
-    st = engine.stats
+    st = engine.stats_snapshot()
     print(f"{requests} requests, {edges} edges over {num_shards} shards "
           f"in {dt:.1f}s ({edges / dt:.0f} edges/s)")
     print(f"routing: route_dropped={st['route_dropped']} "
@@ -158,6 +177,21 @@ def run_sharded(num_shards: int, bucket_factor: float, requests: int,
                               np.asarray(probs)[:5]))
     print(f"global top-{topn} head: {head} "
           f"(unexposed candidates {st['topn_dropped']})")
+    if telemetry:
+        snap = engine.metrics.snapshot()
+        obs = snap["histograms"].get("engine.observe", {})
+        qry = snap["histograms"].get("engine.query", {})
+        print(f"telemetry: observe p50={obs.get('p50', 0.0):.4f}s "
+              f"p99={obs.get('p99', 0.0):.4f}s "
+              f"query p50={qry.get('p50', 0.0):.4f}s "
+              f"p99={qry.get('p99', 0.0):.4f}s")
+    if metrics_linger > 0 and server is not None:
+        print(f"lingering {metrics_linger:.0f}s for scrapes...", flush=True)
+        time.sleep(metrics_linger)
+    if dumper is not None:
+        dumper.close()
+    if server is not None:
+        server.close()
     return engine
 
 
@@ -212,6 +246,22 @@ def main():
                     help="arm fault-injection sites, e.g. "
                          "'wal.append.fsync=raise:28@nth:5'; same spec as "
                          "the MCQ_FAILPOINTS env var (DESIGN.md §12)")
+    ap.add_argument("--metrics-port", type=int, default=-1,
+                    help="serve Prometheus text + JSONL metrics over HTTP "
+                         "on this port (0 = pick an ephemeral port, printed "
+                         "at startup; -1 = off); arms telemetry")
+    ap.add_argument("--metrics-dump", default="",
+                    help="write a JSONL metrics image to this path on a "
+                         "cadence (atomic replace); arms telemetry")
+    ap.add_argument("--metrics-every", type=float, default=5.0,
+                    help="seconds between --metrics-dump images")
+    ap.add_argument("--incident-dir", default="",
+                    help="flight-recorder incident dumps (last spans + "
+                         "metric deltas on poison/strike-out/degraded "
+                         "reads) land here as JSON; arms telemetry")
+    ap.add_argument("--metrics-linger", type=float, default=0.0,
+                    help="keep the metrics endpoint up this many seconds "
+                         "after the run finishes (for scraping)")
     args = ap.parse_args()
     if args.num_shards > 0:
         run_sharded(args.num_shards, args.bucket_factor, args.requests,
@@ -224,7 +274,12 @@ def main():
                     route_retry_budget=args.route_retry_budget,
                     query_retry_budget=args.query_retry_budget,
                     health_strikes=args.health_strikes,
-                    failpoints=args.failpoints)
+                    failpoints=args.failpoints,
+                    metrics_port=args.metrics_port,
+                    metrics_dump=args.metrics_dump,
+                    metrics_every=args.metrics_every,
+                    incident_dir=args.incident_dir,
+                    metrics_linger=args.metrics_linger)
         return
     run(args.arch, args.smoke, args.requests, args.prompt_len,
         args.new_tokens, args.draft_len,

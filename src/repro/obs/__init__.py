@@ -1,0 +1,24 @@
+"""Lock-free telemetry: metrics registry, spans/flight recorder, exposition.
+
+See DESIGN.md §13.  Quick tour::
+
+    from repro import obs
+
+    obs.arm()                       # histograms/spans/vectors/incidents on
+    reg = obs.Registry(vectors={"bucket_traffic": 256})
+    with reg.span("engine.observe"):
+        ...
+    print(obs.render_prometheus(reg.snapshot()))
+"""
+
+from repro.obs.metrics import (METRIC_CATALOG, GLOBAL, Registry, arm,
+                               arm_from_env, armed, disarm, is_armed)
+from repro.obs.export import (MetricsDumper, MetricsServer, render_jsonl,
+                              render_prometheus)
+from repro.obs import tracing
+
+__all__ = [
+    "METRIC_CATALOG", "GLOBAL", "Registry", "arm", "arm_from_env", "armed",
+    "disarm", "is_armed", "MetricsDumper", "MetricsServer", "render_jsonl",
+    "render_prometheus", "tracing",
+]

@@ -26,12 +26,14 @@ from __future__ import annotations
 import json
 import os
 import threading
+import time
 from typing import Any, Optional, Tuple
 
 import numpy as np
 
 from repro.checkpoint import ckpt
 from repro.faults import failpoint
+from repro.obs import metrics as obs_metrics
 
 PyTree = Any
 
@@ -51,22 +53,27 @@ def _write_meta(path: str, meta: dict) -> None:
 
 
 def save_snapshot(state: PyTree, directory: str, step: int,
-                  meta: dict) -> str:
+                  meta: dict,
+                  metrics: Optional[obs_metrics.Registry] = None) -> str:
     """Write ``step_<n>/{chain.json, arrays.npz, manifest.json}``.
 
     ``chain.json`` lands before ``ckpt.save`` commits the manifest, so a
     committed manifest implies the sidecar exists.  Returns the step path.
     """
-    path = step_dir(directory, step)
-    os.makedirs(path, exist_ok=True)
-    _write_meta(path, meta)
-    return ckpt.save(state, directory, step)
+    metrics = metrics if metrics is not None else obs_metrics.GLOBAL
+    with metrics.span("snapshot.save", step=step):
+        path = step_dir(directory, step)
+        os.makedirs(path, exist_ok=True)
+        _write_meta(path, meta)
+        return ckpt.save(state, directory, step)
 
 
 def save_snapshot_async(state: PyTree, directory: str, step: int,
                         meta: dict,
                         on_complete: Optional[Any] = None,
-                        on_error: Optional[Any] = None) -> threading.Thread:
+                        on_error: Optional[Any] = None,
+                        metrics: Optional[obs_metrics.Registry] = None
+                        ) -> threading.Thread:
     """Background-cadence variant: the device->host gather happens on the
     caller thread (under the Engine's writer lock, so the captured epoch is
     exact), file IO on a worker thread with the same commit ordering.
@@ -74,10 +81,21 @@ def save_snapshot_async(state: PyTree, directory: str, step: int,
     the engine hangs WAL truncation off it, so segments are only GC'd once
     the snapshot that supersedes them is durable.  ``on_error`` receives IO
     faults from the worker (see ``ckpt.save_async``)."""
+    metrics = metrics if metrics is not None else obs_metrics.GLOBAL
+    t0 = time.monotonic()
+
+    def _complete():
+        # capture-to-commit wall time: the number that matters for the
+        # cadence budget is when the manifest is durable, not when the
+        # worker was spawned
+        metrics.hist_record("snapshot.save", time.monotonic() - t0)
+        if on_complete is not None:
+            on_complete()
+
     path = step_dir(directory, step)
     os.makedirs(path, exist_ok=True)
     _write_meta(path, meta)
-    return ckpt.save_async(state, directory, step, on_complete=on_complete,
+    return ckpt.save_async(state, directory, step, on_complete=_complete,
                            on_error=on_error)
 
 
@@ -133,18 +151,22 @@ def load_meta(directory: str, step: int) -> dict:
 
 def restore_snapshot(tree_like: PyTree, directory: str,
                      step: Optional[int] = None,
-                     shardings: Optional[PyTree] = None
+                     shardings: Optional[PyTree] = None,
+                     metrics: Optional[obs_metrics.Registry] = None
                      ) -> Tuple[PyTree, dict, int]:
     """Restore the newest *complete* snapshot (or ``step``) into the
     structure of ``tree_like``.  Returns ``(state, meta, step)``."""
-    if step is None:
-        step = latest_complete_step(directory)
+    metrics = metrics if metrics is not None else obs_metrics.GLOBAL
+    with metrics.span("snapshot.restore", step=step):
         if step is None:
+            step = latest_complete_step(directory)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no complete snapshot under {directory}")
+        elif not _step_is_complete(step_dir(directory, step)):
             raise FileNotFoundError(
-                f"no complete snapshot under {directory}")
-    elif not _step_is_complete(step_dir(directory, step)):
-        raise FileNotFoundError(
-            f"snapshot step {step} under {directory} is incomplete")
-    meta = load_meta(directory, step)
-    state, _ = ckpt.restore(tree_like, directory, step, shardings=shardings)
-    return state, meta, step
+                f"snapshot step {step} under {directory} is incomplete")
+        meta = load_meta(directory, step)
+        state, _ = ckpt.restore(tree_like, directory, step,
+                                shardings=shardings)
+        return state, meta, step

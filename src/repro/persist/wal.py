@@ -46,12 +46,14 @@ from __future__ import annotations
 import os
 import struct
 import threading
+import time
 import zlib
 from typing import Iterator, Optional, Tuple
 
 import numpy as np
 
 from repro.faults import failpoint
+from repro.obs import metrics as obs_metrics
 from repro.runtime.fault_tolerance import UnretryableIOError
 
 _MAGIC = b"MCWL"
@@ -98,9 +100,14 @@ class WriteAheadLog:
     """Segmented, CRC-framed, fsync-policied append log of int32 batches."""
 
     def __init__(self, directory: str, *, segment_records: int = 256,
-                 fsync: str = "rotate"):
+                 fsync: str = "rotate",
+                 metrics: Optional[obs_metrics.Registry] = None):
         if fsync not in FSYNC_POLICIES:
             raise ValueError(f"fsync must be one of {FSYNC_POLICIES}")
+        # telemetry (DESIGN.md §13): append/fsync/rotate latency
+        # histograms; armed-only, standalone WALs record to the global
+        # registry
+        self.metrics = metrics if metrics is not None else obs_metrics.GLOBAL
         if segment_records < 1:
             raise ValueError("segment_records must be >= 1")
         self.directory = directory
@@ -145,6 +152,7 @@ class WriteAheadLog:
             raise ValueError(
                 f"ragged batch: {src.size}/{dst.size}/{w.size} items")
         with self._mu:
+            t_append = time.monotonic()
             seq = self._next_seq
             payload = src.tobytes() + dst.tobytes() + w.tobytes()
             record = _HEADER.pack(_MAGIC, zlib.crc32(payload), seq,
@@ -159,7 +167,10 @@ class WriteAheadLog:
                 self._fh.flush()
                 if self.fsync == "always":
                     failpoint("wal.append.fsync", fh=self._fh, seq=seq)
+                    t_fsync = time.monotonic()
                     os.fsync(self._fh.fileno())
+                    self.metrics.hist_record(
+                        "wal.fsync", time.monotonic() - t_fsync)
             except Exception:
                 # the record was NOT acknowledged: scrub whatever partial
                 # bytes landed so a retry (same seq) or a later append
@@ -196,6 +207,8 @@ class WriteAheadLog:
                         raise SegmentRotationError(
                             0, f"segment rotation failed under policy "
                                f"'rotate': {exc!r}") from exc
+            self.metrics.hist_record(
+                "wal.append", time.monotonic() - t_append)
         return seq
 
     def _open_segment_locked(self, seq: int) -> None:
@@ -228,12 +241,14 @@ class WriteAheadLog:
     def _rotate_locked(self) -> None:
         if self._fh is None:
             return
+        t_rotate = time.monotonic()
         failpoint("wal.rotate", fh=self._fh)
         if self.fsync in ("always", "rotate"):
             os.fsync(self._fh.fileno())
         self._fh.close()
         self._fh = None
         self._fh_records = 0
+        self.metrics.hist_record("wal.rotate", time.monotonic() - t_rotate)
 
     def close(self) -> None:
         with self._mu:

@@ -212,7 +212,8 @@ def call_with_retry(fn: Callable[[], object], *,
                     retry_on: Tuple[type, ...] = (Exception,),
                     on_retry: Optional[Callable[[int, BaseException],
                                                 None]] = None,
-                    sleep: Callable[[float], None] = time.sleep):
+                    sleep: Callable[[float], None] = time.sleep,
+                    metrics=None):
     """Run ``fn`` under the retry ladder.
 
     Transient faults back off and retry up to ``policy.max_attempts``
@@ -220,7 +221,10 @@ def call_with_retry(fn: Callable[[], object], *,
     the caller's job); an exhausted budget raises
     :class:`RetryBudgetExceeded` from the last fault.  ``on_retry`` is
     called with ``(attempt_index, exc)`` before each backoff sleep —
-    the engine counts these into ``stats``.
+    the engine counts these into ``stats``.  ``metrics`` (an
+    ``obs.Registry``) records each backoff delay into the
+    ``retry.backoff`` histogram (DESIGN.md §13), so the ladder's actual
+    sleep distribution is observable, not just its retry counts.
     """
     policy = policy or RetryPolicy()
     last: Optional[BaseException] = None
@@ -238,6 +242,8 @@ def call_with_retry(fn: Callable[[], object], *,
                 break
             if on_retry is not None:
                 on_retry(attempt + 1, exc)
+            if metrics is not None:
+                metrics.hist_record("retry.backoff", delay)
             sleep(delay)
     raise RetryBudgetExceeded(
         f"{policy.max_attempts} attempts exhausted: {last!r}") from last

@@ -40,6 +40,7 @@ from repro.core import speculative as spec
 from repro.core.epoch import EpochStore
 from repro.faults import arm_from_env, failpoint
 from repro.models.model import Model
+from repro.obs import metrics as obs_metrics
 from repro.persist import reshard as rs
 from repro.persist import snapshot as snapshot_io
 from repro.persist.wal import WriteAheadLog
@@ -68,11 +69,11 @@ class Engine:
     """Host-side orchestration; all device work is jitted, static-shaped."""
 
     # normative lock order + protection map (DESIGN.md §11, checked by
-    # tools/mcqlint): the learner lock is outermost, the stats lock a leaf
-    _MCQ_LOCK_ORDER = ("_learn_lock", "_stats_lock")
+    # tools/mcqlint): the learner lock serialises publish AND the
+    # maintenance-gauge view derived from the published state
+    _MCQ_LOCK_ORDER = ("_learn_lock",)
     _MCQ_LOCK_PROTECTS = {
-        "_learn_lock": ("drafter_store.publish",),
-        "_stats_lock": ("stats",),
+        "_learn_lock": ("drafter_store.publish", "_maint"),
     }
 
     def __init__(self, model: Model, params: PyTree, cfg: ServeConfig):
@@ -96,15 +97,19 @@ class Engine:
         # second silently discards the first's counts.  Readers (drafting)
         # stay lock-free; only the single-writer invariant is enforced.
         self._learn_lock = threading.Lock()
-        # concurrent generate() calls share the stats dict; an unguarded
-        # read-modify-write of its counters is the same silent-undercount
-        # race the PR-4 review caught on ShardedEngine.stats
-        self._stats_lock = threading.Lock()
+        # telemetry (DESIGN.md §13): counters go straight into the
+        # lock-free obs registry — concurrent generate() calls each
+        # increment their own thread shard, so the undercount race the
+        # old shared dict needed a lock for cannot happen at all.
         # model_calls counts decode+extend forwards (the latency metric);
-        # plain greedy needs exactly max_new_tokens-1 of them
-        self.stats = {"model_calls": 0, "accepted": 0, "drafted": 0,
-                      "rounds": 0, "draft_calls": 0, "decay_steps": 0,
-                      "dh_rebuilds": 0, "dh_tombstones": 0}
+        # plain greedy needs exactly max_new_tokens-1 of them.
+        self.metrics = obs_metrics.Registry()
+        # maintenance gauges are absolute values read off the freshly
+        # published chain (not increments); surfaced through a provider so
+        # scrapes and the stats view share one source of truth
+        self._maint = {"decay_steps": 0, "dh_rebuilds": 0,
+                       "dh_tombstones": 0}
+        self.metrics.register_provider(lambda: dict(self._maint))
 
     # ------------------------------------------------------------------
     def generate(self, batch: Dict[str, jax.Array], rng: jax.Array
@@ -143,8 +148,7 @@ class Engine:
             else:
                 logits, caches = self._decode(self.params, caches,
                                               cur[:, None], pos)
-                with self._stats_lock:
-                    self.stats["model_calls"] += 1
+                self.metrics.counter_add("model_calls")
                 cur = self._sample(logits, sub)
                 pos = pos + 1
 
@@ -159,7 +163,7 @@ class Engine:
         maintenance (rolling decay + dst-hash repair behind the snapshot),
         publish, and surface the maintenance counters in ``stats``."""
         toks = jnp.asarray(history)
-        with self._learn_lock:
+        with self._learn_lock, self.metrics.span("engine.learn"):
             failpoint("engine.learn", tokens=int(toks.shape[-1]))
             snap = self.drafter_store.acquire()
             try:
@@ -169,12 +173,10 @@ class Engine:
                 self.drafter_store.release(snap)
             self.drafter_store.publish(new_state)
             # inside the learn lock: a stale snapshot's counters must not
-            # overwrite a newer learner's in stats
-            with self._stats_lock:
-                self.stats.update(
-                    {k: v for k, v
-                     in mc.maintenance_stats(new_state.chain).items()
-                     if k in self.stats})
+            # overwrite a newer learner's view
+            self._maint = {k: int(v) for k, v
+                           in mc.maintenance_stats(new_state.chain).items()
+                           if k in self._maint}
 
     # ------------------------------------------------------------------
     def _speculative_round(self, caches, cur, pos, history, k, rng
@@ -192,8 +194,7 @@ class Engine:
         try:
             ctx = jnp.asarray(history[:, -max(self.cfg.ngram.order, 2):])
             draft, ok = self._draft(snap.state, ctx)
-            with self._stats_lock:
-                self.stats["draft_calls"] += 1  # one fused dispatch per round
+            self.metrics.counter_add("draft_calls")  # one fused dispatch
         finally:
             self.drafter_store.release(snap)
         draft = (np.asarray(draft)[:, : k - 1] if k > 1
@@ -206,27 +207,23 @@ class Engine:
         if n_drafted == 0:  # nothing usable: plain decode step
             logits, self._caches = self._decode(self.params, caches,
                                                 cur[:, None], pos)
-            with self._stats_lock:
-                self.stats["model_calls"] += 1
+            self.metrics.counter_add("model_calls")
             nxt = self._sample(logits, rng)
             return nxt, pos + 1, []
 
-        with self._stats_lock:
-            self.stats["rounds"] += 1
-            self.stats["drafted"] += int(draft.size)
+        self.metrics.counter_add("rounds")
+        self.metrics.counter_add("drafted", int(draft.size))
         feed = jnp.concatenate(
             [cur[:, None], jnp.asarray(draft)], axis=1)       # [B, 1+n]
         logits, ext_caches = self._extend(self.params, caches, feed, pos)
-        with self._stats_lock:
-            self.stats["model_calls"] += 1
+        self.metrics.counter_add("model_calls")
         model_toks = np.asarray(self._sample_all(logits, rng))  # [B, 1+n]
 
         # longest batch-wide prefix where model agrees with the draft
         agree = ((model_toks[:, :-1] == draft).all(axis=0) if draft.size
                  else np.zeros((0,), bool))
         n_acc = int(np.cumprod(agree).sum()) if agree.size else 0
-        with self._stats_lock:
-            self.stats["accepted"] += n_acc * draft.shape[0]
+        self.metrics.counter_add("accepted", n_acc * draft.shape[0])
 
         emitted = [model_toks[:, j] for j in range(n_acc)]
         if n_acc == draft.shape[1]:
@@ -240,8 +237,7 @@ class Engine:
         accepted_feed = feed[:, : n_acc + 1]
         _, self._caches = self._extend(self.params, caches, accepted_feed,
                                        pos)
-        with self._stats_lock:
-            self.stats["model_calls"] += 1
+        self.metrics.counter_add("model_calls")
         nxt = jnp.asarray(model_toks[:, n_acc])
         return nxt, pos + n_acc + 1, emitted
 
@@ -256,8 +252,20 @@ class Engine:
         return sampling.greedy(logits)
 
     @property
+    def stats(self) -> Dict[str, int]:
+        """Backward-compat dict view over the obs registry (the registry
+        is the one source of truth; this is a point-in-time copy, so
+        mutate metrics through ``self.metrics``, not this dict)."""
+        scalars = self.metrics.scalars()
+        keys = ("model_calls", "accepted", "drafted", "rounds",
+                "draft_calls", "decay_steps", "dh_rebuilds",
+                "dh_tombstones")
+        return {k: int(scalars.get(k, 0)) for k in keys}
+
+    @property
     def acceptance_rate(self) -> float:
-        return self.stats["accepted"] / max(1, self.stats["drafted"])
+        st = self.stats
+        return st["accepted"] / max(1, st["drafted"])
 
 
 # ---------------------------------------------------------------------------
@@ -295,6 +303,25 @@ class ShardedServeConfig:
     query_retry_budget: int = 0      # in-call re-dispatch rounds per query
     health_strikes: int = 3          # consecutive failures -> shard down
     deferred_cap: int = 4096         # max deferred write items (total)
+    # telemetry (DESIGN.md §13): where armed flight-recorder incidents
+    # dump; MCQ_METRICS_INCIDENT_DIR overrides when set in the process env
+    incident_dir: Optional[str] = None
+
+
+def _hash_u32_np(x: np.ndarray) -> np.ndarray:
+    """Vectorised numpy mirror of ``core.hashtable.hash_u32`` (splitmix32)
+    so the telemetry traffic tally can bucket a batch host-side without a
+    device dispatch."""
+    x = x.astype(np.uint32)
+    x = (x ^ (x >> np.uint32(16))) * np.uint32(0x7FEB352D)
+    x = (x ^ (x >> np.uint32(15))) * np.uint32(0x846CA68B)
+    return x ^ (x >> np.uint32(16))
+
+
+def _bucket_of_np(src: np.ndarray, num_buckets: int) -> np.ndarray:
+    """Host-side twin of ``Ownership.bucket_of``."""
+    h = _hash_u32_np(np.asarray(src))
+    return ((h >> np.uint32(8)) % np.uint32(num_buckets)).astype(np.int64)
 
 
 class ShardedEngine:
@@ -388,12 +415,26 @@ class ShardedEngine:
             self.stats.update(mc.counter_stats(snap.state))
         finally:
             self.store.release(snap)
+        # telemetry (DESIGN.md §13): a per-engine lock-free registry; the
+        # stats dict stays the collector (the explorer instruments it) and
+        # feeds the registry through a provider, so scrapes, serve.py and
+        # tests read one consistent source of truth.  MCQ_METRICS in the
+        # env arms histograms/spans/incidents for subprocess harnesses
+        # (tools/chaos), same contract as the failpoint arming below.
+        own0 = scfg.resolved_ownership()
+        env_incident_dir = obs_metrics.arm_from_env()
+        self.metrics = obs_metrics.Registry(
+            vectors={"bucket_traffic": own0.num_buckets,
+                     "shard_traffic": scfg.num_shards},
+            incident_dir=env_incident_dir or cfg.incident_dir)
+        self.metrics.register_provider(self.stats_snapshot)
         # durability (DESIGN.md §10): WAL position of the published state;
         # -1 = nothing applied.  The WAL resumes its sequence from disk, so
         # an engine pointed at an existing log must restore() before
         # observing or the snapshot/WAL positions drift apart.
         self._seq = -1
-        self.wal = (WriteAheadLog(cfg.wal_dir, fsync=cfg.wal_fsync)
+        self.wal = (WriteAheadLog(cfg.wal_dir, fsync=cfg.wal_fsync,
+                                  metrics=self.metrics)
                     if cfg.wal_dir else None)
         # outstanding background snapshot IO threads (non-daemon: a
         # "committed" snapshot must never be torn by process exit); joined
@@ -480,26 +521,27 @@ class ShardedEngine:
         w = (np.ones(src.shape, np.int32) if weights is None
              else np.asarray(weights, np.int32))
         t0 = time.monotonic()
-        with self._write_lock:
-            if self._poisoned is not None:
-                raise EngineWriteUnavailable(self._poisoned)
-            if self.wal is not None:
-                seq = self._append_wal_locked(src, dst, w)
-                if self.wal.io_errors:
-                    with self._stats_lock:
-                        self.stats["wal_errors"] = self.wal.io_errors
-            else:
-                seq = self._seq + 1
-            self._apply_with_retry_locked(src, dst, w)
-            self._seq = seq
-            every = self.cfg.snapshot_every
-            if (every and self.cfg.snapshot_dir
-                    and (self._seq + 1) % every == 0):
-                try:
-                    self._snapshot_locked(sync=False)
-                except Exception:
-                    with self._stats_lock:
-                        self.stats["snapshot_failures"] += 1
+        with self.metrics.span("engine.observe", items=int(src.size)):
+            with self._write_lock:
+                if self._poisoned is not None:
+                    raise EngineWriteUnavailable(self._poisoned)
+                if self.wal is not None:
+                    seq = self._append_wal_locked(src, dst, w)
+                    if self.wal.io_errors:
+                        with self._stats_lock:
+                            self.stats["wal_errors"] = self.wal.io_errors
+                else:
+                    seq = self._seq + 1
+                self._apply_with_retry_locked(src, dst, w)
+                self._seq = seq
+                every = self.cfg.snapshot_every
+                if (every and self.cfg.snapshot_dir
+                        and (self._seq + 1) % every == 0):
+                    try:
+                        self._snapshot_locked(sync=False)
+                    except Exception:
+                        with self._stats_lock:
+                            self.stats["snapshot_failures"] += 1
         if self.watchdog is not None:
             self.watchdog.observe(time.monotonic() - t0)
 
@@ -509,6 +551,45 @@ class ShardedEngine:
             with self._stats_lock:
                 self.stats[key] += 1
         return bump
+
+    def stats_snapshot(self) -> Dict[str, int]:
+        """One consistent image of every stats surface (satellite of
+        DESIGN.md §13): the host counters AND the device ``counter_stats``
+        sums are copied under a single ``_stats_lock`` hold (they commit
+        together in ``_apply_locked``, so the copy can never capture a
+        half-applied batch — no ``route_retried > route_dropped``-style
+        impossible states), then the health map's and WAL's own counters
+        overlay.  This is the registry provider — the metrics endpoint,
+        ``serve.py``'s stats line and tests all read this one method."""
+        # health/WAL counters are read OUTSIDE _stats_lock: _apply_locked
+        # nests health._mu inside _stats_lock, so nesting them here in the
+        # opposite order would be a lock cycle
+        health = self.health.stats()
+        wal_errors = self.wal.io_errors if self.wal is not None else None
+        with self._stats_lock:
+            out = dict(self.stats)
+        out.update(health)
+        if wal_errors is not None:
+            out["wal_errors"] = wal_errors
+        return out
+
+    def _record_traffic(self, src: np.ndarray) -> None:
+        """Armed-only per-bucket/per-shard tally of a dispatched batch.
+        Mirrors the routing hash host-side; inactive (-1) padding never
+        counts."""
+        active = np.asarray(src)
+        active = active[active >= 0]
+        if active.size == 0:
+            return
+        own = self.cfg.sharded.resolved_ownership()
+        buckets = _bucket_of_np(active, own.num_buckets)
+        counts = np.bincount(buckets, minlength=own.num_buckets)
+        self.metrics.vector_add("bucket_traffic", counts)
+        assign = np.asarray(own.resolved_assignment(), np.int64)
+        self.metrics.vector_add(
+            "shard_traffic",
+            np.bincount(assign[buckets],
+                        minlength=self.cfg.sharded.num_shards))
 
     def _record_dispatch_failure(self, exc: BaseException) -> None:
         """Strike the owning shard when an escalated dispatch fault names
@@ -525,6 +606,10 @@ class ShardedEngine:
             with self._stats_lock:
                 self.stats["shards_down"] = \
                     self.health.stats()["shards_down"]
+            # flight-recorder incident (armed-only): a shard just struck
+            # out — snapshot the spans + metric deltas that led here
+            self.metrics.incident("strike_out", shard=shard,
+                                  error=repr(exc))
 
     @requires_lock("_write_lock")
     def _append_wal_locked(self, src, dst, w) -> int:
@@ -538,7 +623,8 @@ class ShardedEngine:
             return call_with_retry(
                 lambda: self.wal.append(src, dst, w),
                 policy=self.cfg.retry,
-                on_retry=self._count_retry("wal_retries"))
+                on_retry=self._count_retry("wal_retries"),
+                metrics=self.metrics)
         except Exception as exc:
             self._poison_locked(f"WAL append failed: {exc!r}")
             raise EngineWriteUnavailable(
@@ -558,7 +644,8 @@ class ShardedEngine:
             call_with_retry(
                 lambda: self._apply_locked(src, dst, w),
                 policy=self.cfg.retry,
-                on_retry=self._count_retry("apply_retries"))
+                on_retry=self._count_retry("apply_retries"),
+                metrics=self.metrics)
             self.health.record_success_all()
         except Exception as exc:
             self._record_dispatch_failure(exc)
@@ -579,6 +666,10 @@ class ShardedEngine:
         self._poisoned = reason
         with self._stats_lock:
             self.stats["write_errors"] += 1
+        # flight-recorder incident (armed-only): the write path just died;
+        # dump the spans + metric deltas leading up to the poison BEFORE
+        # the best-effort checkpoint below touches the broken disk
+        self.metrics.incident("poison", why=reason)
         if self.cfg.snapshot_dir:
             try:
                 self._snapshot_locked(sync=False)
@@ -674,15 +765,21 @@ class ShardedEngine:
                 dst = np.where(drop, 0, dst).astype(np.int32)
                 w = np.where(drop, 0, w).astype(np.int32)
         failpoint("engine.apply", items=int(src.size))
-        snap = self.store.acquire()
-        try:
-            state = self._update(snap.state, jnp.asarray(src),
-                                 jnp.asarray(dst), jnp.asarray(w))
-            state = self._maintain(state)
-        finally:
-            self.store.release(snap)
-        failpoint("engine.publish")
-        self.store.publish(state)
+        with self.metrics.span("engine.apply"):
+            snap = self.store.acquire()
+            try:
+                state = self._update(snap.state, jnp.asarray(src),
+                                     jnp.asarray(dst), jnp.asarray(w))
+                state = self._maintain(state)
+            finally:
+                self.store.release(snap)
+            failpoint("engine.publish")
+            self.store.publish(state)
+        self.metrics.gauge_set("store_version", self.store.version)
+        if obs_metrics.is_armed():
+            # per-virtual-bucket / per-shard traffic tally of the batch
+            # that actually dispatched (the ROADMAP rebalancer's input)
+            self._record_traffic(src)
         # the dispatch succeeded: commit the host-side plans
         if budget > 0:
             self._retry_queue = remaining + (
@@ -725,61 +822,72 @@ class ShardedEngine:
         """
         t = float(self.cfg.threshold if threshold is None else threshold)
         k = int(self.cfg.max_items if max_items is None else max_items)
-        with self._route_lock:   # pair the program with its snapshot
-            fn = self._cached_fn(
-                self._query_fns, (t, k),
-                lambda: sh.make_query_fn(self.cfg.sharded, self.mesh,
-                                         threshold=t, max_items=k))
-            snap = self.store.acquire()
-        src = jnp.asarray(src, jnp.int32)
-        src, b = self._pad(src)
-        degraded = retried = lost = 0
-        down = self.health.down
-        if down:
-            src_np = np.asarray(src)
-            owner = np.asarray(self.cfg.sharded.resolved_ownership()
-                               .owner_of(jnp.asarray(src_np)))
-            hit = np.isin(owner, list(down)) & (src_np >= 0)
-            if hit.any():
-                degraded = int(hit[:b].sum())
-                src = jnp.asarray(np.where(hit, -1, src_np).astype(np.int32))
-        try:
+        span = self.metrics.span("engine.query")
+        with span:
+            with self._route_lock:   # pair the program with its snapshot
+                fn = self._cached_fn(
+                    self._query_fns, (t, k),
+                    lambda: sh.make_query_fn(self.cfg.sharded, self.mesh,
+                                             threshold=t, max_items=k))
+                snap = self.store.acquire()
+            # freshness gauge: how many epochs this read's snapshot lags
+            # the latest publish — the quantitative handle on the paper's
+            # "approximately correct during concurrent updates" semantics
+            self.metrics.gauge_set("read_epoch_lag",
+                                   self.store.version - snap.version)
+            src = jnp.asarray(src, jnp.int32)
+            src, b = self._pad(src)
+            degraded = retried = lost = 0
+            down = self.health.down
+            if down:
+                src_np = np.asarray(src)
+                owner = np.asarray(self.cfg.sharded.resolved_ownership()
+                                   .owner_of(jnp.asarray(src_np)))
+                hit = np.isin(owner, list(down)) & (src_np >= 0)
+                if hit.any():
+                    degraded = int(hit[:b].sum())
+                    src = jnp.asarray(
+                        np.where(hit, -1, src_np).astype(np.int32))
             try:
-                d, p, n, dropped = call_with_retry(
-                    lambda: self._dispatch_query(fn, snap, src),
-                    policy=self.cfg.retry,
-                    on_retry=self._count_retry("dispatch_retries"))
-                n_dropped = int(jnp.sum(dropped))
-                self.health.record_success_all()
-            except Exception as exc:
-                # the read path never raises for dispatch faults: the
-                # whole call degrades to empty answers from zero shards
-                # (counted) — still sorted-descending, trivially.  A
-                # shard-attributable fault strikes its shard: after
-                # health_strikes consecutive escalations it goes down
-                # and later reads degrade without paying the dispatch.
-                self._record_dispatch_failure(exc)
-                bpad = int(np.asarray(src).shape[0])
-                d = jnp.full((bpad, k), -1, jnp.int32)
-                p = jnp.zeros((bpad, k), jnp.float32)
-                n = jnp.zeros((bpad,), jnp.int32)
-                n_dropped = 0
-                degraded = b
-            if self.cfg.query_retry_budget > 0 and n_dropped:
-                d, p, n, retried, lost = self._query_overflow_retry(
-                    fn, snap, src, b, d, p, n)
-        finally:
-            self.store.release(snap)
-        with self._stats_lock:
-            self.stats["queries"] += 1
-            self.stats["query_dropped"] += n_dropped
-            if degraded:
-                self.stats["degraded_answers"] += degraded
-            if retried:
-                self.stats["query_retried"] += retried
-            if lost:
-                self.stats["query_lost"] += lost
-        return d[:b], p[:b], n[:b]
+                try:
+                    d, p, n, dropped = call_with_retry(
+                        lambda: self._dispatch_query(fn, snap, src),
+                        policy=self.cfg.retry,
+                        on_retry=self._count_retry("dispatch_retries"),
+                        metrics=self.metrics)
+                    n_dropped = int(jnp.sum(dropped))
+                    self.health.record_success_all()
+                except Exception as exc:
+                    # the read path never raises for dispatch faults: the
+                    # whole call degrades to empty answers from zero shards
+                    # (counted) — still sorted-descending, trivially.  A
+                    # shard-attributable fault strikes its shard: after
+                    # health_strikes consecutive escalations it goes down
+                    # and later reads degrade without paying the dispatch.
+                    self._record_dispatch_failure(exc)
+                    bpad = int(np.asarray(src).shape[0])
+                    d = jnp.full((bpad, k), -1, jnp.int32)
+                    p = jnp.zeros((bpad, k), jnp.float32)
+                    n = jnp.zeros((bpad,), jnp.int32)
+                    n_dropped = 0
+                    degraded = b
+                    self.metrics.incident("degraded_read", op="query",
+                                          error=repr(exc))
+                if self.cfg.query_retry_budget > 0 and n_dropped:
+                    d, p, n, retried, lost = self._query_overflow_retry(
+                        fn, snap, src, b, d, p, n)
+            finally:
+                self.store.release(snap)
+            with self._stats_lock:
+                self.stats["queries"] += 1
+                self.stats["query_dropped"] += n_dropped
+                if degraded:
+                    self.stats["degraded_answers"] += degraded
+                if retried:
+                    self.stats["query_retried"] += retried
+                if lost:
+                    self.stats["query_lost"] += lost
+            return d[:b], p[:b], n[:b]
 
     def _dispatch_query(self, fn, snap, src):
         """Single routed query dispatch; the failpoint sits inside so a
@@ -815,7 +923,8 @@ class ShardedEngine:
                     lambda: self._dispatch_query(fn, snap,
                                                  jnp.asarray(retry_src)),
                     policy=self.cfg.retry,
-                    on_retry=self._count_retry("dispatch_retries"))
+                    on_retry=self._count_retry("dispatch_retries"),
+                    metrics=self.metrics)
             except Exception as exc:
                 self._record_dispatch_failure(exc)
                 break   # keep what we have; the rest counts as lost
@@ -842,18 +951,25 @@ class ShardedEngine:
         DESIGN.md §12); a dispatch fault retries and, exhausted, the call
         degrades to an empty merge rather than raising."""
         n = int(self.cfg.topn if n is None else n)
+        with self.metrics.span("engine.topn"):
+            return self._topn_inner(n)
+
+    def _topn_inner(self, n: int):
         with self._route_lock:   # pair the program with its snapshot
             fn = self._cached_fn(
                 self._topn_fns, n,
                 lambda: sh.make_topn_fn(self.cfg.sharded, self.mesh, n))
             snap = self.store.acquire()
+        self.metrics.gauge_set("read_epoch_lag",
+                               self.store.version - snap.version)
         degraded = 0
         try:
             try:
                 srcs, dsts, probs, dropped = call_with_retry(
                     lambda: self._dispatch_topn(fn, snap),
                     policy=self.cfg.retry,
-                    on_retry=self._count_retry("dispatch_retries"))
+                    on_retry=self._count_retry("dispatch_retries"),
+                    metrics=self.metrics)
                 n_dropped = int(dropped)
                 self.health.record_success_all()
             except Exception as exc:
@@ -864,6 +980,8 @@ class ShardedEngine:
                 probs = jnp.zeros((n,), jnp.float32)
                 n_dropped = 0
                 degraded = n
+                self.metrics.incident("degraded_read", op="topn",
+                                      error=repr(exc))
         finally:
             self.store.release(snap)
         down = self.health.down
@@ -956,7 +1074,8 @@ class ShardedEngine:
         try:
             if sync:
                 path = snapshot_io.save_snapshot(
-                    snap.state, self.cfg.snapshot_dir, step, meta)
+                    snap.state, self.cfg.snapshot_dir, step, meta,
+                    metrics=self.metrics)
                 if gc is not None:
                     gc()
             else:
@@ -964,7 +1083,8 @@ class ShardedEngine:
                                     if t.is_alive()]
                 self._io_threads.append(snapshot_io.save_snapshot_async(
                     snap.state, self.cfg.snapshot_dir, step, meta,
-                    on_complete=gc, on_error=self._snapshot_io_error))
+                    on_complete=gc, on_error=self._snapshot_io_error,
+                    metrics=self.metrics))
                 path = snapshot_io.step_dir(self.cfg.snapshot_dir, step)
         finally:
             self.store.release(snap)
@@ -1027,7 +1147,8 @@ class ShardedEngine:
                             self._apply_locked, bsrc, bdst,
                             bw if bw is not None else np.ones_like(bsrc)),
                         policy=self.cfg.retry,
-                        on_retry=self._count_retry("apply_retries"))
+                        on_retry=self._count_retry("apply_retries"),
+                        metrics=self.metrics)
                     done += 1
             except Exception:
                 self.health.mark_down(shard)
@@ -1080,6 +1201,14 @@ class ShardedEngine:
         directory = self.cfg.snapshot_dir
         if not directory:
             raise ValueError("ShardedServeConfig.snapshot_dir not set")
+        # drain in-flight cadence/poison checkpoints first: the newest
+        # snapshot may still be committing on a worker thread (a poison's
+        # best-effort checkpoint-now races an immediate restore), and
+        # latest_complete_step must not scan past it
+        with self._write_lock:
+            pending, self._io_threads = self._io_threads, []
+        for t in pending:
+            t.join()
         if step is None:
             step = snapshot_io.latest_complete_step(directory)
             if step is None:
@@ -1114,12 +1243,13 @@ class ShardedEngine:
                 shardings = jax.tree_util.tree_map(
                     lambda _: NamedSharding(self.mesh, P(scfg.axis)), like)
                 state, _, _ = snapshot_io.restore_snapshot(
-                    like, directory, step, shardings)
+                    like, directory, step, shardings,
+                    metrics=self.metrics)
             else:
                 mode = "reshard"
                 like = self._stacked_like(base_old, n_old)
                 old_state, _, _ = snapshot_io.restore_snapshot(
-                    like, directory, step)
+                    like, directory, step, metrics=self.metrics)
                 state = self._reingest(old_state, scfg)
             # swap: readers must never pair the new routing with the old
             # snapshot (or vice versa), so rebind + publish are atomic

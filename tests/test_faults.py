@@ -476,6 +476,23 @@ def test_wal_append_enospc_poisons_write_path(tmp_path):
     eng.close()
 
 
+def test_restore_drains_inflight_poison_checkpoint(tmp_path):
+    """The poison path's best-effort checkpoint-now commits on a worker
+    thread; an immediate restore() must join it rather than scan the
+    snapshot directory past a still-committing step."""
+    eng = _engine(str(tmp_path))
+    eng.observe(*_batch(0))
+    faults.arm("wal.append.write", OSError(errno.ENOSPC, "disk full"))
+    faults.arm("snapshot.io_thread", 0.3)      # slow the worker's commit
+    with pytest.raises(EngineWriteUnavailable):
+        eng.observe(*_batch(1))
+    faults.reset()                             # worker already mid-sleep
+    eng.restore()                              # must join, not FileNotFound
+    assert eng.write_available
+    eng.observe(*_batch(2))
+    eng.close()
+
+
 def test_wal_transient_fault_is_retried_with_counters(tmp_path):
     """One EIO flake on the append write: the ladder absorbs it — same
     seq, batch applied once, wal_retries counts the backoff round."""

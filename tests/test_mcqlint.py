@@ -34,6 +34,7 @@ RULE_TO_FIXTURE = {
     "MCQ-F401": "fixture_f401.py",
     "MCQ-E741": "fixture_e741.py",
     "MCQ-R001": "fixture_r001.py",
+    "MCQ-M001": "fixture_m001.py",
 }
 
 

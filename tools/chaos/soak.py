@@ -138,12 +138,26 @@ def worker_main(args) -> None:
 
 def _spawn_worker(workdir: str, rows: int, batch: int, seed: int,
                   snapshot_every: int, kill_site: Optional[str],
-                  kill_hit: int) -> subprocess.Popen:
+                  kill_hit: int, telemetry: bool = False,
+                  poison: bool = False) -> subprocess.Popen:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(REPO, "src"), REPO, env.get("PYTHONPATH", "")])
+    if telemetry:
+        # arm the obs gate in the worker (spans, histograms, incidents) and
+        # point the flight recorder's incident dumps at the workdir
+        env["MCQ_METRICS"] = "1"
+        env["MCQ_METRICS_INCIDENT_DIR"] = os.path.join(workdir, "incidents")
+    else:
+        env.pop("MCQ_METRICS", None)
+        env.pop("MCQ_METRICS_INCIDENT_DIR", None)
     if kill_site is not None:
-        env["MCQ_FAILPOINTS"] = f"{kill_site}=kill@nth:{kill_hit}"
+        # a poison life raises ENOSPC (persistent) instead of SIGKILLing:
+        # the write path poisons, dumps a flight-recorder incident, and the
+        # worker dies on the escalation — a diagnosable death, not a silent
+        # one, exercising the incident pipeline under real load
+        action = "raise:28" if poison else "kill"
+        env["MCQ_FAILPOINTS"] = f"{kill_site}={action}@nth:{kill_hit}"
     else:
         env.pop("MCQ_FAILPOINTS", None)
     return subprocess.Popen(
@@ -246,16 +260,49 @@ def _verify_recovery(workdir: str, rows: int, batch: int, seed: int):
     return recovery_s, durable, info["replayed"], mismatches
 
 
+def _check_incidents(directory: str):
+    """Every incident dump a poisoned worker left behind must parse and
+    carry the flight-recorder payload (spans + metric deltas); returns
+    ``(ok, message, count)``."""
+    files = sorted(f for f in (os.listdir(directory)
+                               if os.path.isdir(directory) else [])
+                   if f.endswith(".json"))
+    if not files:
+        return False, "poison lives ran but no incident dump landed", 0
+    bad = []
+    for name in files:
+        try:
+            with open(os.path.join(directory, name)) as f:
+                doc = json.load(f)
+            if doc.get("schema") != "mcq-incident-v1":
+                bad.append(f"{name}: wrong schema")
+            elif not doc.get("spans"):
+                bad.append(f"{name}: no spans")
+            elif "deltas" not in doc or "reason" not in doc:
+                bad.append(f"{name}: missing deltas/reason")
+        except (OSError, json.JSONDecodeError) as e:
+            bad.append(f"{name}: unparseable ({e})")
+    if bad:
+        return False, "; ".join(bad), len(files)
+    return True, (f"{len(files)} incident dump(s), all parseable with "
+                  f"spans + deltas"), len(files)
+
+
 def run_soak(kills: int, *, rows: int = 256, batch: int = 128, seed: int = 0,
              snapshot_every: int = 5, min_steps: int = 3,
-             max_steps: int = 12, workdir: Optional[str] = None) -> dict:
+             max_steps: int = 12, workdir: Optional[str] = None,
+             telemetry: bool = False) -> dict:
     """Run the kill/recover/verify loop; returns BENCH-shaped rows plus an
-    ok flag (every life recovered bit-exactly)."""
+    ok flag (every life recovered bit-exactly).  ``telemetry=True`` arms
+    the obs gate in every worker and turns ``wal.append.write`` lives into
+    poison-raise lives, so the soak also proves a killed-under-load run
+    leaves a parseable flight-recorder incident dump behind."""
     owns_dir = workdir is None
     workdir = workdir or tempfile.mkdtemp(prefix="mcq-chaos-")
     rng = np.random.default_rng(seed)
     rows_out, all_ok = [], True
     recoveries = []
+    n_poison = 0
     try:
         for k in range(kills):
             site = KILL_MODES[k % len(KILL_MODES)]
@@ -263,8 +310,11 @@ def run_soak(kills: int, *, rows: int = 256, batch: int = 128, seed: int = 0,
             kill_after = int(rng.integers(min_steps, max_steps + 1))
             if site is not None:
                 kill_after = MAX_STEPS_PER_LIFE   # fallback external kill
+            poison = telemetry and site == "wal.append.write"
+            n_poison += int(poison)
             proc = _spawn_worker(workdir, rows, batch, seed,
-                                 snapshot_every, site, kill_hit)
+                                 snapshot_every, site, kill_hit,
+                                 telemetry=telemetry, poison=poison)
             life = _run_life(proc, kill_after)
             t_rec, durable, replayed, bad = _verify_recovery(
                 workdir, rows, batch, seed)
@@ -286,6 +336,17 @@ def run_soak(kills: int, *, rows: int = 256, batch: int = 128, seed: int = 0,
                   f"{'ok' if ok else 'DIVERGED'}", flush=True)
             if not ok:
                 break   # state is wrong: every later life would be too
+        if telemetry and n_poison:
+            inc_ok, inc_msg, n_inc = _check_incidents(
+                os.path.join(workdir, "incidents"))
+            all_ok &= inc_ok
+            rows_out.append({
+                "name": "B9_telemetry_incidents",
+                "us_per_call": 0.0,
+                "derived": inc_msg,
+                "incidents": n_inc, "parseable": inc_ok,
+            })
+            print(f"incidents: {inc_msg}", flush=True)
         if recoveries:
             rows_out.append({
                 "name": "B9_recovery_summary",
@@ -342,6 +403,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                                                   "BENCH_faults.json"),
                     help="BENCH JSON path ('' to skip writing)")
     ap.add_argument("--junit", default=None, metavar="FILE")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="arm the obs gate in every worker and verify "
+                         "poisoned lives leave parseable flight-recorder "
+                         "incident dumps (DESIGN.md §13)")
     ap.add_argument("--worker", action="store_true",
                     help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
@@ -354,7 +419,7 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     result = run_soak(args.kills, rows=args.rows, batch=args.batch,
                       seed=args.seed, snapshot_every=args.snapshot_every,
-                      workdir=args.dir)
+                      workdir=args.dir, telemetry=args.telemetry)
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"bench": "faults", "rows": result["rows"]}, f,

@@ -115,6 +115,17 @@ CATALOG: Tuple[Invariant, ...] = (
         rules=("MCQ-R001",),
     ),
     Invariant(
+        id="I11", key="I-metric",
+        statement=(
+            "The metric-name surface is closed: every recorder call "
+            "(counter_add/gauge_set/hist_record/vector_add/span) uses a "
+            "literal name declared in METRIC_CATALOG, and every catalog "
+            "entry is recorded or referenced somewhere in src — no "
+            "untyped series, no flatlined dashboard entries."),
+        assumptions=("A16",),
+        rules=("MCQ-M001",),
+    ),
+    Invariant(
         id="I9", key="I-hygiene",
         statement=(
             "Tree hygiene mcqlint absorbs from ruff (uninstallable "

@@ -69,10 +69,11 @@ class Rule:
 
 
 def all_rules() -> List[Rule]:
-    from tools.mcqlint.rules import (counters, faults, locks, ordering,
-                                     parity, purity, ruffish)
+    from tools.mcqlint.rules import (counters, faults, locks, metrics,
+                                     ordering, parity, purity, ruffish)
     rules: List[Rule] = []
-    for mod in (locks, ordering, parity, counters, purity, ruffish, faults):
+    for mod in (locks, ordering, parity, counters, purity, ruffish, faults,
+                metrics):
         rules.extend(mod.RULES)
     ids = [r.id for r in rules]
     assert len(ids) == len(set(ids)), f"duplicate rule ids: {ids}"

@@ -1,0 +1,22 @@
+"""Seeded MCQ-M001 violations: a recorder call whose metric name is not
+declared in the module's METRIC_CATALOG, an orphan catalog entry nothing
+records or references, and a recorder called with a computed name."""
+
+METRIC_CATALOG = {
+    "demo.recorded": ("counter", "a declared metric with a call site"),
+    "demo.orphan": ("gauge", "an entry whose recorder was deleted"),
+}
+
+
+def counter_add(name, n=1):
+    pass
+
+
+def gauge_set(name, value):
+    pass
+
+
+def touch(suffix):
+    counter_add("demo.recorded")
+    counter_add("demo.unregistered")
+    gauge_set("demo." + suffix, 1.0)

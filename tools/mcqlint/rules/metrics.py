@@ -1,0 +1,161 @@
+"""I-metric rule: the metric-name surface is closed (invariant I11).
+
+Telemetry only stays trustworthy if the name space is a closed diagonal
+(the MCQ-R001 shape, applied to ``METRIC_CATALOG``): a recorder call with
+a name the catalog does not declare is a series that silently never shows
+up typed/documented on the exposition surface, and a catalog entry nothing
+records is a dashboard lying about coverage.  Statically, across the
+scanned tree:
+
+* every recorder call (``counter_add`` / ``gauge_set`` / ``hist_record`` /
+  ``vector_add`` / ``span``) passes a literal string name — a computed
+  name cannot be audited against the catalog,
+* every recorded name appears in a ``METRIC_CATALOG`` literal found in the
+  scanned tree (an undeclared name has no HELP/TYPE metadata and no
+  schema),
+* every catalog entry is referenced somewhere outside the catalog itself —
+  as a recorder call site or a string constant (counter names flow through
+  dict-key stats plumbing, not only direct calls),
+* catalog keys are literal strings mapping to ``(kind, help)`` pairs.
+
+Files under an ``obs/`` package are exempt from the call-site checks: the
+registry's own recorders forward caller-supplied (non-literal) names by
+construction.  Their string constants still count for the orphan check.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Set, Tuple
+
+from tools.mcqlint.core import Finding, Project, Rule
+
+#: registry methods whose first argument is a metric name
+RECORDERS = ("counter_add", "gauge_set", "hist_record", "vector_add",
+             "span")
+
+_OBS_SEG = os.sep + "obs" + os.sep
+
+
+def _catalog_entries(sf) -> Tuple[List[Tuple[str, ast.AST]], List[ast.AST],
+                                  Set[int]]:
+    """Literal entries of a module-level ``METRIC_CATALOG = {...}`` dict:
+    returns ``(named_keys, bad_nodes, member_node_ids)`` where ``bad_nodes``
+    are non-literal keys or malformed ``(kind, help)`` values and
+    ``member_node_ids`` covers every AST node inside the catalog literal
+    (so the orphan check can ignore the declaration itself)."""
+    named: List[Tuple[str, ast.AST]] = []
+    bad: List[ast.AST] = []
+    members: Set[int] = set()
+    for node in sf.tree.body:
+        # both plain and annotated assignment declare the catalog
+        if isinstance(node, ast.Assign):
+            targets = [t.id for t in node.targets
+                       if isinstance(t, ast.Name)]
+        elif (isinstance(node, ast.AnnAssign)
+                and isinstance(node.target, ast.Name)
+                and node.value is not None):
+            targets = [node.target.id]
+        else:
+            continue
+        if "METRIC_CATALOG" not in targets:
+            continue
+        if not isinstance(node.value, ast.Dict):
+            bad.append(node)
+            continue
+        members.update(id(sub) for sub in ast.walk(node.value))
+        for key, value in zip(node.value.keys, node.value.values):
+            if not (isinstance(key, ast.Constant)
+                    and isinstance(key.value, str)):
+                bad.append(key if key is not None else node)
+                continue
+            ok = (isinstance(value, ast.Tuple) and len(value.elts) == 2
+                  and all(isinstance(e, ast.Constant)
+                          and isinstance(e.value, str)
+                          for e in value.elts))
+            if not ok:
+                bad.append(value)
+                continue
+            named.append((key.value, key))
+    return named, bad, members
+
+
+def _recorder_call(node: ast.Call) -> bool:
+    fn = node.func
+    if isinstance(fn, ast.Name):
+        return fn.id in RECORDERS
+    if isinstance(fn, ast.Attribute):
+        return fn.attr in RECORDERS
+    return False
+
+
+class MetricCatalogClosure(Rule):
+    id = "MCQ-M001"
+    summary = ("every recorder call uses a literal name declared in "
+               "METRIC_CATALOG; every catalog entry is recorded or "
+               "referenced somewhere in the scanned tree")
+
+    def check(self, project: Project) -> List[Finding]:
+        out: List[Finding] = []
+        catalog: Dict[str, tuple] = {}
+        sites: Dict[str, List[tuple]] = {}
+        mentions: Set[str] = set()
+        for sf in project.files:
+            named, bad, members = _catalog_entries(sf)
+            for name, node in named:
+                catalog.setdefault(name, (sf, node))
+            for node in bad:
+                out.append(self.finding(
+                    sf, node,
+                    "METRIC_CATALOG entries must be literal "
+                    "'name': ('kind', 'help') pairs (the surface is "
+                    "audited statically)"))
+            exempt = _OBS_SEG in sf.path
+            for node in ast.walk(sf.tree):
+                if (isinstance(node, ast.Constant)
+                        and isinstance(node.value, str)
+                        and id(node) not in members):
+                    mentions.add(node.value)
+                if not (isinstance(node, ast.Call)
+                        and _recorder_call(node)):
+                    continue
+                literal = (node.args
+                           and isinstance(node.args[0], ast.Constant)
+                           and isinstance(node.args[0].value, str))
+                if literal:
+                    sites.setdefault(node.args[0].value,
+                                     []).append((sf, node))
+                elif not exempt:
+                    fn = node.func
+                    called = (fn.attr if isinstance(fn, ast.Attribute)
+                              else fn.id)
+                    out.append(self.finding(
+                        sf, node,
+                        f"{called}() metric name must be a literal "
+                        f"string (names are audited against "
+                        f"METRIC_CATALOG)"))
+        if not catalog and not sites:
+            return out   # tree has no metric surface at all
+
+        for name, hits in sorted(sites.items()):
+            if catalog and name not in catalog:
+                for sf, node in hits:
+                    if _OBS_SEG in sf.path:
+                        continue
+                    out.append(self.finding(
+                        sf, node,
+                        f"metric '{name}' is recorded but not declared "
+                        f"in METRIC_CATALOG (untyped: no HELP/TYPE, no "
+                        f"schema)"))
+        for name, (sf, node) in sorted(catalog.items()):
+            if name not in sites and name not in mentions:
+                out.append(self.finding(
+                    sf, node,
+                    f"METRIC_CATALOG entry '{name}' is never recorded "
+                    f"or referenced in the scanned tree (a dashboard "
+                    f"series that can only flatline)"))
+        return out
+
+
+RULES = [MetricCatalogClosure()]
